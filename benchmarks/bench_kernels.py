@@ -1,0 +1,70 @@
+"""Kernel micro-bench: us/call of the jnp reference path (the CPU-measurable
+proxy) at test shapes, plus the Pallas kernels in interpret mode for
+correctness-cost visibility. TPU-compiled timings are the deploy target;
+documented in EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _timeit(fn, *args, n=20, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quiet=False) -> Dict:
+    ks = jax.random.split(jax.random.key(0), 8)
+    rows = []
+
+    B, S, H, K, hd = 2, 512, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    rows.append({"name": "flash_attention_jnp",
+                 "us_per_call": _timeit(ops.flash_attention, q, k, v,
+                                        backend="jnp")})
+
+    qd = jax.random.normal(ks[3], (8, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[4], (8, 1024, K, hd), jnp.float32)
+    vc = jax.random.normal(ks[5], (8, 1024, K, hd), jnp.float32)
+    sl = jnp.full((8,), 900, jnp.int32)
+    rows.append({"name": "decode_attention_jnp",
+                 "us_per_call": _timeit(ops.decode_attention, qd, kc, vc, sl,
+                                        backend="jnp")})
+
+    la = -jnp.abs(jax.random.normal(ks[6], (4, 512, 256))) * 0.3
+    bx = jax.random.normal(ks[7], (4, 512, 256))
+    h0 = jnp.zeros((4, 256))
+    rows.append({"name": "rglru_jnp",
+                 "us_per_call": _timeit(ops.rglru, la, bx, h0, backend="jnp")})
+
+    r = jax.random.normal(ks[0], (2, 256, 4, 64))
+    kk = jax.random.normal(ks[1], (2, 256, 4, 64)) * 0.3
+    vv = jax.random.normal(ks[2], (2, 256, 4, 64))
+    w = jnp.exp(-jnp.exp(jnp.clip(jax.random.normal(ks[3], (2, 256, 4, 64)),
+                                  -8, 0.7)))
+    u = jax.random.normal(ks[4], (4, 64)) * 0.2
+    st = jnp.zeros((2, 4, 64, 64))
+    rows.append({"name": "wkv6_jnp",
+                 "us_per_call": _timeit(ops.wkv6, r, kk, vv, w, u, st,
+                                        backend="jnp")})
+
+    for row in rows:
+        row["us_per_call"] = round(row["us_per_call"], 1)
+        if not quiet:
+            print(f"[kernels] {row['name']:24s} {row['us_per_call']:>10.1f} us")
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

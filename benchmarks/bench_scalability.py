@@ -1,0 +1,49 @@
+"""Paper Figure 8: overall execution time and average waiting time as the
+number of concurrent agents grows (paper: 250 -> 2000 on a GPU; here scaled to
+the CPU host, same linearity claim)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import (DirectRuntime, make_aios_kernel, run_agents,
+                               task_suite, warmup)
+from repro.agents.frameworks import ReActAgent
+
+
+def run(agent_counts: List[int] = (8, 16, 32, 64), quiet=False) -> Dict:
+    rows = []
+    for n in agent_counts:
+        tasks = task_suite(n)
+        specs = [(ReActAgent, f"ag{i}", tasks[i]) for i in range(n)]
+        row = {"agents": n}
+        for mode in ("none", "aios"):
+            if mode == "none":
+                rt = DirectRuntime()
+                warmup(rt)
+                rt.latencies.clear(); rt.completed = 0; rt.failed_loads = 0
+                out = run_agents(rt, specs)
+                m = rt.metrics()
+            else:
+                k = make_aios_kernel(scheduler="batched", quantum=32,
+                                     max_slots=8)
+                with k:
+                    warmup(k)
+                    k.scheduler.completed.clear()
+                    out = run_agents(k, specs)
+                m = k.metrics()
+            row[f"{mode}_seconds"] = round(out["seconds"], 2)
+            row[f"{mode}_avg_wait_s"] = round(m["avg_wait"], 4)
+        rows.append(row)
+        if not quiet:
+            print(f"[scalability] n={n}: none {row['none_seconds']}s "
+                  f"(wait {row['none_avg_wait_s']}s) | aios "
+                  f"{row['aios_seconds']}s (wait {row['aios_avg_wait_s']}s)")
+    # linearity check: time per agent roughly constant for aios
+    times = [r["aios_seconds"] / r["agents"] for r in rows]
+    rows.append({"aios_linearity_ratio_last_over_first":
+                 round(times[-1] / times[0], 2)})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

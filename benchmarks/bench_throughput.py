@@ -1,0 +1,62 @@
+"""Paper Figures 6/7 (+10-15): throughput (syscalls/s) and latency (mean agent
+wait) per agent framework, without AIOS vs with AIOS.
+
+Three serving modes:
+  none          -- paper's baseline: direct access, trial-and-error loading
+  aios-rr       -- paper-faithful: RR scheduler, admission control, exclusive core
+  aios-batched  -- beyond-paper: token-level continuous batching
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from benchmarks.common import (DirectRuntime, make_aios_kernel, run_agents,
+                               task_suite, warmup)
+from repro.agents.frameworks import FRAMEWORKS
+
+
+def run(agents_per_framework: int = 6, frameworks=None, quiet=False) -> Dict:
+    frameworks = frameworks or list(FRAMEWORKS)
+    tasks = task_suite(agents_per_framework)
+    rows = []
+    for fw in frameworks:
+        cls = FRAMEWORKS[fw]
+        specs = [(cls, f"{fw}-{i}", tasks[i % len(tasks)])
+                 for i in range(agents_per_framework)]
+        row = {"framework": fw}
+        for mode in ("none", "aios-rr", "aios-batched"):
+            if mode == "none":
+                rt = DirectRuntime()
+                warmup(rt)
+                rt.latencies.clear(); rt.completed = 0; rt.failed_loads = 0
+                out = run_agents(rt, specs)
+                m = rt.metrics()
+            else:
+                sched = "rr" if mode == "aios-rr" else "batched"
+                k = make_aios_kernel(scheduler=sched, quantum=16)
+                with k:
+                    warmup(k)
+                    k.scheduler.completed.clear()
+                    out = run_agents(k, specs)
+                m = k.metrics()
+            thru = m["completed"] / out["seconds"]
+            row[f"{mode}_syscalls_per_s"] = round(thru, 2)
+            row[f"{mode}_avg_wait_s"] = round(m["avg_wait"], 4)
+            row[f"{mode}_seconds"] = round(out["seconds"], 2)
+        row["speedup_rr_vs_none"] = round(
+            row["none_seconds"] / row["aios-rr_seconds"], 2)
+        row["speedup_batched_vs_none"] = round(
+            row["none_seconds"] / row["aios-batched_seconds"], 2)
+        rows.append(row)
+        if not quiet:
+            print(f"[throughput] {fw}: none {row['none_seconds']}s, "
+                  f"rr {row['aios-rr_seconds']}s "
+                  f"({row['speedup_rr_vs_none']}x), "
+                  f"batched {row['aios-batched_seconds']}s "
+                  f"({row['speedup_batched_vs_none']}x)")
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,199 @@
+"""Shared benchmark machinery.
+
+DirectRuntime = the paper's "without AIOS" baseline, reproduced honestly:
+  * LLM: no admission control -- concurrent agents speculatively load prompts
+    (a real prefill is burned on every failed attempt, like a CUDA OOM) and
+    retry with backoff; the single LLM instance serves one prompt at a time;
+  * tools: direct calls with NO parameter validation and NO conflict
+    hashmap (concurrent entry into non-reentrant tools corrupts);
+  * memory/storage: same managers (not the differentiator).
+
+Both runtimes expose send_request(agent, query), so the *same* agent-framework
+classes run on either (the adapter pattern of paper B.5).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.agents.tools_builtin import register_builtin_tools
+from repro.configs import get_config
+from repro.core import AIOSKernel
+from repro.core.memory import MemoryManager
+from repro.core.storage import StorageManager
+from repro.core.tools import ToolManager
+from repro.serving.engine import ServingEngine
+
+TINY = get_config("tiny")
+_SHARED_PARAMS: Dict[int, Any] = {}
+
+
+def shared_params(seed: int = 0):
+    """One weight set reused by every engine in the benchmark process."""
+    if seed not in _SHARED_PARAMS:
+        eng = ServingEngine(TINY, max_slots=1, max_len=64, rng_seed=seed)
+        _SHARED_PARAMS[seed] = eng.params
+    return _SHARED_PARAMS[seed]
+
+
+class _PoolShim:
+    def __init__(self, engine):
+        class _C:  # minimal .cores[0].engine.cfg surface for BaseAgent
+            pass
+        c = _C()
+        c.engine = engine
+        self.cores = [c]
+
+
+class DirectRuntime:
+    """The 'without AIOS' baseline runtime."""
+
+    def __init__(self, *, max_len: int = 256, backoff_s: float = 0.004,
+                 root_dir: Optional[str] = None, rng_seed: int = 0):
+        self.engine = ServingEngine(TINY, max_slots=1, max_len=max_len,
+                                    rng_seed=rng_seed, params=shared_params())
+        self.backoff = backoff_s
+        self._dev_lock = threading.Lock()   # the device: one op at a time
+        import tempfile
+        self.storage = StorageManager(root_dir or tempfile.mkdtemp(prefix="noaios-"))
+        self.memory = MemoryManager(self.storage)
+        self.tools = register_builtin_tools(ToolManager())
+        self.pool = _PoolShim(self.engine)
+        self.latencies: List[float] = []
+        self.completed = 0
+        self.failed_loads = 0
+        self._metric_lock = threading.Lock()
+
+    # -- llm: trial-and-error loading + serialized generation ------------------
+    def _generate(self, prompt, max_new) -> List[int]:
+        while True:
+            with self._dev_lock:
+                try:
+                    slot = self.engine.add_sequence(np.asarray(prompt, np.int32),
+                                                    max_new=max_new)
+                    break
+                except RuntimeError:
+                    # speculative load fails only after burning the work
+                    self.engine.probe_failed_load(np.asarray(prompt, np.int32))
+                    with self._metric_lock:
+                        self.failed_loads += 1
+            time.sleep(self.backoff)
+        while True:
+            with self._dev_lock:
+                if self.engine.is_done(slot):
+                    out = self.engine.result(slot)
+                    self.engine.free(slot)
+                    return out
+                self.engine.step()
+
+    # -- unified transport -------------------------------------------------------
+    def send_request(self, agent_name: str, query) -> Dict[str, Any]:
+        t0 = time.monotonic()
+        try:
+            qc = query.query_class
+            if qc == "llm":
+                toks = self._generate(query.prompt, query.max_new_tokens)
+                return {"tokens": toks, "finished": True}
+            if qc == "memory":
+                sc = query.to_syscall(agent_name)
+                return self.memory.execute_memory_syscall(sc)
+            if qc == "storage":
+                sc = query.to_syscall(agent_name)
+                return self.storage.execute_storage_syscall(sc)
+            if qc == "tool":
+                # direct, unvalidated, unserialized call (no kernel machinery)
+                tool = self.tools.load_tool_instance(query.tool_name)
+                try:
+                    return {"success": True, "result": tool.run(**query.params)}
+                except Exception as e:  # noqa: BLE001
+                    return {"success": False, "error": str(e)}
+            raise KeyError(qc)
+        finally:
+            with self._metric_lock:
+                self.latencies.append(time.monotonic() - t0)
+                self.completed += 1
+
+    def metrics(self) -> Dict[str, float]:
+        lat = sorted(self.latencies)
+        n = len(lat)
+        return {"completed": n,
+                "avg_wait": sum(lat) / n if n else 0.0,
+                "p90_wait": lat[int(0.9 * (n - 1))] if n else 0.0,
+                "failed_loads": self.failed_loads}
+
+
+def make_aios_kernel(scheduler="rr", quantum=16, max_slots=8, max_len=256,
+                     num_cores=1) -> AIOSKernel:
+    k = AIOSKernel(arch="tiny", scheduler=scheduler, quantum=quantum,
+                   num_cores=num_cores, shared_params=shared_params(),
+                   engine_kw={"max_slots": max_slots, "max_len": max_len})
+    register_builtin_tools(k.tools)
+    return k
+
+
+def run_agents(runtime, agent_specs, *, join_timeout=600) -> Dict[str, Any]:
+    """agent_specs: list of (AgentClass, name, task). Runs all concurrently
+    (each agent on its own thread = the paper's workload), returns results +
+    wall time."""
+    results: List[Optional[dict]] = [None] * len(agent_specs)
+
+    def one(i, cls, name, task):
+        agent = cls(runtime, name, max_new_tokens=12)
+        try:
+            results[i] = agent.run(task)
+        except Exception as e:  # noqa: BLE001
+            results[i] = {"success": False, "error": str(e)}
+
+    threads = [threading.Thread(target=one, args=(i, c, n, t), daemon=True)
+               for i, (c, n, t) in enumerate(agent_specs)]
+    t0 = time.time()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=join_timeout)
+    dt = time.time() - t0
+    return {"results": results, "seconds": dt}
+
+
+def warmup(runtime):
+    """Compile/jit + tool-load warmup so timed sections measure steady state."""
+    from repro.agents.frameworks import ReActAgent
+    agent = ReActAgent(runtime, "warmup", max_new_tokens=4)
+    agent.run({"kind": "math", "expression": "1+1", "expected": 2.0})
+    agent.run({"kind": "retrieve", "facts": ["a b c"], "query": "a",
+               "needle_id": 0})
+
+
+def task_suite(n: int, seed: int = 0, corrupt_frac: float = 0.0) -> List[dict]:
+    """Deterministic mixed workload (math/convert/retrieve/code). With
+    corrupt_frac > 0, that fraction of math/convert tasks carries wrong-typed
+    tool params (int payloads where the schema wants str/float) -- the AIOS
+    coercion+validation machinery repairs them; direct calls crash."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        kind = ("math", "convert", "retrieve", "code")[i % 4]
+        if kind == "math":
+            a, b, c = rng.integers(1, 20, 3)
+            if rng.random() < corrupt_frac:
+                out.append({"kind": "math", "expression": int(a),   # int, not str
+                            "expected": float(a)})
+            else:
+                out.append({"kind": "math", "expression": f"({a}+{b})*{c}",
+                            "expected": float((a + b) * c)})
+        elif kind == "convert":
+            amt = int(rng.integers(10, 500))
+            out.append({"kind": "convert", "amount": amt, "src": "USD",
+                        "dst": "EUR", "expected": amt * 0.92})
+        elif kind == "retrieve":
+            out.append({"kind": "retrieve",
+                        "facts": ["the sky is blue", "paris is in france",
+                                  "jax compiles with xla"],
+                        "query": "what does jax compile with", "needle_id": 2})
+        else:
+            out.append({"kind": "code", "spec": f"solve_{i}",
+                        "required": ["def ", "return"]})
+    return out

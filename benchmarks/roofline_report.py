@@ -1,0 +1,100 @@
+"""Aggregate the dry-run JSONs into the §Dry-run / §Roofline markdown tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report \
+      --dir experiments/dryrun --mesh 16x16
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def load(dir_: str, mesh: str) -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        d = json.load(open(f))
+        if d.get("mesh") not in (mesh, None) and "skip" not in d:
+            continue
+        if "_hc" in os.path.basename(f) or "tag" in os.path.basename(f):
+            continue
+        d["_file"] = os.path.basename(f)
+        rows.append(d)
+    rows.sort(key=lambda d: (d.get("arch", ""),
+                             SHAPE_ORDER.get(d.get("shape", ""), 9)))
+    return rows
+
+
+def fmt_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | kind | compute (ms) | memory (ms) | "
+           "collective (ms) | dominant | bound (ms) | useful | HBM/dev (GB) |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for d in rows:
+        if "skip" in d:
+            lines.append(f"| {d.get('arch','?')} | {d.get('shape','?')} | — | "
+                         f"SKIP | — | — | — | — | — | — |")
+            continue
+        if "error" in d:
+            lines.append(f"| {d['arch']} | {d['shape']} | {d.get('kind','?')} |"
+                         f" ERROR | — | — | — | — | — | — |")
+            continue
+        r = d["roofline"]
+        mem_gb = (d["memory"]["argument_size_in_bytes"] +
+                  d["memory"]["temp_size_in_bytes"] -
+                  d["memory"]["alias_size_in_bytes"]) / 1e9
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['kind']} | "
+            f"{r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} | "
+            f"{r['collective_s']*1e3:.1f} | {r['dominant']} | "
+            f"{r['bound_s']*1e3:.1f} | {d['useful_compute_ratio']:.2f} | "
+            f"{mem_gb:.1f} |")
+    return "\n".join(lines)
+
+
+def interesting_cells(rows: List[Dict]) -> Dict[str, str]:
+    """The hillclimb picks: worst roofline fraction (compute_s / bound_s),
+    most collective-bound, most decode-representative."""
+    live = [d for d in rows if "roofline" in d]
+    frac = lambda d: d["roofline"]["compute_s"] / max(d["roofline"]["bound_s"],
+                                                      1e-12)
+    worst = min(live, key=frac)
+    coll = max(live, key=lambda d: d["roofline"]["collective_s"] /
+               max(d["roofline"]["bound_s"], 1e-12) *
+               (d["roofline"]["dominant"] == "collective"))
+    decodes = [d for d in live if d["kind"] == "decode" and
+               d["global_batch"] > 1]
+    rep = max(decodes, key=lambda d: d["roofline"]["bound_s"]) if decodes \
+        else worst
+    pick = {
+        "worst_roofline_fraction": f"{worst['arch']}/{worst['shape']}",
+        "most_collective_bound": f"{coll['arch']}/{coll['shape']}",
+        "paper_representative_decode": f"{rep['arch']}/{rep['shape']}",
+    }
+    return pick
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args(argv)
+    rows = load(args.dir, args.mesh)
+    print(fmt_table(rows))
+    print()
+    ok = [d for d in rows if "roofline" in d]
+    if ok:
+        print("hillclimb candidates:", json.dumps(interesting_cells(rows),
+                                                  indent=1))
+        n_err = sum(1 for d in rows if "error" in d)
+        n_skip = sum(1 for d in rows if "skip" in d)
+        print(f"cells: {len(ok)} compiled, {n_skip} skipped, {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

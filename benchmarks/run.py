@@ -1,0 +1,85 @@
+"""Benchmark runner: one module per paper table/figure. Prints a
+``name,us_per_call,derived`` CSV summary plus per-bench detail lines.
+
+  PYTHONPATH=src python -m benchmarks.run            (full suite)
+  PYTHONPATH=src python -m benchmarks.run --quick    (reduced sizes)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    from benchmarks import (bench_agent_success, bench_context_switch,
+                            bench_kernels, bench_scalability,
+                            bench_scheduling, bench_throughput)
+
+    suite = [
+        ("kernels(us/call)", bench_kernels.run, {}),
+        ("context_switch(T7)", bench_context_switch.run, {}),
+        ("scheduling(T6)", bench_scheduling.run,
+         {"n_agents": 8 if args.quick else 16}),
+        ("throughput(F6/7)", bench_throughput.run,
+         {"agents_per_framework": 4 if args.quick else 6,
+          "frameworks": ["react", "reflexion"] if args.quick else None}),
+        ("scalability(F8)", bench_scalability.run,
+         {"agent_counts": [4, 8] if args.quick else [8, 16, 32, 64]}),
+        ("agent_success(T1)", bench_agent_success.run, {}),
+    ]
+
+    csv_lines = ["name,us_per_call,derived"]
+    for name, fn, kw in suite:
+        t0 = time.time()
+        out = fn(**kw)
+        dt = time.time() - t0
+        us = dt / max(len(out.get("rows", [1])), 1) * 1e6
+        derived = _derive(name, out)
+        csv_lines.append(f"{name},{us:.0f},{derived}")
+        with open(os.path.join(args.out,
+                               name.split("(")[0] + ".json"), "w") as f:
+            json.dump(out, f, indent=1)
+    print("\n".join(csv_lines))
+
+
+def _derive(name: str, out: dict) -> str:
+    rows = out.get("rows", [])
+    if name.startswith("kernels"):
+        return "|".join(f"{r['name']}={r['us_per_call']}" for r in rows)
+    if name.startswith("context_switch"):
+        ok = all(r["exact_match"] == 1.0 for r in rows)
+        return f"exact_match_all={'1.0' if ok else 'FAIL'}"
+    if name.startswith("scheduling"):
+        d = {r["strategy"]: r for r in rows}
+        return (f"none={d['none']['overall_seconds']}s;"
+                f"fifo={d['fifo']['overall_seconds']}s;"
+                f"rr={d['rr']['overall_seconds']}s;"
+                f"batched={d['batched']['overall_seconds']}s")
+    if name.startswith("throughput"):
+        sp = [r["speedup_batched_vs_none"] for r in rows]
+        sp_rr = [r["speedup_rr_vs_none"] for r in rows]
+        return (f"max_speedup_rr={max(sp_rr):.2f}x;"
+                f"max_speedup_batched={max(sp):.2f}x")
+    if name.startswith("scalability"):
+        lin = rows[-1].get("aios_linearity_ratio_last_over_first")
+        return f"aios_linearity={lin}"
+    if name.startswith("agent_success"):
+        return "|".join(f"{r['framework']}:{r['none_sr']}->{r['aios_sr']}"
+                        for r in rows)
+    return ""
+
+
+if __name__ == "__main__":
+    main()

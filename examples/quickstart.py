@@ -1,0 +1,46 @@
+"""Quickstart: boot the AIOS kernel, register tools, run one agent.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.agents import FRAMEWORKS, register_builtin_tools  # noqa: E402
+from repro.core import AIOSKernel  # noqa: E402
+from repro.sdk import api  # noqa: E402
+
+
+def main():
+    # 1. boot the kernel: RR scheduler, 16-token quantum, one LLM core
+    kernel = AIOSKernel(arch="tiny", scheduler="rr", quantum=16,
+                        engine_kw={"max_slots": 4, "max_len": 256})
+    register_builtin_tools(kernel.tools)
+
+    with kernel:
+        # 2. raw SDK calls -- each becomes a syscall through the scheduler
+        resp = api.llm_chat(kernel, "demo", prompt=[5, 4, 3, 2, 1],
+                            max_new_tokens=8)
+        print("llm_chat tokens:", resp["tokens"])
+
+        api.create_memory(kernel, "demo", "the AIOS kernel schedules syscalls")
+        hits = api.search_memories(kernel, "demo", "what schedules syscalls")
+        print("memory hit:", hits["search_results"][0]["content"])
+
+        calc = api.call_tool(kernel, "demo", "calculator",
+                             {"expression": "(20-2)/3"})
+        print("calculator:", calc["result"])
+
+        # 3. a full ReAct agent on top of the SDK
+        agent = FRAMEWORKS["react"](kernel, "react-demo")
+        result = agent.run({"kind": "math", "expression": "(7+5)*3",
+                            "expected": 36.0})
+        print("ReAct agent success:", result["success"])
+
+        print("kernel metrics:", {k: v for k, v in kernel.metrics().items()
+                                  if k in ("completed", "avg_wait")})
+
+
+if __name__ == "__main__":
+    main()

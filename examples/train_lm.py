@@ -1,0 +1,41 @@
+"""Train a small LM with the full training substrate (sharded train step,
+checkpointing, straggler watchdog) -- kill and re-run to see elastic resume.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 60
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config  # noqa: E402
+from repro.training import TrainConfig, Trainer  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/aios-train-ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tc = TrainConfig(global_batch=args.batch, seq_len=args.seq,
+                     steps=args.steps, accum=args.accum, lr=5e-3, warmup=10,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=20, log_every=5)
+    tr = Trainer(cfg, tc)
+    resumed = tr.maybe_resume()
+    if resumed:
+        print(f"(resumed from step {resumed})")
+    out = tr.run()
+    print(f"trained {out['steps']} steps in {out['seconds']:.1f}s: "
+          f"loss {out['first_loss']:.3f} -> {out['last_loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.agents.base import BaseAgent, add_framework_adapter, FRAMEWORK_ADAPTERS  # noqa: F401
+from repro.agents.frameworks import FRAMEWORKS  # noqa: F401
+from repro.agents.tools_builtin import register_builtin_tools  # noqa: F401

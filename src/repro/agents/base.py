@@ -1,0 +1,60 @@
+"""Application-layer agent base + framework adapter registry (paper §3.9,
+Appendix B.5): agents only touch kernel resources through SDK calls."""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+from repro.sdk import api
+from repro.sdk.tokenizer import ToyTokenizer
+
+FRAMEWORK_ADAPTERS: Dict[str, Callable] = {}
+
+
+def add_framework_adapter(name: str):
+    """Paper B.5's @add_framework_adapter: registers the glue that redirects a
+    framework's LLM/tool entry points into AIOS SDK calls."""
+    def deco(fn):
+        FRAMEWORK_ADAPTERS[name] = fn
+        return fn
+    return deco
+
+
+class BaseAgent:
+    framework = "native"
+
+    def __init__(self, kernel, name: str, *, max_new_tokens: int = 24,
+                 tokenizer: Optional[ToyTokenizer] = None):
+        self.kernel = kernel
+        self.name = name
+        self.max_new_tokens = max_new_tokens
+        self.tok = tokenizer or ToyTokenizer(kernel.pool.cores[0].engine.cfg.vocab)
+        self.llm_calls = 0
+        self.tool_calls = 0
+
+    # -- SDK shortcuts -------------------------------------------------------------
+    def chat(self, text: str, *, max_new_tokens: Optional[int] = None) -> Dict:
+        self.llm_calls += 1
+        return api.llm_chat(self.kernel, self.name, self.tok.encode(text),
+                            max_new_tokens=max_new_tokens or self.max_new_tokens)
+
+    def tool(self, tool_name: str, params: Dict[str, Any]) -> Dict:
+        self.tool_calls += 1
+        return api.call_tool(self.kernel, self.name, tool_name, params)
+
+    def remember(self, content: str, metadata=None) -> Dict:
+        return api.create_memory(self.kernel, self.name, content, metadata)
+
+    def recall(self, query: str, k: int = 3) -> Dict:
+        return api.search_memories(self.kernel, self.name, query, k)
+
+    def write(self, path: str, content: str) -> Dict:
+        return api.write_file(self.kernel, self.name, path, content)
+
+    def read(self, path: str) -> Dict:
+        return api.read_file(self.kernel, self.name, path)
+
+    # -- task entry ------------------------------------------------------------------
+    def run(self, task: Dict[str, Any]) -> Dict[str, Any]:
+        raise NotImplementedError

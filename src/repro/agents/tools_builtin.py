@@ -1,0 +1,117 @@
+"""Deterministic local tools registered with the tool manager (offline
+stand-ins for the paper's Table-5 tool suite)."""
+from __future__ import annotations
+
+import ast
+import math
+import operator
+import threading
+import time
+from typing import Any, Dict
+
+from repro.core.tools import Tool
+
+_OPS = {ast.Add: operator.add, ast.Sub: operator.sub, ast.Mult: operator.mul,
+        ast.Div: operator.truediv, ast.Pow: operator.pow,
+        ast.USub: operator.neg, ast.Mod: operator.mod}
+
+
+def _safe_eval(node):
+    if isinstance(node, ast.Expression):
+        return _safe_eval(node.body)
+    if isinstance(node, ast.Constant) and isinstance(node.value, (int, float)):
+        return node.value
+    if isinstance(node, ast.BinOp) and type(node.op) in _OPS:
+        return _OPS[type(node.op)](_safe_eval(node.left), _safe_eval(node.right))
+    if isinstance(node, ast.UnaryOp) and type(node.op) in _OPS:
+        return _OPS[type(node.op)](_safe_eval(node.operand))
+    raise ValueError(f"unsupported expression node: {type(node).__name__}")
+
+
+def calculator(expression: str) -> float:
+    """WolframAlpha stand-in: arithmetic evaluation."""
+    return float(_safe_eval(ast.parse(expression, mode="eval")))
+
+
+_RATES = {"USD": 1.0, "EUR": 0.92, "MXN": 18.1, "CAD": 1.36, "GBP": 0.79,
+          "JPY": 157.2}
+
+
+def currency_convert(amount: float, src: str, dst: str) -> float:
+    if src not in _RATES or dst not in _RATES:
+        raise KeyError(f"unknown currency {src}->{dst}")
+    return amount / _RATES[src] * _RATES[dst]
+
+
+_WIKI = {
+    "paris": "Paris is the capital of France, on the Seine.",
+    "tokyo": "Tokyo is the capital of Japan.",
+    "jax": "JAX is a numerical computing library with autodiff and XLA.",
+    "tpu": "A TPU is a tensor processing unit with a systolic MXU.",
+    "aios": "AIOS is an LLM agent operating system with a scheduling kernel.",
+}
+
+
+def wiki_lookup(query: str) -> str:
+    q = query.lower()
+    for key, text in _WIKI.items():
+        if key in q:
+            return text
+    return "no article found"
+
+
+_ARXIV = [
+    ("2403.16971", "AIOS: LLM Agent Operating System"),
+    ("2402.19427", "Griffin: Mixing Gated Linear Recurrences with Local Attention"),
+    ("2404.05892", "Eagle and Finch: RWKV with Matrix-Valued States"),
+    ("2306.05284", "Simple and Controllable Music Generation"),
+]
+
+
+def arxiv_search(query: str) -> list:
+    q = query.lower()
+    return [f"{aid}: {title}" for aid, title in _ARXIV
+            if any(w in title.lower() for w in q.split())] or ["no results"]
+
+
+class FlakyNonReentrantTool(Tool):
+    """A stateful instrument that corrupts on concurrent entry -- exercises the
+    paper's conflict-resolution hashmap (parallel_limit=1). Without the tool
+    manager serializing access, overlapping calls observe a dirty flag and
+    fail, exactly like a shared non-thread-safe resource."""
+    name = "shared_instrument"
+    schema = {"value": (int, True)}
+    parallel_limit = 1
+
+    def __init__(self):
+        super().__init__()
+        self._busy = False
+
+    def run(self, value: int):
+        if self._busy:
+            raise RuntimeError("instrument corrupted by concurrent access")
+        self._busy = True
+        try:
+            time.sleep(0.002)          # long enough that overlap is detected
+            return value * 2
+        finally:
+            self._busy = False
+
+
+def register_builtin_tools(tool_manager):
+    tm = tool_manager
+    tm.register("calculator", lambda: Tool(
+        "calculator", run_fn=calculator,
+        schema={"expression": (str, True)}, parallel_limit=8))
+    tm.register("currency_converter", lambda: Tool(
+        "currency_converter", run_fn=currency_convert,
+        schema={"amount": ((int, float), True), "src": (str, True),
+                "dst": (str, True)}, parallel_limit=8))
+    tm.register("wikipedia", lambda: Tool(
+        "wikipedia", run_fn=wiki_lookup,
+        schema={"query": (str, True)}, parallel_limit=8))
+    tm.register("arxiv", lambda: Tool(
+        "arxiv", run_fn=arxiv_search,
+        schema={"query": (str, True)}, parallel_limit=8))
+    tm.register("shared_instrument", FlakyNonReentrantTool)
+    return tm

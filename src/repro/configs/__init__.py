@@ -1,0 +1,48 @@
+"""Architecture config registry: ``get_config("granite-3-8b")`` etc.
+
+All 10 assigned architectures plus test/debug configs. Every module defines
+CONFIG (exact published scale), SMOKE (reduced same-family config) and SHAPES
+(the dry-run cells that apply).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+ARCH_IDS: List[str] = [
+    "granite_3_8b",
+    "yi_9b",
+    "nemotron_4_15b",
+    "yi_6b",
+    "musicgen_large",
+    "recurrentgemma_2b",
+    "arctic_480b",
+    "moonshot_v1_16b_a3b",
+    "rwkv6_1_6b",
+    "llama_3_2_vision_90b",
+]
+
+_ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS}
+_ALIAS.update({"tiny": "tiny", "tiny-moe": "tiny"})
+
+
+def canon(arch: str) -> str:
+    key = arch.replace(".", "-")
+    return _ALIAS.get(key, _ALIAS.get(arch, arch)).replace("-", "_").replace(".", "_")
+
+
+def get_module(arch: str):
+    return importlib.import_module(f"repro.configs.{canon(arch)}")
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = get_module(arch)
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def get_shapes(arch: str):
+    return get_module(arch).SHAPES
+
+
+def all_archs() -> List[str]:
+    return list(ARCH_IDS)

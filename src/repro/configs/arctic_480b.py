@@ -1,0 +1,21 @@
+"""arctic-480b [moe]: 35L d=7168 56H (GQA kv=8) expert d_ff=4864 vocab=32000,
+MoE 128 experts top-2 + dense residual MLP.
+[hf:Snowflake/snowflake-arctic-base; hf]"""
+from repro.configs.base import ModelConfig, lm_shapes
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    num_layers=35, d_model=7168, n_heads=56, n_kv_heads=8, head_dim=128,
+    d_ff=4864, vocab=32000, activation="swiglu",
+    num_experts=128, top_k=2, capacity_factor=1.25, dense_residual=True,
+    fsdp=True, train_accum=8,
+    infer_dropless=False,  # capacity-based at scale (DESIGN.md SS4)
+)
+
+SMOKE = CONFIG.replace(
+    infer_dropless=True,
+    name="arctic-480b-smoke", num_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=64, vocab=256, num_experts=8, top_k=2,
+    fsdp=False, remat_policy="none")
+
+SHAPES = lm_shapes(sub_quadratic=False)

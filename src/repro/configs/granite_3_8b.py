@@ -1,0 +1,15 @@
+"""granite-3-8b [dense]: 40L d=4096 32H (GQA kv=8) d_ff=12800 vocab=49155.
+[hf:ibm-granite/granite-3.0-2b-base scaled per assignment; hf]"""
+from repro.configs.base import ModelConfig, lm_shapes
+
+CONFIG = ModelConfig(
+    name="granite-3-8b", family="dense",
+    num_layers=40, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=12800, vocab=49155, activation="swiglu",
+)
+
+SMOKE = CONFIG.replace(
+    name="granite-3-8b-smoke", num_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, remat_policy="none")
+
+SHAPES = lm_shapes(sub_quadratic=False)

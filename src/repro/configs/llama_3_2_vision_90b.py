@@ -1,0 +1,19 @@
+"""llama-3.2-vision-90b [vlm]: 100L (80 self + 20 cross-attn) d=8192 64H
+(GQA kv=8) d_ff=28672 vocab=128256; vision frontend stubbed -- input_specs()
+provides precomputed patch embeddings.
+[hf:meta-llama/Llama-3.2-11B-Vision scaled per assignment; unverified]"""
+from repro.configs.base import ModelConfig, lm_shapes
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b", family="vlm",
+    num_layers=100, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab=128256, activation="swiglu",
+    cross_attn_every=5, num_frontend_tokens=1600, fsdp=True, train_accum=16,
+)
+
+SMOKE = CONFIG.replace(
+    name="llama-vision-smoke", num_layers=10, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, cross_attn_every=5,
+    num_frontend_tokens=16, fsdp=False, remat_policy="none")
+
+SHAPES = lm_shapes(sub_quadratic=False)

@@ -1,0 +1,20 @@
+"""moonshot-v1-16b-a3b [moe]: 48L d=2048 16H (kv=16, MHA) expert d_ff=1408
+vocab=163840, MoE 64 experts top-6 (kimi/moonlight).
+[hf:moonshotai/Moonlight-16B-A3B; hf]"""
+from repro.configs.base import ModelConfig, lm_shapes
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    num_layers=48, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=1408, vocab=163840, activation="swiglu",
+    num_experts=64, top_k=6, capacity_factor=1.25, dense_residual=False,
+    fsdp=True, infer_dropless=False,
+)
+
+SMOKE = CONFIG.replace(
+    infer_dropless=True,
+    name="moonshot-smoke", num_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    head_dim=16, d_ff=48, vocab=256, num_experts=8, top_k=2,
+    remat_policy="none")
+
+SHAPES = lm_shapes(sub_quadratic=False)

@@ -1,0 +1,16 @@
+"""musicgen-large [audio]: 48L d=2048 32H (kv=32, MHA) d_ff=8192 vocab=2048,
+decoder-only over EnCodec tokens; EnCodec frontend is a stub -- inputs are
+token ids in the audio-codebook vocabulary. [arXiv:2306.05284; hf]"""
+from repro.configs.base import ModelConfig, lm_shapes
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    num_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=8192, vocab=2048, activation="swiglu", rope_theta=10000.0,
+)
+
+SMOKE = CONFIG.replace(
+    name="musicgen-large-smoke", num_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, head_dim=16, d_ff=128, vocab=128, remat_policy="none")
+
+SHAPES = lm_shapes(sub_quadratic=False)

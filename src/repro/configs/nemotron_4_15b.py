@@ -1,0 +1,15 @@
+"""nemotron-4-15b [dense]: 32L d=6144 48H (GQA kv=8) d_ff=24576 vocab=256000,
+squared-ReLU MLP. [arXiv:2402.16819; unverified]"""
+from repro.configs.base import ModelConfig, lm_shapes
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b", family="dense",
+    num_layers=32, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=24576, vocab=256000, activation="squared_relu", rope_theta=10000.0,
+)
+
+SMOKE = CONFIG.replace(
+    name="nemotron-4-15b-smoke", num_layers=2, d_model=96, n_heads=6,
+    n_kv_heads=2, head_dim=16, d_ff=192, vocab=512, remat_policy="none")
+
+SHAPES = lm_shapes(sub_quadratic=False)

@@ -1,0 +1,19 @@
+"""recurrentgemma-2b [hybrid]: 26L d=2560 10H (MQA kv=1, head_dim 256)
+d_ff=7680 vocab=256000; RG-LRU + local attention (window 2048), pattern
+(rec, rec, attn). Sub-quadratic: runs long_500k. [arXiv:2402.19427; hf]"""
+from repro.configs.base import ModelConfig, lm_shapes
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    num_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab=256000, activation="geglu",
+    window=2048, lru_width=2560, conv_width=4, attn_every=3,
+    rope_theta=10000.0,
+)
+
+SMOKE = CONFIG.replace(
+    name="recurrentgemma-2b-smoke", num_layers=8, d_model=64, n_heads=2,
+    n_kv_heads=1, head_dim=32, d_ff=128, vocab=256, window=16, lru_width=64,
+    remat_policy="none")
+
+SHAPES = lm_shapes(sub_quadratic=True)

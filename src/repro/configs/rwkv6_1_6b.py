@@ -1,0 +1,16 @@
+"""rwkv6-1.6b "Finch" [ssm]: 24L d=2048 (attention-free) d_ff=7168
+vocab=65536; data-dependent decay. Sub-quadratic: runs long_500k.
+[arXiv:2404.05892; unverified]"""
+from repro.configs.base import ModelConfig, lm_shapes
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b", family="ssm",
+    num_layers=24, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=7168, vocab=65536, rwkv_head_dim=64,
+)
+
+SMOKE = CONFIG.replace(
+    name="rwkv6-smoke", num_layers=2, d_model=128, n_heads=2, n_kv_heads=2,
+    head_dim=64, d_ff=256, vocab=256, rwkv_head_dim=64, remat_policy="none")
+
+SHAPES = lm_shapes(sub_quadratic=True)

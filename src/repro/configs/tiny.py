@@ -1,0 +1,12 @@
+"""Tiny debug config used by the serving engine tests, examples and the
+CPU wall-clock benchmarks (real model, same code paths as the big archs)."""
+from repro.configs.base import ModelConfig, lm_shapes
+
+CONFIG = ModelConfig(
+    name="tiny", family="dense",
+    num_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512, activation="swiglu", remat_policy="none",
+)
+
+SMOKE = CONFIG
+SHAPES = lm_shapes(sub_quadratic=False)

@@ -1,0 +1,15 @@
+"""yi-9b [dense]: 48L d=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+[arXiv:2403.04652; hf]"""
+from repro.configs.base import ModelConfig, lm_shapes
+
+CONFIG = ModelConfig(
+    name="yi-9b", family="dense",
+    num_layers=48, d_model=4096, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=11008, vocab=64000, activation="swiglu", rope_theta=10000.0,
+)
+
+SMOKE = CONFIG.replace(
+    name="yi-9b-smoke", num_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    head_dim=16, d_ff=96, vocab=256, remat_policy="none")
+
+SHAPES = lm_shapes(sub_quadratic=False)

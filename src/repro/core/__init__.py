@@ -1,0 +1,4 @@
+from repro.core.kernel import AIOSKernel  # noqa: F401
+from repro.core.syscall import (  # noqa: F401
+    AccessSyscall, LLMSyscall, MemorySyscall, StorageSyscall, Syscall,
+    ToolSyscall)

@@ -1,0 +1,69 @@
+"""Access manager (paper §3.8, Appendix A.8): privilege-group access control
+for cross-agent resources + user-intervention gate for irreversible
+operations. Access syscalls execute inline (not scheduler-dispatched,
+paper Fig. 3).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Set
+
+IRREVERSIBLE_OPS = {"delete", "overwrite", "privilege_change", "remove_memory",
+                    "sto_rollback"}
+
+
+class AccessManager:
+    def __init__(self, intervention_cb: Optional[Callable[[str, str], bool]] = None):
+        # privilege group of a target agent: who may touch its resources
+        self._groups: Dict[str, Set[str]] = {}
+        self._lock = threading.Lock()
+        # default policy: require explicit approval (deny when no callback)
+        self._intervene = intervention_cb
+        self.audit_log: List[Dict[str, Any]] = []
+
+    def _log(self, **kw):
+        kw["time"] = time.time()
+        self.audit_log.append(kw)
+
+    # -- privilege groups --------------------------------------------------------------
+    def add_privilege(self, sid: str, tid: str):
+        """Admit agent `sid` into agent `tid`'s privilege group."""
+        with self._lock:
+            self._groups.setdefault(tid, set()).add(sid)
+        self._log(op="add_privilege", source=sid, target=tid)
+
+    def revoke_privilege(self, sid: str, tid: str):
+        with self._lock:
+            self._groups.get(tid, set()).discard(sid)
+        self._log(op="revoke_privilege", source=sid, target=tid)
+
+    def check_access(self, sid: str, tid: str) -> bool:
+        with self._lock:
+            ok = sid == tid or sid in self._groups.get(tid, set())
+        self._log(op="check_access", source=sid, target=tid, granted=ok)
+        return ok
+
+    # -- user intervention ---------------------------------------------------------------
+    def ask_permission(self, agent: str, operation: str) -> bool:
+        """Gate irreversible operations behind explicit confirmation."""
+        if operation not in IRREVERSIBLE_OPS:
+            return True
+        approved = bool(self._intervene(agent, operation)) if self._intervene else False
+        self._log(op="ask_permission", agent=agent, operation=operation,
+                  approved=approved)
+        return approved
+
+    def execute_access_syscall(self, sc) -> Dict[str, Any]:
+        op = sc.request_data["operation"]
+        p = sc.request_data.get("params", {})
+        if op == "add_privilege":
+            self.add_privilege(p["sid"], p["tid"])
+            return {"success": True}
+        if op == "check_access":
+            return {"success": True,
+                    "granted": self.check_access(p["sid"], p["tid"])}
+        if op == "ask_permission":
+            return {"success": True,
+                    "approved": self.ask_permission(sc.agent_name, p["operation"])}
+        raise KeyError(op)

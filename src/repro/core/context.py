@@ -1,0 +1,125 @@
+"""Context manager (paper §3.4, Appendix A.4): snapshot/restore of in-flight
+LLM generations, enabling the scheduler's preemptive time slicing.
+
+Modes: "logits" (exact decode-state snapshot -- KV / recurrent slices +
+pending token) and "text" (decoded-token prefix; restore re-prefills). Both
+are bit-exact here (EXPERIMENTS.md §Paper-claims, Table 7 analog).
+
+Snapshots live in a host-RAM pool with LRU-K spill to the storage manager --
+the HBM -> host RAM -> disk tier of DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, Optional
+
+from repro.serving.engine import ContextSnapshot
+
+
+class LRUKPool:
+    """Byte-budgeted host pool with LRU-K eviction (paper §3.5): the eviction
+    victim is the item whose K-th most recent access is oldest; items with
+    fewer than K accesses count as -inf (evicted first, classic LRU-K)."""
+
+    def __init__(self, budget_bytes: int, k: int = 2, watermark: float = 0.8):
+        self.budget = budget_bytes
+        self.k = k
+        self.watermark = watermark
+        self.items: Dict[str, Any] = {}
+        self.sizes: Dict[str, int] = {}
+        self.hist: Dict[str, deque] = {}
+        self.used = 0
+        self._lock = threading.RLock()
+
+    def _touch(self, key: str):
+        h = self.hist.setdefault(key, deque(maxlen=self.k))
+        h.append(time.monotonic())
+
+    def over_watermark(self) -> bool:
+        return self.used > self.watermark * self.budget
+
+    def put(self, key: str, obj: Any, nbytes: int):
+        with self._lock:
+            if key in self.items:
+                self.used -= self.sizes[key]
+            self.items[key] = obj
+            self.sizes[key] = nbytes
+            self.used += nbytes
+            self._touch(key)
+
+    def get(self, key: str) -> Optional[Any]:
+        with self._lock:
+            if key not in self.items:
+                return None
+            self._touch(key)
+            return self.items[key]
+
+    def pop(self, key: str) -> Optional[Any]:
+        with self._lock:
+            obj = self.items.pop(key, None)
+            if obj is not None:
+                self.used -= self.sizes.pop(key)
+                self.hist.pop(key, None)
+            return obj
+
+    def kth_access(self, key: str) -> float:
+        h = self.hist.get(key)
+        if h is None or len(h) < self.k:
+            return float("-inf")
+        return h[0]
+
+    def eviction_order(self):
+        with self._lock:
+            return sorted(self.items, key=self.kth_access)
+
+
+class ContextManager:
+    def __init__(self, storage, *, mode: str = "logits",
+                 budget_bytes: int = 256 << 20, k: int = 2,
+                 watermark: float = 0.8):
+        assert mode in ("logits", "text")
+        self.mode = mode
+        self.storage = storage
+        self.pool = LRUKPool(budget_bytes, k=k, watermark=watermark)
+        self.stats = {"saves": 0, "loads": 0, "spills": 0, "disk_loads": 0}
+        self._lock = threading.Lock()
+
+    # -- paper API: generate_response_with_interruption lives in LLMCore;
+    # -- these are load_context / clear_context / (save).
+    def save(self, ctx_id: str, snap: ContextSnapshot):
+        self.pool.put(ctx_id, snap, snap.nbytes())
+        self.stats["saves"] += 1
+        self._maybe_spill()
+
+    def load(self, ctx_id: str) -> ContextSnapshot:
+        snap = self.pool.get(ctx_id)
+        if snap is None:
+            blob = self.storage.load_blob("contexts", ctx_id)
+            if blob is None:
+                raise KeyError(f"context {ctx_id} not found")
+            snap = pickle.loads(blob)
+            self.stats["disk_loads"] += 1
+            self.pool.put(ctx_id, snap, snap.nbytes())
+            self._maybe_spill()
+        self.stats["loads"] += 1
+        return snap
+
+    def clear(self, ctx_id: str):
+        self.pool.pop(ctx_id)
+        self.storage.delete_blob("contexts", ctx_id)
+
+    def _maybe_spill(self):
+        with self._lock:
+            while self.pool.over_watermark():
+                order = self.pool.eviction_order()
+                if not order:
+                    return
+                victim = order[0]
+                snap = self.pool.pop(victim)
+                if snap is None:
+                    continue
+                self.storage.save_blob("contexts", victim, pickle.dumps(snap))
+                self.stats["spills"] += 1

@@ -1,0 +1,130 @@
+"""AIOS kernel facade (paper §2/§3): boots every manager + the scheduler +
+the LLM core pool, and exposes the syscall submission surface the SDK's
+send_request talks to. Module hooks (paper A.9) are the use* constructors.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.configs import get_config
+from repro.core.access import AccessManager
+from repro.core.context import ContextManager
+from repro.core.llm_core import LLMCore, LLMCorePool
+from repro.core.memory import MemoryManager
+from repro.core.scheduler import (BaseScheduler, BatchedScheduler,
+                                  FIFOScheduler, PriorityScheduler, RRScheduler)
+from repro.core.storage import StorageManager
+from repro.core.syscall import (AccessSyscall, LLMSyscall, MemorySyscall,
+                                StorageSyscall, Syscall, ToolSyscall)
+from repro.core.tools import ToolManager
+from repro.serving.engine import ServingEngine
+
+SCHEDULERS = {"fifo": FIFOScheduler, "rr": RRScheduler,
+              "priority": PriorityScheduler, "batched": BatchedScheduler}
+
+
+# -- module hooks (paper A.9) ------------------------------------------------------
+def useStorageManager(root_dir: str, **kw) -> StorageManager:
+    return StorageManager(root_dir, **kw)
+
+
+def useMemoryManager(storage: StorageManager, **kw) -> MemoryManager:
+    return MemoryManager(storage, **kw)
+
+
+def useContextManager(storage: StorageManager, **kw) -> ContextManager:
+    return ContextManager(storage, **kw)
+
+
+def useToolManager() -> ToolManager:
+    return ToolManager()
+
+
+def useLLM(cfg, context_manager, core_id: int = 0, **engine_kw) -> LLMCore:
+    return LLMCore(ServingEngine(cfg, **engine_kw), context_manager, core_id)
+
+
+class AIOSKernel:
+    def __init__(self, *,
+                 arch: str = "tiny",
+                 scheduler: str = "rr",
+                 quantum: int = 16,
+                 num_cores: int = 1,
+                 context_mode: str = "logits",
+                 root_dir: Optional[str] = None,
+                 intervention_cb: Optional[Callable[[str, str], bool]] = None,
+                 engine_kw: Optional[Dict[str, Any]] = None,
+                 memory_kw: Optional[Dict[str, Any]] = None,
+                 shared_params=None):
+        self.root_dir = root_dir or tempfile.mkdtemp(prefix="aios-")
+        self.storage = useStorageManager(self.root_dir)
+        self.memory = useMemoryManager(self.storage, **(memory_kw or {}))
+        self.context = useContextManager(self.storage, mode=context_mode)
+        self.tools = useToolManager()
+        self.access = AccessManager(intervention_cb)
+        cfg = get_config(arch) if isinstance(arch, str) else arch
+        ekw = dict(engine_kw or {})
+        if shared_params is not None:
+            ekw["params"] = shared_params
+        cores = [useLLM(cfg, self.context, core_id=i, **ekw)
+                 for i in range(num_cores)]
+        self.pool = LLMCorePool(cores)
+        sched_cls = SCHEDULERS[scheduler]
+        skw = {}
+        if scheduler in ("rr", "batched"):
+            skw["quantum"] = quantum
+        self.scheduler: BaseScheduler = sched_cls(
+            self.pool, self.memory, self.storage, self.tools, **skw)
+        self._started = False
+
+    # -- lifecycle ----------------------------------------------------------------
+    def start(self):
+        if not self._started:
+            self.scheduler.start()
+            self._started = True
+        return self
+
+    def stop(self):
+        if self._started:
+            self.scheduler.stop()
+            self._started = False
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -- syscall surface -------------------------------------------------------------
+    def submit(self, sc: Syscall) -> Syscall:
+        """Dispatch a syscall. Access syscalls run inline (paper Fig. 3);
+        everything else goes through the scheduler's central queues."""
+        if isinstance(sc, AccessSyscall):
+            sc.mark_queued()
+            sc.mark_running()
+            try:
+                sc.complete(self.access.execute_access_syscall(sc))
+            except Exception as e:  # noqa: BLE001
+                sc.fail(str(e))
+            return sc
+        if not self._started:
+            raise RuntimeError("kernel not started")
+        self.scheduler.submit(sc)
+        return sc
+
+    def send_request(self, agent_name: str, query) -> Dict[str, Any]:
+        """SDK transport: Query -> syscall -> dispatch -> blocking response."""
+        sc = query.to_syscall(agent_name)
+        self.submit(sc)
+        return sc.join()
+
+    # -- metrics ------------------------------------------------------------------------
+    def metrics(self) -> Dict[str, Any]:
+        m = dict(self.scheduler.metrics())
+        m["context"] = dict(self.context.stats)
+        m["memory"] = dict(self.memory.stats)
+        m["tools"] = dict(self.tools.stats)
+        m["engine"] = [dict(c.engine.stats) for c in self.pool.cores]
+        return m

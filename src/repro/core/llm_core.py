@@ -1,0 +1,111 @@
+"""LLM core abstraction (paper §3.2, Appendix A.2): each core wraps one model
+replica (a ServingEngine on a mesh slice) behind a unified syscall interface.
+The pool routes syscalls across cores (sequential / round-robin / least-loaded
+-- the paper's RouterStrategy).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.syscall import LLMSyscall
+from repro.serving.engine import ServingEngine
+
+
+class LLMCore:
+    """One LLM instance. execute_llm_syscall implements the paper's
+    generate_response_with_interruption: run at most `quantum` decode steps,
+    snapshot + suspend if unfinished."""
+
+    def __init__(self, engine: ServingEngine, context_manager, core_id: int = 0):
+        self.engine = engine
+        self.ctx = context_manager
+        self.core_id = core_id
+        self._lock = threading.Lock()   # exclusive-mode serialization
+        self.busy_time = 0.0
+        self.executed = 0
+
+    # -- admission ------------------------------------------------------------------
+    def admit(self, sc: LLMSyscall) -> int:
+        """Place a syscall into a decode slot (restore if it was suspended)."""
+        rd = sc.request_data
+        if sc.context_id is not None:
+            snap = self.ctx.load(sc.context_id)
+            slot = self.engine.restore(snap, seq_id=sc.pid)
+            self.ctx.clear(sc.context_id)
+            sc.context_id = None
+        else:
+            slot = self.engine.add_sequence(
+                np.asarray(rd["prompt"], np.int32), seq_id=sc.pid,
+                max_new=rd.get("max_new_tokens", 32),
+                eos_id=rd.get("eos_id", -1),
+                image_embeds=rd.get("image_embeds"))
+        return slot
+
+    def _finish(self, sc: LLMSyscall, slot: int) -> Dict[str, Any]:
+        tokens = self.engine.result(slot)
+        self.engine.free(slot)
+        return {"tokens": tokens, "finished": True,
+                "usage": {"new_tokens": len(tokens)}}
+
+    def _suspend(self, sc: LLMSyscall, slot: int) -> str:
+        snap = self.engine.snapshot(slot, kind=self.ctx.mode)
+        ctx_id = f"ctx-{sc.pid}"
+        self.ctx.save(ctx_id, snap)
+        return ctx_id
+
+    # -- exclusive (paper-faithful: one prompt at a time) -----------------------------
+    def execute_llm_syscall(self, sc: LLMSyscall,
+                            quantum: Optional[int] = None
+                            ) -> Tuple[bool, Any]:
+        t0 = time.monotonic()
+        with self._lock:
+            slot = self.admit(sc)
+            steps = 0
+            while not self.engine.is_done(slot):
+                if quantum is not None and steps >= quantum:
+                    ctx_id = self._suspend(sc, slot)
+                    self.busy_time += time.monotonic() - t0
+                    return False, ctx_id
+                self.engine.step()
+                steps += 1
+            resp = self._finish(sc, slot)
+        self.busy_time += time.monotonic() - t0
+        self.executed += 1
+        return True, resp
+
+    # -- trial-and-error baseline (paper §1/§4.3 "without AIOS") ----------------------
+    def unmanaged_try_load(self, sc: LLMSyscall) -> Optional[int]:
+        """Speculatively load (prefill) without admission control. When the
+        device is full this burns a real prefill's worth of work and fails --
+        the GPU trial-and-error cost, reproduced honestly."""
+        rd = sc.request_data
+        prompt = np.asarray(rd["prompt"], np.int32)
+        if not self.engine.can_admit(len(prompt), rd.get("max_new_tokens", 32)):
+            # the wasted tensor-load: a prefill that hits the memory wall
+            self.engine.probe_failed_load(prompt)
+            return None
+        return self.admit(sc)
+
+
+class LLMCorePool:
+    def __init__(self, cores: List[LLMCore], strategy: str = "round_robin"):
+        assert cores
+        self.cores = cores
+        self.strategy = strategy
+        self._rr = itertools.cycle(range(len(cores)))
+
+    @property
+    def num_cores(self) -> int:
+        return len(self.cores)
+
+    def route(self) -> LLMCore:
+        if self.strategy == "sequential":
+            return self.cores[0]
+        if self.strategy == "least_loaded":
+            return min(self.cores, key=lambda c: c.engine.free_slot_count() * -1)
+        return self.cores[next(self._rr)]

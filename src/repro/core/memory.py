@@ -1,0 +1,194 @@
+"""Memory manager (paper §3.5, Appendix A.5): per-agent runtime memory blocks
+(conversation logs, tool results) with CRUD + semantic retrieval, and LRU-K
+swap to the storage manager when a block exceeds its watermark (default 80%
+of the block size, configurable -- paper Fig. 5).
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+from repro.core.syscall import MemorySyscall
+
+_note_ids = itertools.count(1)
+
+
+class MemoryNote:
+    __slots__ = ("note_id", "agent", "content", "metadata", "created",
+                 "updated")
+
+    def __init__(self, agent: str, content: str, metadata: Optional[Dict] = None,
+                 note_id: Optional[str] = None):
+        self.note_id = note_id or f"m{next(_note_ids)}"
+        self.agent = agent
+        self.content = content
+        self.metadata = metadata or {}
+        self.created = time.time()
+        self.updated = self.created
+
+    def nbytes(self) -> int:
+        return len(self.content.encode()) + 128
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "note_id": self.note_id, "agent": self.agent,
+            "content": self.content, "metadata": self.metadata,
+            "created": self.created, "updated": self.updated})
+
+    @classmethod
+    def from_json(cls, s: str) -> "MemoryNote":
+        d = json.loads(s)
+        n = cls(d["agent"], d["content"], d["metadata"], note_id=d["note_id"])
+        n.created, n.updated = d["created"], d["updated"]
+        return n
+
+
+class _Block:
+    def __init__(self, limit: int, k: int):
+        self.limit = limit
+        self.k = k
+        self.resident: Dict[str, MemoryNote] = {}
+        self.evicted: set = set()
+        self.hist: Dict[str, deque] = {}
+        self.used = 0
+
+    def touch(self, nid: str):
+        self.hist.setdefault(nid, deque(maxlen=self.k)).append(time.monotonic())
+
+    def kth(self, nid: str) -> float:
+        h = self.hist.get(nid)
+        return h[0] if h and len(h) == self.k else float("-inf")
+
+
+class BaseMemoryManager:
+    def __init__(self, storage, *, block_bytes: int = 64 << 10,
+                 watermark: float = 0.8, k: int = 2):
+        self.storage = storage
+        self.block_bytes = block_bytes
+        self.watermark = watermark
+        self.k = k
+        self.blocks: Dict[str, _Block] = {}
+        self._lock = threading.RLock()
+        self.stats = {"adds": 0, "gets": 0, "evictions": 0, "swap_ins": 0}
+
+    def _block(self, agent: str) -> _Block:
+        if agent not in self.blocks:
+            self.blocks[agent] = _Block(self.block_bytes, self.k)
+        return self.blocks[agent]
+
+    # -- syscall dispatch ------------------------------------------------------------
+    def execute_memory_syscall(self, sc: MemorySyscall) -> Dict[str, Any]:
+        op = sc.request_data["operation"]
+        params = sc.request_data.get("params", {})
+        fn = {
+            "add_memory": self.add_memory, "get_memory": self.get_memory,
+            "update_memory": self.update_memory, "remove_memory": self.remove_memory,
+            "retrieve_memory": self.retrieve_memory,
+        }[op]
+        return fn(sc.agent_name, **params)
+
+    # -- CRUD ------------------------------------------------------------------------
+    def add_memory(self, agent: str, *, content: str,
+                   metadata: Optional[Dict] = None) -> Dict[str, Any]:
+        with self._lock:
+            blk = self._block(agent)
+            note = MemoryNote(agent, content, metadata)
+            blk.resident[note.note_id] = note
+            blk.used += note.nbytes()
+            blk.touch(note.note_id)
+            self.storage.vector_add(f"mem-{agent}", note.note_id, content)
+            self.stats["adds"] += 1
+            self._maybe_evict(agent)
+            return {"memory_id": note.note_id, "success": True}
+
+    def get_memory(self, agent: str, *, memory_id: str) -> Dict[str, Any]:
+        with self._lock:
+            blk = self._block(agent)
+            note = blk.resident.get(memory_id)
+            if note is None:
+                if memory_id not in blk.evicted:
+                    return {"success": False, "error": "not found"}
+                note = self._swap_in(agent, memory_id)
+            blk.touch(memory_id)
+            self.stats["gets"] += 1
+            return {"memory_id": memory_id, "content": note.content,
+                    "metadata": note.metadata, "success": True}
+
+    def update_memory(self, agent: str, *, memory_id: str, content: str,
+                      metadata: Optional[Dict] = None) -> Dict[str, Any]:
+        with self._lock:
+            blk = self._block(agent)
+            note = blk.resident.get(memory_id)
+            if note is None:
+                if memory_id not in blk.evicted:
+                    return {"success": False, "error": "not found"}
+                note = self._swap_in(agent, memory_id)
+            blk.used -= note.nbytes()
+            note.content = content
+            if metadata:
+                note.metadata.update(metadata)
+            note.updated = time.time()
+            blk.used += note.nbytes()
+            blk.touch(memory_id)
+            self.storage.vector_add(f"mem-{agent}", memory_id, content)
+            self._maybe_evict(agent)
+            return {"memory_id": memory_id, "success": True}
+
+    def remove_memory(self, agent: str, *, memory_id: str) -> Dict[str, Any]:
+        with self._lock:
+            blk = self._block(agent)
+            note = blk.resident.pop(memory_id, None)
+            if note is not None:
+                blk.used -= note.nbytes()
+            blk.evicted.discard(memory_id)
+            blk.hist.pop(memory_id, None)
+            self.storage.delete_blob(f"mem-{agent}", memory_id)
+            self.storage.vector_remove(f"mem-{agent}", memory_id)
+            return {"success": True}
+
+    def retrieve_memory(self, agent: str, *, query: str, k: int = 3
+                        ) -> Dict[str, Any]:
+        with self._lock:
+            hits = self.storage.vector_query(f"mem-{agent}", query, k)
+            results = []
+            for nid, score in hits:
+                got = self.get_memory(agent, memory_id=nid)
+                if got.get("success"):
+                    results.append({"memory_id": nid, "score": score,
+                                    "content": got["content"]})
+            return {"search_results": results, "success": True}
+
+    # -- LRU-K swap (paper Fig. 5) ------------------------------------------------------
+    def usage(self, agent: str) -> int:
+        return self._block(agent).used
+
+    def _maybe_evict(self, agent: str):
+        blk = self._block(agent)
+        while blk.used > self.watermark * blk.limit and blk.resident:
+            victim = min(blk.resident, key=blk.kth)
+            note = blk.resident.pop(victim)
+            blk.used -= note.nbytes()
+            blk.evicted.add(victim)
+            self.storage.save_blob(f"mem-{agent}", victim,
+                                   note.to_json().encode())
+            self.stats["evictions"] += 1
+
+    def _swap_in(self, agent: str, memory_id: str) -> MemoryNote:
+        blob = self.storage.load_blob(f"mem-{agent}", memory_id)
+        if blob is None:
+            raise KeyError(f"memory {memory_id} lost")
+        note = MemoryNote.from_json(blob.decode())
+        blk = self._block(agent)
+        blk.evicted.discard(memory_id)
+        blk.resident[memory_id] = note
+        blk.used += note.nbytes()
+        self.stats["swap_ins"] += 1
+        self._maybe_evict(agent)
+        return note
+
+
+MemoryManager = BaseMemoryManager

@@ -1,0 +1,284 @@
+"""AIOS scheduler (paper §3.3, Appendix A.3): centralized queues for all
+modules; worker threads per module; FIFO / Round-Robin (time-sliced via the
+context-interrupt mechanism) / priority strategies for the LLM queue.
+
+RR quantum is measured in decode steps (token-level time slicing) -- the
+TPU-native unit of LLM work -- rather than wall-clock Python slicing.
+"""
+from __future__ import annotations
+
+import heapq
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.syscall import Syscall
+
+
+class _PriorityQueue:
+    """heapq wrapper with the same interface subset as queue.Queue."""
+
+    def __init__(self):
+        self._h: List = []
+        self._cv = threading.Condition()
+        self._count = 0
+
+    def put(self, item):
+        with self._cv:
+            self._count += 1
+            heapq.heappush(self._h, (-item.priority, self._count, item))
+            self._cv.notify()
+
+    def get(self, timeout: Optional[float] = None):
+        with self._cv:
+            if not self._h and not self._cv.wait_for(lambda: bool(self._h),
+                                                     timeout):
+                raise queue.Empty
+            return heapq.heappop(self._h)[2]
+
+    def qsize(self):
+        with self._cv:
+            return len(self._h)
+
+
+class BaseScheduler:
+    """Owns every module queue (centralization per paper §3.3) and the worker
+    threads that drain them. Subclasses set the LLM strategy knobs."""
+
+    name = "base"
+    llm_quantum: Optional[int] = None   # decode steps per slice; None = to completion
+
+    def __init__(self, llm_core_pool, memory_manager, storage_manager,
+                 tool_manager, *, log: Optional[Callable[[str], None]] = None):
+        self.pool = llm_core_pool
+        self.memory = memory_manager
+        self.storage = storage_manager
+        self.tools = tool_manager
+        self.log = log or (lambda m: None)
+        self.llm_queue = self._make_queue()
+        self.mem_queue: "queue.Queue" = queue.Queue()
+        self.sto_queue: "queue.Queue" = queue.Queue()
+        self.tool_queue: "queue.Queue" = queue.Queue()
+        self._threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+        self.completed: List[Syscall] = []
+        self._completed_lock = threading.Lock()
+
+    def _make_queue(self):
+        return queue.Queue()
+
+    # -- submission -----------------------------------------------------------------
+    def submit(self, syscall: Syscall):
+        syscall.mark_queued()
+        q = {"llm": self.llm_queue, "memory": self.mem_queue,
+             "storage": self.sto_queue, "tool": self.tool_queue}[syscall.category]
+        q.put(syscall)
+
+    # -- lifecycle -------------------------------------------------------------------
+    def start(self):
+        self._stop.clear()
+        workers = [("mem", self._mem_worker), ("sto", self._sto_worker),
+                   ("tool", self._tool_worker)]
+        for i in range(self.pool.num_cores):
+            workers.append((f"llm{i}", lambda idx=i: self._llm_worker(idx)))
+        for name, fn in workers:
+            t = threading.Thread(target=fn, name=f"aios-{self.name}-{name}",
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def stop(self):
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5)
+        self._threads.clear()
+
+    def _record(self, sc: Syscall):
+        with self._completed_lock:
+            self.completed.append(sc)
+
+    # -- module workers ---------------------------------------------------------------
+    def _drain(self, q, handler):
+        while not self._stop.is_set():
+            try:
+                sc = q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            sc.mark_running()
+            try:
+                resp = handler(sc)
+                sc.complete(resp)
+            except Exception as e:  # noqa: BLE001 -- kernel isolates agent errors
+                sc.fail(str(e))
+            self._record(sc)
+
+    def _mem_worker(self):
+        self._drain(self.mem_queue, self.memory.execute_memory_syscall)
+
+    def _sto_worker(self):
+        self._drain(self.sto_queue, self.storage.execute_storage_syscall)
+
+    def _tool_worker(self):
+        """Tool conflicts: skip conflicting calls and advance to the next
+        conflict-free candidate (paper §3.7)."""
+        backlog: List[Syscall] = []
+        while not self._stop.is_set():
+            sc = None
+            for i, cand in enumerate(backlog):
+                if not self.tools.has_conflict(cand.request_data["tool_name"]):
+                    sc = backlog.pop(i)
+                    break
+            if sc is None:
+                try:
+                    cand = self.tool_queue.get(timeout=0.05)
+                except queue.Empty:
+                    continue
+                if self.tools.has_conflict(cand.request_data["tool_name"]):
+                    backlog.append(cand)
+                    continue
+                sc = cand
+            sc.mark_running()
+            try:
+                sc.complete(self.tools.execute_tool_syscall(sc))
+            except Exception as e:  # noqa: BLE001
+                sc.fail(str(e))
+            self._record(sc)
+
+    llm_retries = 2   # fault tolerance: failed cores lose at most one quantum
+
+    def _llm_worker(self, core_idx: int):
+        core = self.pool.cores[core_idx]
+        while not self._stop.is_set():
+            try:
+                sc = self.llm_queue.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            sc.mark_running()
+            try:
+                finished, resp = core.execute_llm_syscall(
+                    sc, quantum=self.llm_quantum)
+            except Exception as e:  # noqa: BLE001
+                # core fault: requeue so another core (or a recovered one)
+                # picks it up; the context snapshot bounds lost work to one
+                # quantum (DESIGN.md §5). Fail only after llm_retries.
+                retries = getattr(sc, "_retries", 0)
+                if retries < self.llm_retries:
+                    sc._retries = retries + 1
+                    self.log(f"llm syscall pid={sc.pid} retry "
+                             f"{sc._retries} after core{core_idx} fault: {e}")
+                    self.llm_queue.put(sc)
+                else:
+                    sc.fail(str(e))
+                    self._record(sc)
+                continue
+            if finished:
+                sc.complete(resp)
+                self._record(sc)
+            else:
+                # context interrupt: requeue at the tail (RR)
+                sc.suspend(resp)          # resp = context id
+                self.llm_queue.put(sc)
+
+    # -- metrics -----------------------------------------------------------------------
+    def metrics(self) -> Dict[str, float]:
+        with self._completed_lock:
+            done = [s for s in self.completed if s.status == "done"]
+        waits = sorted(s.waiting_time for s in done)
+        n = len(waits)
+        return {
+            "completed": n,
+            "avg_wait": sum(waits) / n if n else 0.0,
+            "p90_wait": waits[int(0.9 * (n - 1))] if n else 0.0,
+        }
+
+
+class FIFOScheduler(BaseScheduler):
+    name = "fifo"
+    llm_quantum = None          # run to completion in arrival order
+
+
+class RRScheduler(BaseScheduler):
+    name = "rr"
+
+    def __init__(self, *args, quantum: int = 16, **kw):
+        super().__init__(*args, **kw)
+        self.llm_quantum = quantum
+
+
+class PriorityScheduler(BaseScheduler):
+    """Beyond-paper strategy: priority-ordered LLM queue (preemptive at
+    quantum boundaries when a quantum is set)."""
+    name = "priority"
+
+    def __init__(self, *args, quantum: Optional[int] = None, **kw):
+        super().__init__(*args, **kw)
+        self.llm_quantum = quantum
+
+    def _make_queue(self):
+        return _PriorityQueue()
+
+
+class BatchedScheduler(BaseScheduler):
+    """Beyond-paper strategy (DESIGN.md §2): token-level continuous batching.
+    The LLM worker keeps every free decode slot filled from the queue and
+    steps all admitted syscalls together; RR fairness is kept via the
+    per-syscall quantum (preempt + requeue on expiry)."""
+    name = "batched"
+
+    def __init__(self, *args, quantum: Optional[int] = 64, **kw):
+        super().__init__(*args, **kw)
+        self.llm_quantum = quantum
+
+    def _llm_worker(self, core_idx: int):
+        core = self.pool.cores[core_idx]
+        engine = core.engine
+        running: Dict[int, Syscall] = {}      # slot -> syscall
+        used: Dict[int, int] = {}             # slot -> steps this quantum
+        while not self._stop.is_set():
+            # fill free slots from the queue (admission-controlled)
+            while engine.free_slot_count() > 0:
+                try:
+                    sc = self.llm_queue.get(timeout=0.0 if running else 0.05)
+                except queue.Empty:
+                    break
+                sc.mark_running()
+                try:
+                    slot = core.admit(sc)
+                except RuntimeError:
+                    # cannot admit right now (pages); push back and stop filling
+                    self.llm_queue.put(sc)
+                    break
+                except Exception as e:  # noqa: BLE001
+                    sc.fail(str(e))
+                    self._record(sc)
+                    continue
+                running[slot] = sc
+                used[slot] = 0
+            if not running:
+                time.sleep(0.001)
+                continue
+            engine.step()
+            for slot in list(running):
+                sc = running[slot]
+                used[slot] += 1
+                if engine.is_done(slot):
+                    resp = core._finish(sc, slot)
+                    sc.complete(resp)
+                    self._record(sc)
+                    del running[slot], used[slot]
+                elif self.llm_quantum and used[slot] >= self.llm_quantum and \
+                        self.llm_queue.qsize() > 0:
+                    # preempt only when someone is waiting
+                    ctx_id = core._suspend(sc, slot)
+                    sc.suspend(ctx_id)
+                    self.llm_queue.put(sc)
+                    del running[slot], used[slot]
+        # drain on stop: fail whatever is still running
+        for slot, sc in running.items():
+            try:
+                resp = core._finish(sc, slot)
+                sc.complete(resp)
+            except Exception as e:  # noqa: BLE001
+                sc.fail(str(e))
+            self._record(sc)

@@ -1,0 +1,298 @@
+"""Storage manager (paper §3.6, Appendix A.6): persistent agent storage with
+versioned files (history / rollback), per-file locks, blob store (memory
+swap + context spill), sharing links, and a vector store for semantic
+retrieval (the paper uses chromadb; here a dependency-free hashed-BoW cosine
+index -- deterministic and offline).
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.syscall import StorageSyscall
+
+_DIM = 256
+
+
+def embed_text(text: str) -> np.ndarray:
+    """Deterministic hashed bag-of-words embedding."""
+    v = np.zeros(_DIM, np.float32)
+    for tok in re.findall(r"[a-z0-9]+", text.lower()):
+        h = int(hashlib.md5(tok.encode()).hexdigest(), 16)
+        v[h % _DIM] += 1.0 + (h >> 128) % 3 * 0.1
+    n = np.linalg.norm(v)
+    return v / n if n else v
+
+
+class VectorStore:
+    def __init__(self):
+        self._ids: List[str] = []
+        self._vecs: Optional[np.ndarray] = None
+        self._texts: Dict[str, str] = {}
+        self._lock = threading.Lock()
+
+    def add(self, doc_id: str, text: str):
+        with self._lock:
+            vec = embed_text(text)[None]
+            if doc_id in self._texts:
+                i = self._ids.index(doc_id)
+                self._vecs[i] = vec[0]
+            else:
+                self._ids.append(doc_id)
+                self._vecs = vec if self._vecs is None else np.concatenate(
+                    [self._vecs, vec])
+            self._texts[doc_id] = text
+
+    def remove(self, doc_id: str):
+        with self._lock:
+            if doc_id not in self._texts:
+                return
+            i = self._ids.index(doc_id)
+            self._ids.pop(i)
+            self._vecs = np.delete(self._vecs, i, axis=0)
+            self._texts.pop(doc_id)
+
+    def query(self, text: str, k: int = 3) -> List[Tuple[str, float]]:
+        with self._lock:
+            if not self._ids:
+                return []
+            q = embed_text(text)
+            scores = self._vecs @ q
+            order = np.argsort(-scores)[:k]
+            return [(self._ids[i], float(scores[i])) for i in order]
+
+
+class StorageManager:
+    def __init__(self, root_dir: str, *, max_versions: int = 20,
+                 use_vector_db: bool = True):
+        self.root = os.path.abspath(root_dir)
+        os.makedirs(self.root, exist_ok=True)
+        self.max_versions = max_versions
+        self.use_vector_db = use_vector_db
+        self._locks: Dict[str, threading.Lock] = {}
+        self._locks_guard = threading.Lock()
+        self._stores: Dict[str, VectorStore] = {}
+        self.stats = {"writes": 0, "reads": 0, "rollbacks": 0, "shares": 0}
+
+    # -- path / lock helpers -----------------------------------------------------------
+    def _abs(self, path: str) -> str:
+        p = os.path.abspath(os.path.join(self.root, path))
+        if not p.startswith(self.root):
+            raise PermissionError(f"path escapes storage root: {path}")
+        return p
+
+    def get_file_hash(self, file_path: str) -> str:
+        return hashlib.sha256(file_path.encode()).hexdigest()
+
+    def get_file_lock(self, file_path: str) -> threading.Lock:
+        with self._locks_guard:
+            return self._locks.setdefault(self.get_file_hash(file_path),
+                                          threading.Lock())
+
+    def _versions_dir(self, path: str) -> str:
+        return self._abs(os.path.join(".versions", self.get_file_hash(path)))
+
+    # -- syscall dispatch ----------------------------------------------------------------
+    def execute_storage_syscall(self, sc: StorageSyscall) -> Dict[str, Any]:
+        op = sc.request_data["operation"]
+        params = sc.request_data.get("params", {})
+        fn = {
+            "sto_create_file": self.sto_create_file,
+            "sto_create_directory": self.sto_create_directory,
+            "sto_mount": self.sto_mount,
+            "sto_write": self.sto_write,
+            "sto_read": self.sto_read,
+            "sto_retrieve": self.sto_retrieve,
+            "sto_rollback": self.sto_rollback,
+            "sto_share": self.sto_share,
+            "sto_history": self.get_file_history,
+        }[op]
+        return fn(**params)
+
+    # -- file operations -------------------------------------------------------------------
+    def sto_create_file(self, file_path: str, collection_name: Optional[str] = None
+                        ) -> Dict[str, Any]:
+        p = self._abs(file_path)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with self.get_file_lock(file_path):
+            if not os.path.exists(p):
+                open(p, "w").close()
+        return {"success": True, "path": file_path}
+
+    def sto_create_directory(self, dir_path: str) -> Dict[str, Any]:
+        os.makedirs(self._abs(dir_path), exist_ok=True)
+        return {"success": True, "path": dir_path}
+
+    def sto_write(self, file_path: str, content: str,
+                  collection_name: Optional[str] = None) -> Dict[str, Any]:
+        p = self._abs(file_path)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with self.get_file_lock(file_path):
+            if os.path.exists(p):
+                self._snapshot_version(file_path)
+            tmp = p + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(content)
+            os.replace(tmp, p)   # atomic
+        if collection_name and self.use_vector_db:
+            self.vector_add(collection_name, file_path, content)
+        self.stats["writes"] += 1
+        return {"success": True, "path": file_path}
+
+    def sto_read(self, file_path: str) -> Dict[str, Any]:
+        p = self._abs(file_path)
+        with self.get_file_lock(file_path):
+            if not os.path.exists(p):
+                return {"success": False, "error": "not found"}
+            with open(p) as f:
+                content = f.read()
+        self.stats["reads"] += 1
+        return {"success": True, "content": content}
+
+    def _snapshot_version(self, file_path: str):
+        vd = self._versions_dir(file_path)
+        os.makedirs(vd, exist_ok=True)
+        existing = sorted(os.listdir(vd))
+        idx = int(existing[-1].split("_")[0]) + 1 if existing else 0
+        shutil.copy2(self._abs(file_path),
+                     os.path.join(vd, f"{idx:06d}_{time.time():.6f}"))
+        while len(os.listdir(vd)) > self.max_versions:
+            victims = sorted(os.listdir(vd))
+            os.remove(os.path.join(vd, victims[0]))
+
+    def get_file_history(self, file_path: str, limit: Optional[int] = None
+                         ) -> Dict[str, Any]:
+        vd = self._versions_dir(file_path)
+        if not os.path.isdir(vd):
+            return {"success": True, "versions": []}
+        versions = sorted(os.listdir(vd))
+        if limit:
+            versions = versions[-limit:]
+        return {"success": True, "versions": [
+            {"index": int(v.split("_")[0]), "time": float(v.split("_")[1])}
+            for v in versions]}
+
+    def sto_rollback(self, file_path: str, n: int = 1,
+                     time_stamp: Optional[float] = None) -> Dict[str, Any]:
+        vd = self._versions_dir(file_path)
+        if not os.path.isdir(vd) or not os.listdir(vd):
+            return {"success": False, "error": "no versions"}
+        versions = sorted(os.listdir(vd))
+        with self.get_file_lock(file_path):
+            if time_stamp is not None:
+                cands = [v for v in versions if float(v.split("_")[1]) <= time_stamp]
+                if not cands:
+                    return {"success": False, "error": "no version before time"}
+                pick = cands[-1]
+            else:
+                if n > len(versions):
+                    return {"success": False, "error": "not enough versions"}
+                pick = versions[-n]
+            shutil.copy2(os.path.join(vd, pick), self._abs(file_path))
+        self.stats["rollbacks"] += 1
+        return {"success": True, "restored": pick}
+
+    def restore_version(self, file_path: str, version_index: int) -> bool:
+        vd = self._versions_dir(file_path)
+        for v in sorted(os.listdir(vd)) if os.path.isdir(vd) else []:
+            if int(v.split("_")[0]) == version_index:
+                with self.get_file_lock(file_path):
+                    shutil.copy2(os.path.join(vd, v), self._abs(file_path))
+                return True
+        return False
+
+    def generate_share_link(self, file_path: str) -> str:
+        return f"aios://share/{self.get_file_hash(file_path)[:16]}"
+
+    def sto_share(self, file_path: str) -> Dict[str, Any]:
+        with self.get_file_lock(file_path):
+            if not os.path.exists(self._abs(file_path)):
+                return {"success": False, "error": "not found"}
+            link = self.generate_share_link(file_path)
+        self.stats["shares"] += 1
+        return {"success": True, "link": link}
+
+    # -- mount + semantic retrieval ------------------------------------------------------------
+    def sto_mount(self, collection_name: str, dir_path: str) -> Dict[str, Any]:
+        d = self._abs(dir_path)
+        if not os.path.isdir(d):
+            return {"success": False, "error": "not a directory"}
+        count = 0
+        for base, _, files in os.walk(d):
+            if ".versions" in base or ".blobs" in base:
+                continue
+            for fn in files:
+                p = os.path.join(base, fn)
+                rel = os.path.relpath(p, self.root)
+                try:
+                    with open(p) as f:
+                        self.vector_add(collection_name, rel, f.read())
+                    count += 1
+                except (UnicodeDecodeError, OSError):
+                    continue
+        return {"success": True, "indexed": count}
+
+    def sto_retrieve(self, collection_name: str, query_text: str, k: int = 3,
+                     keywords: Optional[str] = None) -> Dict[str, Any]:
+        hits = self.vector_query(collection_name, query_text, k)
+        if keywords:
+            kws = keywords.lower().split()
+            scored = []
+            for doc_id, score in hits:
+                text = self._stores[collection_name]._texts.get(doc_id, "")
+                bonus = sum(1 for kw in kws if kw in text.lower())
+                scored.append((doc_id, score + 0.1 * bonus))
+            hits = sorted(scored, key=lambda t: -t[1])
+        return {"success": True, "results": [
+            {"id": d, "score": s} for d, s in hits]}
+
+    # -- vector-store facade ----------------------------------------------------------------------
+    def _store(self, collection: str) -> VectorStore:
+        if collection not in self._stores:
+            self._stores[collection] = VectorStore()
+        return self._stores[collection]
+
+    def vector_add(self, collection: str, doc_id: str, text: str):
+        if self.use_vector_db:
+            self._store(collection).add(doc_id, text)
+
+    def vector_remove(self, collection: str, doc_id: str):
+        if collection in self._stores:
+            self._stores[collection].remove(doc_id)
+
+    def vector_query(self, collection: str, text: str, k: int = 3):
+        if collection not in self._stores:
+            return []
+        return self._stores[collection].query(text, k)
+
+    # -- blob store (memory swap / context spill) ----------------------------------------------------
+    def _blob_path(self, namespace: str, key: str) -> str:
+        safe = hashlib.sha256(key.encode()).hexdigest()
+        return self._abs(os.path.join(".blobs", namespace, safe))
+
+    def save_blob(self, namespace: str, key: str, data: bytes):
+        p = self._blob_path(namespace, key)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        tmp = p + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, p)
+
+    def load_blob(self, namespace: str, key: str) -> Optional[bytes]:
+        p = self._blob_path(namespace, key)
+        if not os.path.exists(p):
+            return None
+        with open(p, "rb") as f:
+            return f.read()
+
+    def delete_blob(self, namespace: str, key: str):
+        p = self._blob_path(namespace, key)
+        if os.path.exists(p):
+            os.remove(p)

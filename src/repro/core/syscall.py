@@ -1,0 +1,117 @@
+"""AIOS system calls (paper §3.1, Appendix A.1).
+
+Each syscall is thread-bound: the issuing agent thread blocks on
+``syscall.event.wait()`` while the scheduler dispatches the call to the
+owning module's worker. Categories: llm / memory / storage / tool / access.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Any, Dict, Optional
+
+_pid_counter = itertools.count(1)
+
+
+class Syscall:
+    category = "generic"
+
+    def __init__(self, agent_name: str, request_data: Dict[str, Any],
+                 priority: int = 0):
+        self.agent_name = agent_name
+        self.request_data = request_data
+        self.priority = priority
+        self.event = threading.Event()
+        self.pid = next(_pid_counter)
+        self.status = "created"      # created|queued|running|suspended|done|error
+        self.response: Any = None
+        self.error: Optional[str] = None
+        self.time_limit: Optional[float] = None
+        self.created_time = time.monotonic()
+        self.queued_time: Optional[float] = None
+        self.start_time: Optional[float] = None
+        self.end_time: Optional[float] = None
+        # scheduling bookkeeping
+        self.quanta_used = 0
+        self.context_id: Optional[str] = None   # set when suspended
+
+    # -- lifecycle ----------------------------------------------------------------
+    def mark_queued(self):
+        self.status = "queued"
+        self.queued_time = time.monotonic()
+
+    def mark_running(self):
+        if self.start_time is None:
+            self.start_time = time.monotonic()
+        self.status = "running"
+
+    def suspend(self, context_id: str):
+        self.status = "suspended"
+        self.context_id = context_id
+        self.quanta_used += 1
+
+    def complete(self, response: Any):
+        self.response = response
+        self.status = "done"
+        self.end_time = time.monotonic()
+        self.event.set()
+
+    def fail(self, error: str):
+        self.error = error
+        self.status = "error"
+        self.end_time = time.monotonic()
+        self.event.set()
+
+    def join(self, timeout: Optional[float] = None) -> Any:
+        """Block the issuing agent thread until the kernel responds."""
+        if not self.event.wait(timeout):
+            raise TimeoutError(f"syscall pid={self.pid} timed out")
+        if self.status == "error":
+            raise RuntimeError(f"syscall pid={self.pid} failed: {self.error}")
+        return self.response
+
+    # -- metrics ------------------------------------------------------------------
+    @property
+    def waiting_time(self) -> float:
+        """Queue-entry to completion (the paper's agent waiting time basis)."""
+        if self.end_time is None or self.queued_time is None:
+            return 0.0
+        return self.end_time - self.queued_time
+
+    @property
+    def turnaround(self) -> float:
+        if self.end_time is None:
+            return 0.0
+        return self.end_time - self.created_time
+
+    def __repr__(self):
+        return (f"<{type(self).__name__} pid={self.pid} agent={self.agent_name} "
+                f"status={self.status}>")
+
+
+class LLMSyscall(Syscall):
+    """request_data: {prompt: list[int] | str, max_new_tokens, temperature,
+    eos_id, tools?, action_type?}"""
+    category = "llm"
+
+
+class MemorySyscall(Syscall):
+    """request_data: {operation: add|get|update|remove|retrieve, params}"""
+    category = "memory"
+
+
+class StorageSyscall(Syscall):
+    """request_data: {operation: sto_* , params}"""
+    category = "storage"
+
+
+class ToolSyscall(Syscall):
+    """request_data: {tool_name, params}"""
+    category = "tool"
+
+
+class AccessSyscall(Syscall):
+    """request_data: {operation: add_privilege|check_access|ask_permission,
+    params}. Not dispatched by the scheduler (paper Fig. 3): executed inline."""
+    category = "access"

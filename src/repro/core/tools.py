@@ -1,0 +1,133 @@
+"""Tool manager (paper §3.7, Appendix A.7): standardized loading with
+pre-execution parameter validation, and conflict resolution via a hashmap of
+live instance counts against per-tool parallel limits.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.core.syscall import ToolSyscall
+
+
+class Tool:
+    """Subclass or instantiate with run_fn. schema: {param: (type, required)}."""
+    name = "tool"
+    schema: Dict[str, Tuple[type, bool]] = {}
+    parallel_limit: int = 4
+
+    def __init__(self, name: Optional[str] = None,
+                 run_fn: Optional[Callable[..., Any]] = None,
+                 schema: Optional[Dict] = None, parallel_limit: Optional[int] = None):
+        if name:
+            self.name = name
+        if schema is not None:
+            self.schema = schema
+        if parallel_limit is not None:
+            self.parallel_limit = parallel_limit
+        self._run_fn = run_fn
+
+    def coerce(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        """Structural repair of near-miss params (paper §4.2: 'pre-execution
+        parameter validation via structural regex'): cast values to the
+        schema type when the cast is lossless. Direct (non-kernel) tool calls
+        bypass this and crash instead."""
+        out = dict(params)
+        for key, (typ, _req) in self.schema.items():
+            if key not in out:
+                continue
+            target = typ if isinstance(typ, type) else typ[0]
+            v = out[key]
+            if isinstance(v, typ if isinstance(typ, (type, tuple)) else (typ,)):
+                continue
+            try:
+                if target in (int, float) and isinstance(v, (int, float, str)):
+                    out[key] = target(v)
+                elif target is str and isinstance(v, (int, float)):
+                    out[key] = str(v)   # near-miss only; containers stay invalid
+            except (TypeError, ValueError):
+                pass  # leave for validate() to reject cleanly
+        return out
+
+    def validate(self, params: Dict[str, Any]):
+        """Pre-execution validation (prevents tool crashes, paper §3.7 /
+        structural checks credited for the GAIA gains in §4.2)."""
+        for key, (typ, required) in self.schema.items():
+            if key not in params:
+                if required:
+                    raise ValueError(f"{self.name}: missing required param '{key}'")
+                continue
+            if not isinstance(params[key], typ):
+                tname = typ.__name__ if isinstance(typ, type) else \
+                    "/".join(t.__name__ for t in typ)
+                raise TypeError(
+                    f"{self.name}: param '{key}' expects {tname}, "
+                    f"got {type(params[key]).__name__}")
+        unknown = set(params) - set(self.schema)
+        if unknown:
+            raise ValueError(f"{self.name}: unknown params {sorted(unknown)}")
+
+    def run(self, **params) -> Any:
+        if self._run_fn is None:
+            raise NotImplementedError
+        return self._run_fn(**params)
+
+
+class ToolManager:
+    def __init__(self):
+        self._factories: Dict[str, Callable[[], Tool]] = {}
+        self._instances: Dict[str, Tool] = {}
+        self._live: Dict[str, int] = {}          # the conflict hashmap
+        self._lock = threading.Lock()
+        self.stats = {"calls": 0, "validation_errors": 0, "conflicts": 0}
+
+    # -- registration / loading -------------------------------------------------------
+    def register(self, name: str, factory: Callable[[], Tool]):
+        self._factories[name] = factory
+
+    def load_tool_instance(self, tool_name: str) -> Tool:
+        """Dynamic load on first use: instantiate + dependency verification."""
+        with self._lock:
+            if tool_name not in self._instances:
+                if tool_name not in self._factories:
+                    raise KeyError(f"unknown tool '{tool_name}'")
+                tool = self._factories[tool_name]()
+                assert tool.name == tool_name, "tool name mismatch"
+                self._instances[tool_name] = tool
+                self._live.setdefault(tool_name, 0)
+            return self._instances[tool_name]
+
+    # -- conflicts ----------------------------------------------------------------------
+    def has_conflict(self, tool_name: str) -> bool:
+        tool = self.load_tool_instance(tool_name)
+        with self._lock:
+            return self._live[tool_name] >= tool.parallel_limit
+
+    # -- execution ----------------------------------------------------------------------
+    def execute_tool_syscall(self, sc: ToolSyscall) -> Dict[str, Any]:
+        name = sc.request_data["tool_name"]
+        params = sc.request_data.get("params", {})
+        tool = self.load_tool_instance(name)
+        params = tool.coerce(params)
+        try:
+            tool.validate(params)
+        except (ValueError, TypeError) as e:
+            self.stats["validation_errors"] += 1
+            return {"success": False, "error": f"validation: {e}"}
+        with self._lock:
+            if self._live[name] >= tool.parallel_limit:
+                self.stats["conflicts"] += 1
+                raise RuntimeError(f"tool '{name}' at parallel limit")
+            self._live[name] += 1
+        try:
+            result = tool.run(**params)
+            self.stats["calls"] += 1
+            return {"success": True, "result": result}
+        except Exception as e:  # noqa: BLE001
+            return {"success": False, "error": str(e)}
+        finally:
+            with self._lock:
+                self._live[name] -= 1
+
+    def live_count(self, tool_name: str) -> int:
+        return self._live.get(tool_name, 0)

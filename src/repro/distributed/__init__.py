@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (  # noqa: F401
+    LogicalRules,
+    DEFAULT_RULES,
+    FSDP_RULES,
+    logical_to_spec,
+    spec_tree,
+    rules_for,
+)

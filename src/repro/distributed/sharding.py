@@ -1,0 +1,93 @@
+"""Logical-axis sharding: params carry logical axis names; rules map them
+to mesh axes (MaxText-style), so the same model code serves single-host CPU,
+a 16x16 single pod, and the 2x16x16 multi-pod mesh.
+
+Mesh axes:
+  pod    -- data parallelism across pods (multi-pod only)
+  data   -- data parallelism / FSDP within a pod
+  model  -- tensor / expert parallelism
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Logical axes used by model code.
+#   embed     : d_model rows of weight matrices
+#   heads     : attention-head output columns (H*hd)
+#   kv        : kv-head columns (K*hd)  -- too small to split at TP16; kept
+#               unsharded, GQA broadcast handles head fan-out
+#   mlp       : d_ff columns
+#   vocab     : vocabulary dimension
+#   experts   : MoE expert dimension (expert parallelism)
+#   layers    : scanned-layer leading axis (never sharded)
+#   batch     : per-example batch axis of activations
+#   seq       : sequence axis of activations (context parallelism)
+#   kv_seq    : sequence axis of KV caches (flash-decode sharding)
+#   rnn       : recurrent-state width (RG-LRU / WKV)
+LogicalRules = Mapping[str, Any]
+
+DEFAULT_RULES: Dict[str, Any] = {
+    "embed": None,
+    "heads": "model",
+    "kv": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "layers": None,
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": "model",
+    "rnn": "model",
+    "norm": None,
+    "conv": None,
+}
+
+# FSDP: additionally shard the d_model (embed) rows of big weights over data.
+FSDP_RULES: Dict[str, Any] = dict(DEFAULT_RULES, embed="data")
+
+
+def rules_for(cfg, mesh) -> Dict[str, Any]:
+    rules = dict(FSDP_RULES if getattr(cfg, "fsdp", False) else DEFAULT_RULES)
+    axis_names = set(mesh.axis_names)
+    # Drop mesh axes not present (e.g. no "pod" on the single-pod mesh, no
+    # "data"/"model" on single-device CPU test meshes).
+    def _filter(v):
+        if v is None:
+            return None
+        if isinstance(v, (tuple, list)):
+            kept = tuple(a for a in v if a in axis_names)
+            return kept if kept else None
+        return v if v in axis_names else None
+    return {k: _filter(v) for k, v in rules.items()}
+
+
+def logical_to_spec(logical: Tuple[Optional[str], ...], rules: LogicalRules) -> P:
+    parts = []
+    used = set()
+    for ax in logical:
+        m = rules.get(ax) if ax is not None else None
+        # A mesh axis may appear at most once in a PartitionSpec.
+        if m is None:
+            parts.append(None)
+            continue
+        key = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+        if any(k in used for k in key):
+            parts.append(None)
+            continue
+        used.update(key)
+        parts.append(tuple(m) if isinstance(m, (tuple, list)) else m)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def spec_tree(logical_tree, rules: LogicalRules):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda l: logical_to_spec(l, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )

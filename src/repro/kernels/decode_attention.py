@@ -1,0 +1,107 @@
+"""Pallas TPU decode attention: one new token per sequence attending to a
+contiguous KV cache with per-sequence valid lengths (and optional sliding
+window). This is the serve_step hot loop.
+
+Grid: (batch, q_heads, num_kv_blocks); kv dimension sequential with online
+softmax carried in VMEM scratch. KV blocks entirely beyond seq_len are
+skipped -- decode FLOPs scale with the *actual* context length, not the cache
+allocation.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, bk: int, nk: int, window: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = len_ref[0]
+    k_first = ki * bk
+    live = k_first < seq_len
+    if window:
+        live &= (k_first + bk) > (seq_len - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # [1, hd] row
+        k = k_ref[0, 0].astype(jnp.float32)              # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [1, bk]
+        kpos = k_first + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = kpos < seq_len
+        if window:
+            mask &= kpos >= (seq_len - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(p, v)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, seq_lens, *, window: int = 0,
+                     block_k: int = 256, interpret: bool = False):
+    """q: [B, H, hd]; caches [B, S, K, hd]; seq_lens [B] -> [B, H, hd]."""
+    B, H, hd = q.shape
+    _, S, K, _ = k_cache.shape
+    assert H % K == 0
+    bk = min(block_k, S)
+    S_pad = ((S + bk - 1) // bk) * bk
+    kh = jnp.swapaxes(k_cache, 1, 2)                     # [B, K, S, hd]
+    vh = jnp.swapaxes(v_cache, 1, 2)
+    if S_pad != S:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, S_pad - S), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, S_pad - S), (0, 0)))
+    nk = S_pad // bk
+    g = H // K
+    qh = q[:, :, None, :]                                # [B, H, 1, hd]
+
+    kernel = functools.partial(
+        _decode_kernel, scale=1.0 / math.sqrt(hd), bk=bk, nk=nk, window=window)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(seq_lens.astype(jnp.int32), qh, kh, vh)
+    return out[:, :, 0, :]

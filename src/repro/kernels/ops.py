@@ -1,0 +1,63 @@
+"""jit'd dispatch wrappers over the Pallas kernels.
+
+Backend selection:
+  "tpu"       -- compiled Pallas (real hardware target)
+  "interpret" -- Pallas interpret mode (CPU validation; used in tests)
+  "jnp"       -- pure-jnp reference path (default on CPU, used by dry-run)
+Set globally with set_backend() or per-call with backend=...
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels import flash_attention as _fa
+from repro.kernels import decode_attention as _da
+from repro.kernels import rglru as _rg
+from repro.kernels import wkv6 as _wkv
+
+_BACKEND: Optional[str] = None
+
+
+def default_backend() -> str:
+    if _BACKEND is not None:
+        return _BACKEND
+    return "tpu" if jax.default_backend() == "tpu" else "jnp"
+
+
+def set_backend(backend: Optional[str]) -> None:
+    global _BACKEND
+    assert backend in (None, "tpu", "interpret", "jnp")
+    _BACKEND = backend
+
+
+def flash_attention(q, k, v, *, q_offset=0, window=0, backend=None, **kw):
+    b = backend or default_backend()
+    if b == "jnp":
+        return _ref.flash_attention_ref(q, k, v, q_offset=q_offset, window=window)
+    return _fa.flash_attention(q, k, v, q_offset=q_offset, window=window,
+                               interpret=(b == "interpret"), **kw)
+
+
+def decode_attention(q, k_cache, v_cache, seq_lens, *, window=0, backend=None, **kw):
+    b = backend or default_backend()
+    if b == "jnp":
+        return _ref.decode_attention_ref(q, k_cache, v_cache, seq_lens, window=window)
+    return _da.decode_attention(q, k_cache, v_cache, seq_lens, window=window,
+                                interpret=(b == "interpret"), **kw)
+
+
+def rglru(log_a, bx, h0, *, backend=None, **kw):
+    b = backend or default_backend()
+    if b == "jnp":
+        return _ref.rglru_ref(log_a, bx, h0)
+    return _rg.rglru(log_a, bx, h0, interpret=(b == "interpret"), **kw)
+
+
+def wkv6(r, k, v, w, u, state, *, backend=None, **kw):
+    b = backend or default_backend()
+    if b == "jnp":
+        return _ref.wkv6_ref(r, k, v, w, u, state)
+    return _wkv.wkv6(r, k, v, w, u, state, interpret=(b == "interpret"), **kw)

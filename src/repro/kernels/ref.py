@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel. Deliberately naive (full
+materialization / sequential scans) -- these are the ground truth the kernels
+are validated against in tests (interpret=True) across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _broadcast_kv(k, n_heads):
+    K = k.shape[-2]
+    if K == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // K, axis=-2)
+
+
+def flash_attention_ref(q, k, v, *, q_offset=0, window=0):
+    """q: [B, Sq, H, hd]; k, v: [B, Skv, K, hd]. Full-materialization causal
+    (optionally sliding-window) attention in fp32."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    k = _broadcast_kv(k, H)
+    v = _broadcast_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    mask = kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, seq_lens, *, window=0):
+    """q: [B, H, hd]; caches [B, S, K, hd]; seq_lens [B]."""
+    B, S, K, hd = k_cache.shape
+    H = q.shape[1]
+    k = _broadcast_kv(k_cache, H)
+    v = _broadcast_kv(v_cache, H)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    pos = jnp.arange(S)[None, :]
+    mask = pos < seq_lens[:, None]
+    if window:
+        mask &= pos >= (seq_lens[:, None] - window)
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_ref(log_a, bx, h0):
+    """Sequential linear recurrence h_t = exp(log_a_t) h_{t-1} + bx_t.
+    log_a, bx: [B, T, W] fp32; h0: [B, W]. Returns (h [B,T,W], h_last)."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bx = bx.astype(jnp.float32)
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                              (a.swapaxes(0, 1), bx.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1), h_last
+
+
+def wkv6_ref(r, k, v, w, u, state):
+    """Sequential RWKV-6 recurrence.
+
+    r,k,v,w: [B, T, H, hd]; u: [H, hd]; state: [B, H, hd, hd].
+      S_t = diag(w_t) S_{t-1} + k_t^T v_t
+      out_t = r_t S_{t-1} + (r_t*u . k_t) v_t
+    Returns (out [B,T,H,hd] fp32, final state)."""
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                       # [B, H, hd]
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        out = jnp.einsum("bhd,bhde->bhe", rt, S) + \
+            jnp.einsum("bhd,bhde->bhe", rt * u.astype(f32), kv)
+        S = wt[..., None] * S + kv
+        return S, out
+
+    S, outs = jax.lax.scan(step, state.astype(f32),
+                           tuple(x.swapaxes(0, 1) for x in (r, k, v, w)))
+    return outs.swapaxes(0, 1), S

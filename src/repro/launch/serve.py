@@ -1,0 +1,75 @@
+"""Serving launcher: boot the AIOS kernel over an architecture and run an
+agent workload (production entry point; the CPU-host path runs the tiny
+config end-to-end through exactly the same kernel/scheduler/engine code that
+the dry-run compiles for the 512-chip mesh).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tiny --agents 16 \
+      --scheduler rr --quantum 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def run_workload(*, arch="tiny", scheduler="rr", quantum=16, num_cores=1,
+                 agents=8, max_new=16, max_slots=8, max_len=256,
+                 frameworks=None, log=print):
+    from repro.agents import FRAMEWORKS, register_builtin_tools
+    from repro.core import AIOSKernel
+
+    kernel = AIOSKernel(arch=arch, scheduler=scheduler, quantum=quantum,
+                        num_cores=num_cores,
+                        engine_kw={"max_slots": max_slots, "max_len": max_len})
+    register_builtin_tools(kernel.tools)
+    fw_names = frameworks or list(FRAMEWORKS)
+    tasks = [
+        {"kind": "math", "expression": f"({i}+4)*5", "expected": (i + 4) * 5.0}
+        for i in range(agents)
+    ]
+    results = []
+    with kernel:
+        import threading
+        t0 = time.time()
+
+        def one(i):
+            cls = FRAMEWORKS[fw_names[i % len(fw_names)]]
+            agent = cls(kernel, f"agent{i}", max_new_tokens=max_new)
+            results.append(agent.run(tasks[i]))
+
+        threads = [threading.Thread(target=one, args=(i,))
+                   for i in range(agents)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.time() - t0
+        m = kernel.metrics()
+    sr = sum(1 for r in results if r.get("success")) / max(len(results), 1)
+    out = {"agents": agents, "seconds": round(dt, 2),
+           "success_rate": sr, "completed_syscalls": m["completed"],
+           "avg_wait_s": round(m["avg_wait"], 4),
+           "p90_wait_s": round(m["p90_wait"], 4),
+           "throughput_syscalls_per_s": round(m["completed"] / dt, 2)}
+    log(json.dumps(out, indent=1))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny")
+    ap.add_argument("--scheduler", default="rr",
+                    choices=("fifo", "rr", "priority", "batched"))
+    ap.add_argument("--quantum", type=int, default=16)
+    ap.add_argument("--num-cores", type=int, default=1)
+    ap.add_argument("--agents", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-slots", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=256)
+    args = ap.parse_args(argv)
+    run_workload(**{k.replace("-", "_"): v for k, v in vars(args).items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tiny --steps 100 \
+      --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config
+from repro.training import TrainConfig, Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=("adamw", "adafactor"))
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tc = TrainConfig(global_batch=args.batch, seq_len=args.seq,
+                     steps=args.steps, accum=args.accum, lr=args.lr,
+                     warmup=args.warmup, optimizer=args.optimizer,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    tr = Trainer(cfg, tc)
+    if args.resume:
+        tr.maybe_resume()
+    out = tr.run()
+    print(f"done: {out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

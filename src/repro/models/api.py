@@ -1,0 +1,85 @@
+"""Unified model API: build any assigned architecture from its ModelConfig and
+get a uniform interface used by training, serving, the dry-run and tests.
+
+  model = build_model(cfg)
+  params, logical  = model.init_params(rng)          (or abstract_init)
+  logits           = model.forward(params, tokens)
+  loss             = model.loss_fn(params, batch)
+  cache, logical   = model.init_cache(batch, max_len)
+  cache, logits    = model.prefill(params, tokens, cache, lengths=...)
+  cache, logits    = model.decode_step(params, tokens, cache)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import DenseTransformer
+from repro.models.moe import MoETransformer
+from repro.models.rwkv6 import RWKV6
+from repro.models.recurrentgemma import RecurrentGemma
+
+MODEL_REGISTRY: Dict[str, Callable] = {
+    "dense": DenseTransformer,
+    "audio": DenseTransformer,   # decoder over EnCodec tokens (frontend stub)
+    "vlm": DenseTransformer,     # cross-attn layers enabled via cfg
+    "moe": MoETransformer,
+    "ssm": RWKV6,
+    "hybrid": RecurrentGemma,
+}
+
+
+def build_model(cfg):
+    return MODEL_REGISTRY[cfg.family](cfg)
+
+
+def abstract_init(model, rng=None):
+    """Shape-only init: returns (param ShapeDtypeStructs, logical tree)
+    without allocating anything -- used by the 512-device dry-run."""
+    rng = rng if rng is not None else jax.random.key(0)
+    side = {}
+
+    def f(k):
+        p, l = model.init_params(k)
+        side["logical"] = l
+        return p
+
+    shapes = jax.eval_shape(f, rng)
+    return shapes, side["logical"]
+
+
+def abstract_cache(model, batch: int, max_len: int):
+    side = {}
+
+    def f():
+        c, l = model.init_cache(batch, max_len)
+        side["logical"] = l
+        return c
+
+    shapes = jax.eval_shape(f)
+    return shapes, side["logical"]
+
+
+def input_specs(cfg, shape_cell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+
+    train  -> {tokens, labels [B, S]} (+ image_embeds for vlm)
+    prefill-> {tokens [B, S]}         (+ image_embeds for vlm)
+    decode -> {tokens [B]} plus the KV/state cache (built separately).
+    """
+    B, S = shape_cell.global_batch, shape_cell.seq_len
+    tok = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    specs: Dict[str, Any] = {}
+    if shape_cell.kind == "train":
+        specs["tokens"] = tok(B, S)
+        specs["labels"] = tok(B, S)
+    elif shape_cell.kind == "prefill":
+        specs["tokens"] = tok(B, S)
+    else:  # decode: one new token against a cache of seq_len
+        specs["tokens"] = tok(B)
+    if cfg.family == "vlm" and shape_cell.kind != "decode":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_frontend_tokens, cfg.d_model), cfg.dtype)
+    return specs

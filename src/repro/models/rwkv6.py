@@ -1,0 +1,337 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free with data-dependent
+per-channel decay.
+
+TPU adaptation (DESIGN.md §2): the reference CUDA wkv kernel is replaced by a
+*chunked parallel* formulation -- intra-chunk attention-like matmuls (MXU
+friendly) + inter-chunk state passing with per-channel cumulative decays. The
+Pallas kernel (kernels/wkv6.py) fuses one chunk in VMEM; this file is the
+pure-JAX path with identical math.
+
+Recurrence per head (state S in R^{hd_k x hd_v}):
+  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+  out_t = r_t S_{t-1} + (r_t * u) . k_t * v_t
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.transformer import _stack_init, _remat
+
+CHUNK = 32          # fp32-safe decay-ratio window
+LORA_MIX = 32       # ddlerp adapter rank
+LORA_DECAY = 64     # decay adapter rank
+
+
+def wkv_chunked(r, k, v, w, u, state, *, chunk: int = CHUNK):
+    """Chunked WKV recurrence.
+
+    r,k,v,w: [B, T, H, hd] (w = per-channel decay in (0,1), fp32);
+    u: [H, hd] bonus; state: [B, H, hd, hd].
+    Returns (out [B,T,H,hd] fp32, new_state).
+    """
+    B, T, H, hd = r.shape
+    assert T % chunk == 0, f"T={T} % chunk={chunk} != 0"
+    n = T // chunk
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    # [n, B, H, C, hd]
+    resh = lambda x: x.reshape(B, n, chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+
+    def body(S, xs):
+        rb, kb, vb, wb = xs                      # [B, H, C, hd]
+        c = jnp.cumprod(wb, axis=2)              # c_t = prod_{s<=t} w_s
+        c_prev = jnp.concatenate(                # c_{t-1}, with c_{-1}=1
+            [jnp.ones_like(c[:, :, :1]), c[:, :, :-1]], axis=2)
+        # intra-chunk: score(t, j) = (r_t * c_{t-1}) . (k_j / c_j), j < t
+        rq = rb * c_prev
+        kq = kb / c
+        A = jnp.einsum("bhtd,bhjd->bhtj", rq, kq)
+        tri = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1)
+        A = A * tri
+        diag = jnp.einsum("bhtd,bhtd->bht", rb * u[None, :, None, :], kb)
+        idx = jnp.arange(chunk)
+        A = A.at[:, :, idx, idx].set(diag)
+        out = jnp.einsum("bhtj,bhjd->bhtd", A, vb)
+        # inter-chunk: r_t D(t0..t-1) S_prev
+        out = out + jnp.einsum("bhtd,bhde->bhte", rq, S)
+        # state to end of chunk: diag(c_end) S + sum_j (c_end / c_j * k_j)^T v_j
+        c_end = c[:, :, -1]                       # [B, H, hd]
+        S_new = c_end[..., None] * S + jnp.einsum(
+            "bhjd,bhje->bhde", kb * (c_end[:, :, None, :] / c), vb)
+        return S_new, out
+
+    # NOTE: stays a real scan even under cost probes (SCAN_UNROLL): its
+    # flops share is <5% of a layer; see EXPERIMENTS.md §Roofline notes.
+    state, outs = jax.lax.scan(body, state.astype(f32), (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, T, H, hd)
+    return out, state
+
+
+def wkv_step(r, k, v, w, u, state):
+    """Single-token recurrence. r,k,v,w: [B, H, hd]; state [B, H, hd, hd]."""
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    out = jnp.einsum("bhd,bhde->bhe", r, state) + \
+        jnp.einsum("bhd,bhde->bhe", r * u, kv)
+    state = w[..., None] * state + kv
+    return out, state
+
+
+def _group_norm(x, g, b, H, eps=64e-5):
+    """Per-head groupnorm on [B, T, d] viewed as H groups."""
+    B, T, d = x.shape
+    xh = x.reshape(B, T, H, d // H).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, T, d) * g + b).astype(x.dtype)
+
+
+class RWKV6:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.H = cfg.d_model // cfg.rwkv_head_dim
+        self.hd = cfg.rwkv_head_dim
+
+    # -- init -----------------------------------------------------------------
+    def _block_init(self, rng):
+        cfg = self.cfg
+        d, ff = cfg.d_model, cfg.d_ff
+        ks = jax.random.split(rng, 10)
+        dt = cfg.param_dtype
+        z = lambda *s: jnp.zeros(s, jnp.float32)
+        nrm = lambda k, *s, sc=1.0: (jax.random.normal(k, s, jnp.float32) * sc).astype(dt)
+        p, l = {}, {}
+        p["ln1"], l["ln1"] = L.norm_init(d)
+        p["ln2"], l["ln2"] = L.norm_init(d)
+        tm = {
+            "maa_x": z(d), "maa_r": z(d), "maa_w": z(d), "maa_k": z(d),
+            "maa_v": z(d), "maa_g": z(d),
+            "maa_w1": nrm(ks[0], d, 5 * LORA_MIX, sc=0.01),
+            "maa_w2": nrm(ks[1], 5, LORA_MIX, d, sc=0.01),
+            "decay": z(self.H, self.hd) - 5.0,
+            "decay_w1": nrm(ks[2], d, LORA_DECAY, sc=0.01),
+            "decay_w2": nrm(ks[3], LORA_DECAY, d, sc=0.01),
+            "u": z(self.H, self.hd) + 0.5,
+            "wr": nrm(ks[4], d, d, sc=1 / math.sqrt(d)),
+            "wk": nrm(ks[5], d, d, sc=1 / math.sqrt(d)),
+            "wv": nrm(ks[6], d, d, sc=1 / math.sqrt(d)),
+            "wg": nrm(ks[7], d, d, sc=1 / math.sqrt(d)),
+            "wo": nrm(ks[8], d, d, sc=1 / math.sqrt(d)),
+            "gn_g": jnp.ones((d,), jnp.float32),
+            "gn_b": jnp.zeros((d,), jnp.float32),
+        }
+        ltm = {
+            "maa_x": ("embed",), "maa_r": ("embed",), "maa_w": ("embed",),
+            "maa_k": ("embed",), "maa_v": ("embed",), "maa_g": ("embed",),
+            "maa_w1": ("embed", None), "maa_w2": (None, None, "embed"),
+            "decay": ("rnn", None), "decay_w1": ("embed", None),
+            "decay_w2": (None, "embed"),
+            "u": ("rnn", None),
+            "wr": ("embed", "rnn"), "wk": ("embed", "rnn"),
+            "wv": ("embed", "rnn"), "wg": ("embed", "rnn"),
+            "wo": ("rnn", "embed"),
+            "gn_g": ("norm",), "gn_b": ("norm",),
+        }
+        cm = {
+            "maa_k": z(d), "maa_r": z(d),
+            "wk": nrm(ks[9], d, ff, sc=1 / math.sqrt(d)),
+            "wv": (jax.random.normal(jax.random.fold_in(ks[9], 1), (ff, d),
+                                     jnp.float32) / math.sqrt(ff)).astype(dt),
+            "wr": nrm(jax.random.fold_in(ks[9], 2), d, d, sc=1 / math.sqrt(d)),
+        }
+        lcm = {
+            "maa_k": ("embed",), "maa_r": ("embed",),
+            "wk": ("embed", "mlp"), "wv": ("mlp", "embed"), "wr": ("embed", "embed2"),
+        }
+        p["tm"], l["tm"] = tm, ltm
+        p["cm"], l["cm"] = cm, lcm
+        return p, l
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(rng, 3)
+        p, l = {}, {}
+        p["embed"], l["embed"] = L.embed_init(k1, cfg.padded_vocab, cfg.d_model, cfg.param_dtype)
+        p["blocks"], l["blocks"] = _stack_init(k2, cfg.num_layers, self._block_init)
+        p["lnf"], l["lnf"] = L.norm_init(cfg.d_model)
+        p["head"], l["head"] = L.dense_init(k3, cfg.d_model, cfg.padded_vocab,
+                                            ("embed", "vocab"), cfg.param_dtype)
+        return p, l
+
+    # -- mixers ---------------------------------------------------------------
+    def _ddlerp(self, tm, x, xx):
+        """Data-dependent token-shift interpolation -> (xr,xw,xk,xv,xg)."""
+        base = x + xx * tm["maa_x"].astype(x.dtype)
+        a = jnp.tanh(base.astype(jnp.float32) @ tm["maa_w1"].astype(jnp.float32))
+        B, T = x.shape[:2]
+        a = a.reshape(B, T, 5, LORA_MIX)
+        adj = jnp.einsum("btfr,frd->fbtd", a, tm["maa_w2"].astype(jnp.float32))
+        outs = []
+        for i, nm in enumerate(("maa_r", "maa_w", "maa_k", "maa_v", "maa_g")):
+            mix = (tm[nm].astype(jnp.float32) + adj[i]).astype(x.dtype)
+            outs.append(x + xx * mix)
+        return outs
+
+    def _time_mix(self, tm, x, xx, wkv_state, *, decode: bool, mask=None):
+        cfg = self.cfg
+        H, hd = self.H, self.hd
+        B, T, d = x.shape
+        xr, xw, xk, xv, xg = self._ddlerp(tm, x, xx)
+        r = (xr @ tm["wr"]).reshape(B, T, H, hd)
+        k = (xk @ tm["wk"]).reshape(B, T, H, hd)
+        v = (xv @ tm["wv"]).reshape(B, T, H, hd)
+        g = jax.nn.silu(xg @ tm["wg"])
+        dlora = jnp.tanh(xw.astype(jnp.float32) @ tm["decay_w1"].astype(jnp.float32)) \
+            @ tm["decay_w2"].astype(jnp.float32)
+        wdec = tm["decay"].reshape(1, 1, d) + dlora            # [B,T,d] f32
+        # clamp keeps the 32-step fp32 decay-ratio window safe (DESIGN.md);
+        # the sequential oracle applies the same clamp so paths agree exactly.
+        wdec = jnp.clip(wdec, -8.0, 0.7)
+        w = jnp.exp(-jnp.exp(wdec)).reshape(B, T, H, hd)        # (0,1)
+        if mask is not None:
+            m4 = mask.reshape(B, T, 1, 1)
+            k = jnp.where(m4, k, 0.0)          # pad tokens write nothing
+            w = jnp.where(m4, w, 1.0)          # and do not decay the state
+        u = tm["u"].astype(jnp.float32)
+        if decode:
+            out, wkv_state = wkv_step(r[:, 0], k[:, 0], v[:, 0], w[:, 0], u, wkv_state)
+            out = out[:, None]
+        else:
+            out, wkv_state = wkv_chunked(r, k, v, w, u, wkv_state)
+        out = out.reshape(B, T, d)
+        out = _group_norm(out, tm["gn_g"], tm["gn_b"], H)
+        return (out.astype(x.dtype) * g) @ tm["wo"], wkv_state
+
+    def _channel_mix(self, cm, x, xx):
+        xk = x + xx * cm["maa_k"].astype(x.dtype)
+        xr = x + xx * cm["maa_r"].astype(x.dtype)
+        k = jnp.square(jax.nn.relu(xk @ cm["wk"]))
+        return jax.nn.sigmoid(xr @ cm["wr"]) * (k @ cm["wv"])
+
+    # -- forward --------------------------------------------------------------
+    def _shift(self, x, last=None):
+        """Token shift: x_{t-1} - x_t ("xx"). last: [B, d] carry or zeros."""
+        prev = jnp.concatenate(
+            [jnp.zeros_like(x[:, :1]) if last is None else last[:, None],
+             x[:, :-1]], axis=1)
+        return prev - x
+
+    def _layer(self, blk, x, state, *, decode: bool, mask=None, lengths=None):
+        cfg = self.cfg
+        h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        xx = self._shift(h, state.get("shift_t"))
+        tmo, wkv = self._time_mix(blk["tm"], h, xx, state["wkv"],
+                                  decode=decode, mask=mask)
+        x = x + tmo
+        h2 = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        xx2 = self._shift(h2, state.get("shift_c"))
+        x = x + self._channel_mix(blk["cm"], h2, xx2)
+        if lengths is not None:  # shift carry = last *valid* position
+            idx = jnp.clip(lengths - 1, 0)[:, None, None]
+            sh_t = jnp.take_along_axis(h, idx, axis=1)[:, 0]
+            sh_c = jnp.take_along_axis(h2, idx, axis=1)[:, 0]
+        else:
+            sh_t, sh_c = h[:, -1], h2[:, -1]
+        new_state = {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c}
+        return x, new_state
+
+    def forward(self, params, tokens, *, image_embeds=None):
+        cfg = self.cfg
+        B, T = tokens.shape
+        pad = (-T) % CHUNK
+        if pad:
+            tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+        x = params["embed"][tokens].astype(cfg.dtype)
+        zero_state = {
+            "wkv": jnp.zeros((B, self.H, self.hd, self.hd), jnp.float32),
+            "shift_t": None, "shift_c": None,
+        }
+
+        def body(x, blk):
+            x, _ = self._layer(blk, x, zero_state, decode=False)
+            return x, None
+
+        x, _ = L.xscan(_remat(body, cfg.remat_policy), x, params["blocks"])
+        x = L.rms_norm(x, params["lnf"], cfg.norm_eps)
+        if pad:
+            x = x[:, :T]
+        return x @ params["head"]
+
+    def loss_fn(self, params, batch):
+        logits = self.forward(params, batch["tokens"])
+        labels = batch["labels"]
+        lg = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+        mask = batch.get("mask", jnp.ones_like(labels, dtype=jnp.float32))
+        return jnp.sum((logz - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    # -- cache / prefill / decode ----------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        nl, d = cfg.num_layers, cfg.d_model
+        cache = {
+            "wkv": jnp.zeros((nl, batch, self.H, self.hd, self.hd), jnp.float32),
+            "shift_t": jnp.zeros((nl, batch, d), cfg.dtype),
+            "shift_c": jnp.zeros((nl, batch, d), cfg.dtype),
+            "seq_lens": jnp.zeros((batch,), jnp.int32),
+        }
+        logical = {
+            "wkv": ("layers", "batch", "rnn", None, None),
+            "shift_t": ("layers", "batch", None),
+            "shift_c": ("layers", "batch", None),
+            "seq_lens": ("batch",),
+        }
+        return cache, logical
+
+    def prefill(self, params, tokens, cache, *, image_embeds=None, lengths=None):
+        cfg = self.cfg
+        B, T = tokens.shape
+        pad = (-T) % CHUNK
+        if pad:
+            tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+        x = params["embed"][tokens].astype(cfg.dtype)
+        if lengths is None:
+            lengths = jnp.full((B,), T, jnp.int32)
+        valid = jnp.arange(tokens.shape[1])[None] < lengths[:, None]  # [B, Tp]
+
+        def body(x, xs):
+            blk, wkv = xs
+            st = {"wkv": wkv, "shift_t": None, "shift_c": None}
+            x, ns = self._layer(blk, x, st, decode=False, mask=valid,
+                                lengths=lengths)
+            return x, (ns["wkv"], ns["shift_t"], ns["shift_c"])
+
+        x, (wkv, sh_t, sh_c) = L.xscan(
+            _remat(body, cfg.remat_policy), x, (params["blocks"], cache["wkv"]))
+        x = L.rms_norm(x, params["lnf"], cfg.norm_eps)
+        idx = jnp.clip(lengths - 1, 0)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+        cache = dict(cache, wkv=wkv, shift_t=sh_t, shift_c=sh_c, seq_lens=lengths)
+        return cache, last @ params["head"]
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = params["embed"][tokens][:, None].astype(cfg.dtype)
+
+        def body(x, xs):
+            blk, wkv, st, sc = xs
+            state = {"wkv": wkv, "shift_t": st, "shift_c": sc}
+            x, ns = self._layer(blk, x, state, decode=True)
+            return x, (ns["wkv"], ns["shift_t"], ns["shift_c"])
+
+        x, (wkv, sh_t, sh_c) = L.xscan(
+            body, x, (params["blocks"], cache["wkv"], cache["shift_t"], cache["shift_c"]))
+        x = L.rms_norm(x, params["lnf"], cfg.norm_eps)
+        cache = dict(cache, wkv=wkv, shift_t=sh_t, shift_c=sh_c,
+                     seq_lens=cache["seq_lens"] + 1)
+        return cache, x[:, 0] @ params["head"]

@@ -1,0 +1,316 @@
+"""Dense decoder-only transformer (llama/granite/yi/nemotron family), plus the
+audio-token (musicgen) and cross-attention VLM (llama-3.2-vision) variants.
+
+Layers are stacked on a leading "layers" axis and executed with lax.scan so
+the HLO stays small at 100-layer scale; remat policy is configurable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+def _is_logical(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def _stack_init(rng, n: int, init_fn):
+    """vmap an init over layer rngs -> params stacked on a leading "layers"
+    axis. init_fn(rng) -> (params, logical); logical (static strings) is
+    harvested via a side channel since vmap outputs must be arrays."""
+    ks = jax.random.split(rng, n)
+    side = {}
+
+    def params_only(k):
+        p, l = init_fn(k)
+        side["logical"] = l
+        return p
+
+    params = jax.vmap(params_only)(ks)
+    logical = jax.tree.map(lambda l: ("layers",) + l, side["logical"],
+                           is_leaf=_is_logical)
+    return params, logical
+
+
+class DenseTransformer:
+    """family in {dense, audio, vlm}."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.is_vlm = cfg.family == "vlm" and cfg.cross_attn_every > 0
+        if self.is_vlm:
+            # num_layers counts self + cross layers (llama-3.2-vision: 100 =
+            # 80 self + 20 cross). Super-block = (every-1) self + 1 cross.
+            assert cfg.num_layers % cfg.cross_attn_every == 0
+            self.n_super = cfg.num_layers // cfg.cross_attn_every
+            self.n_self_per = cfg.cross_attn_every - 1
+        else:
+            self.n_super = cfg.num_layers
+
+    # -- init ---------------------------------------------------------------
+    def _block_init(self, rng):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        p, l = {}, {}
+        p["ln1"], l["ln1"] = L.norm_init(cfg.d_model)
+        p["attn"], l["attn"] = L.attn_init(k1, cfg)
+        p["ln2"], l["ln2"] = L.norm_init(cfg.d_model)
+        p["mlp"], l["mlp"] = L.mlp_init(k2, cfg)
+        return p, l
+
+    def _super_block_init(self, rng):
+        """VLM super-block: (cross_attn_every - 1) self layers + one full
+        cross-attention layer (cross-attn + its own MLP)."""
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        selfs, l_selfs = _stack_init(k1, self.n_self_per,
+                                     lambda r: self._block_init(r))
+        p, l = {}, {}
+        p["selfs"], l["selfs"] = selfs, l_selfs
+        kx1, kx2 = jax.random.split(k2)
+        p["xln"], l["xln"] = L.norm_init(cfg.d_model)
+        p["xattn"], l["xattn"] = L.attn_init(kx1, cfg, cross=True)
+        p["xgate"] = jnp.zeros((1,), dtype=jnp.float32)
+        l["xgate"] = ("norm",)
+        p["xln2"], l["xln2"] = L.norm_init(cfg.d_model)
+        p["xmlp"], l["xmlp"] = L.mlp_init(kx2, cfg)
+        return p, l
+
+    def init_params(self, rng) -> Tuple[Dict, Dict]:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(rng, 3)
+        p, l = {}, {}
+        p["embed"], l["embed"] = L.embed_init(k1, cfg.padded_vocab, cfg.d_model, cfg.param_dtype)
+        init = self._super_block_init if self.is_vlm else self._block_init
+        p["blocks"], l["blocks"] = _stack_init(k2, self.n_super, init)
+        p["lnf"], l["lnf"] = L.norm_init(cfg.d_model)
+        p["head"], l["head"] = L.dense_init(k3, cfg.d_model, cfg.padded_vocab,
+                                            ("embed", "vocab"), cfg.param_dtype)
+        return p, l
+
+    # -- single-layer bodies --------------------------------------------------
+    def _self_layer(self, blk, x, positions, *, q_offset=0):
+        cfg = self.cfg
+        h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(blk["attn"], h, cfg, positions)
+        o = L.causal_attention(q, k, v, q_offset=q_offset)
+        x = x + L.attn_out(blk["attn"], o)
+        h = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(blk["mlp"], h, cfg.activation)
+        return x, (k, v)
+
+    def _cross_layer(self, blk, x, img):
+        """Gated cross-attention onto frontend (image) embeddings."""
+        cfg = self.cfg
+        h = L.rms_norm(x, blk["xln"], cfg.norm_eps)
+        B, S, _ = h.shape
+        H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = (h @ blk["xattn"]["wq"]).reshape(B, S, H, hd)
+        xk = (img @ blk["xattn"]["wk"]).reshape(B, -1, K, hd)
+        xv = (img @ blk["xattn"]["wv"]).reshape(B, -1, K, hd)
+        o = self._cross_attend(q, xk, xv)
+        gate = jnp.tanh(blk["xgate"]).astype(x.dtype)
+        x = x + gate * L.attn_out(blk["xattn"], o)
+        h = L.rms_norm(x, blk["xln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(blk["xmlp"], h, cfg.activation)
+        return x, (xk, xv)
+
+    def _cross_attend(self, q, xk, xv):
+        import math
+        H = q.shape[2]
+        k = L._broadcast_kv(xk, H)
+        v = L._broadcast_kv(xv, H)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+        s = s / math.sqrt(q.shape[-1])
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+    # -- train forward --------------------------------------------------------
+    def forward(self, params, tokens, *, image_embeds=None):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(cfg.dtype)
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        if self.is_vlm:
+            def body(x, blk):
+                def inner(x2, sub):
+                    x2, _ = self._self_layer(sub, x2, positions)
+                    return x2, None
+                x, _ = L.xscan(inner, x, blk["selfs"])
+                x, _ = self._cross_layer(blk, x, image_embeds)
+                return x, None
+        else:
+            def body(x, blk):
+                x, _ = self._self_layer(blk, x, positions)
+                return x, None
+
+        x, _ = L.xscan(_remat(body, cfg.remat_policy), x, params["blocks"])
+        x = L.rms_norm(x, params["lnf"], cfg.norm_eps)
+        logits = x @ params["head"]
+        if cfg.logits_softcap:
+            logits = jnp.tanh(logits / cfg.logits_softcap) * cfg.logits_softcap
+        return logits
+
+    def loss_fn(self, params, batch):
+        logits = self.forward(params, batch["tokens"],
+                              image_embeds=batch.get("image_embeds"))
+        labels = batch["labels"]
+        lg = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+        mask = batch.get("mask", jnp.ones_like(labels, dtype=jnp.float32))
+        loss = jnp.sum((logz - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss
+
+    # -- KV cache -------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Tuple[Dict, Dict]:
+        cfg = self.cfg
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        nl = self.n_super
+        if self.is_vlm:
+            kv_shape = (nl, self.n_self_per, batch, max_len, K, hd)
+            kv_logical = ("layers", "layers", "batch", "kv_seq", "kv", None)
+        else:
+            kv_shape = (nl, batch, max_len, K, hd)
+            kv_logical = ("layers", "batch", "kv_seq", "kv", None)
+        cache = {
+            "k": jnp.zeros(kv_shape, cfg.dtype),
+            "v": jnp.zeros(kv_shape, cfg.dtype),
+            "seq_lens": jnp.zeros((batch,), jnp.int32),
+        }
+        logical = {
+            "k": kv_logical,
+            "v": kv_logical,
+            "seq_lens": ("batch",),
+        }
+        if self.is_vlm:
+            T = cfg.num_frontend_tokens
+            cache["xk"] = jnp.zeros((nl, batch, T, K, hd), cfg.dtype)
+            cache["xv"] = jnp.zeros((nl, batch, T, K, hd), cfg.dtype)
+            logical["xk"] = ("layers", "batch", None, "kv", None)
+            logical["xv"] = ("layers", "batch", None, "kv", None)
+        return cache, logical
+
+    # -- prefill --------------------------------------------------------------
+    def prefill(self, params, tokens, cache, *, image_embeds=None, lengths=None):
+        """tokens: [B, S_prompt] right-padded; returns (cache, last_logits).
+        Stale cache beyond lengths is masked by decode_attention's seq_lens."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = params["embed"][tokens].astype(cfg.dtype)
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        if self.is_vlm:
+            def body(x, xs):
+                blk, kc, vc = xs
+                def inner(x2, sub):
+                    sblk, kcl, vcl = sub
+                    h = L.rms_norm(x2, sblk["ln1"], cfg.norm_eps)
+                    q, k, v = L.attn_qkv(sblk["attn"], h, cfg, positions)
+                    o = L.causal_attention(q, k, v)
+                    x2 = x2 + L.attn_out(sblk["attn"], o)
+                    h = L.rms_norm(x2, sblk["ln2"], cfg.norm_eps)
+                    x2 = x2 + L.mlp_apply(sblk["mlp"], h, cfg.activation)
+                    kcl = jax.lax.dynamic_update_slice_in_dim(kcl, k, 0, axis=1)
+                    vcl = jax.lax.dynamic_update_slice_in_dim(vcl, v, 0, axis=1)
+                    return x2, (kcl, vcl)
+                x, (kc, vc) = L.xscan(inner, x, (blk["selfs"], kc, vc))
+                x, (xk, xv) = self._cross_layer(blk, x, image_embeds)
+                return x, (kc, vc, xk, xv)
+            x, (kn, vn, xk, xv) = L.xscan(
+                _remat(body, cfg.remat_policy), x,
+                (params["blocks"], cache["k"], cache["v"]))
+            cache = dict(cache, k=kn, v=vn, xk=xk, xv=xv)
+        else:
+            def body(x, xs):
+                blk, kc, vc = xs
+                x, (k, v) = self._self_layer(blk, x, positions)
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, k, 0, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, v, 0, axis=1)
+                return x, (kc, vc)
+            x, (kn, vn) = L.xscan(
+                _remat(body, cfg.remat_policy), x,
+                (params["blocks"], cache["k"], cache["v"]))
+            cache = dict(cache, k=kn, v=vn)
+
+        x = L.rms_norm(x, params["lnf"], cfg.norm_eps)
+        if lengths is None:
+            lengths = jnp.full((B,), S, jnp.int32)
+        idx = jnp.clip(lengths - 1, 0)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+        last_logits = last @ params["head"]
+        if cfg.logits_softcap:
+            last_logits = jnp.tanh(last_logits / cfg.logits_softcap) * cfg.logits_softcap
+        cache["seq_lens"] = lengths
+        return cache, last_logits
+
+    # -- decode ---------------------------------------------------------------
+    def decode_step(self, params, tokens, cache):
+        """tokens: [B] int32 -> (cache, logits [B, V])."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = params["embed"][tokens][:, None, :].astype(cfg.dtype)  # [B,1,d]
+        seq_lens = cache["seq_lens"]
+        positions = seq_lens[:, None]  # new token position
+
+        def self_step(blk, x, kc, vc):
+            h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(blk["attn"], h, cfg, positions)
+            kc = L.cache_write_token(kc, k[:, 0], seq_lens)
+            vc = L.cache_write_token(vc, v[:, 0], seq_lens)
+            o = L.decode_attention(q[:, 0], kc, vc, seq_lens + 1)
+            x = x + L.attn_out(blk["attn"], o[:, None])
+            h = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+            x = x + L.mlp_apply(blk["mlp"], h, cfg.activation)
+            return x, kc, vc
+
+        if self.is_vlm:
+            def body(x, xs):
+                blk, kc, vc, xk, xv = xs
+                def inner(x2, sub):
+                    sblk, kcl, vcl = sub
+                    x2, kcl, vcl = self_step(sblk, x2, kcl, vcl)
+                    return x2, (kcl, vcl)
+                x, (kc, vc) = L.xscan(inner, x, (blk["selfs"], kc, vc))
+                # cross-attn reuses cached image K/V
+                h = L.rms_norm(x, blk["xln"], cfg.norm_eps)
+                q = (h @ blk["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+                o = self._cross_attend(q, xk, xv)
+                gate = jnp.tanh(blk["xgate"]).astype(x.dtype)
+                x = x + gate * L.attn_out(blk["xattn"], o)
+                h = L.rms_norm(x, blk["xln2"], cfg.norm_eps)
+                x = x + L.mlp_apply(blk["xmlp"], h, cfg.activation)
+                return x, (kc, vc)
+            x, (kn, vn) = L.xscan(
+                body, x, (params["blocks"], cache["k"], cache["v"],
+                          cache["xk"], cache["xv"]))
+        else:
+            def body(x, xs):
+                blk, kc, vc = xs
+                x, kc, vc = self_step(blk, x, kc, vc)
+                return x, (kc, vc)
+            x, (kn, vn) = L.xscan(
+                body, x, (params["blocks"], cache["k"], cache["v"]))
+
+        cache = dict(cache, k=kn, v=vn, seq_lens=seq_lens + 1)
+        x = L.rms_norm(x, params["lnf"], cfg.norm_eps)
+        logits = x[:, 0, :] @ params["head"]
+        if cfg.logits_softcap:
+            logits = jnp.tanh(logits / cfg.logits_softcap) * cfg.logits_softcap
+        return cache, logits

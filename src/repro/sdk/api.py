@@ -1,0 +1,121 @@
+"""AIOS SDK API functions (paper Table 4): thin typed wrappers over
+kernel.send_request. Every call blocks the calling agent thread on the
+syscall's event, exactly as the paper's thread-bound syscalls do.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from repro.sdk.query import (AccessQuery, LLMQuery, MemoryQuery, StorageQuery,
+                             ToolQuery)
+
+
+# -- LLM core ------------------------------------------------------------------
+def llm_chat(kernel, agent: str, prompt: List[int], *, max_new_tokens=32,
+             temperature=0.0, priority=0) -> Dict[str, Any]:
+    return kernel.send_request(agent, LLMQuery(
+        prompt=prompt, max_new_tokens=max_new_tokens, temperature=temperature,
+        priority=priority))
+
+
+def llm_chat_with_json_output(kernel, agent, prompt, **kw):
+    return kernel.send_request(agent, LLMQuery(
+        prompt=prompt, action_type="chat_with_json_output", **kw))
+
+
+def llm_call_tool(kernel, agent, prompt, **kw):
+    return kernel.send_request(agent, LLMQuery(
+        prompt=prompt, action_type="call_tool", **kw))
+
+
+# -- memory --------------------------------------------------------------------
+def create_memory(kernel, agent, content: str, metadata=None):
+    return kernel.send_request(agent, MemoryQuery(
+        "add_memory", {"content": content, "metadata": metadata or {}}))
+
+
+def get_memory(kernel, agent, memory_id: str):
+    return kernel.send_request(agent, MemoryQuery(
+        "get_memory", {"memory_id": memory_id}))
+
+
+def update_memory(kernel, agent, memory_id: str, content: str, metadata=None):
+    return kernel.send_request(agent, MemoryQuery(
+        "update_memory", {"memory_id": memory_id, "content": content,
+                          "metadata": metadata}))
+
+
+def delete_memory(kernel, agent, memory_id: str):
+    return kernel.send_request(agent, MemoryQuery(
+        "remove_memory", {"memory_id": memory_id}))
+
+
+def search_memories(kernel, agent, query: str, k: int = 3):
+    return kernel.send_request(agent, MemoryQuery(
+        "retrieve_memory", {"query": query, "k": k}))
+
+
+# -- storage -------------------------------------------------------------------
+def create_file(kernel, agent, file_path: str):
+    return kernel.send_request(agent, StorageQuery(
+        "sto_create_file", {"file_path": file_path}))
+
+
+def create_dir(kernel, agent, dir_path: str):
+    return kernel.send_request(agent, StorageQuery(
+        "sto_create_directory", {"dir_path": dir_path}))
+
+
+def write_file(kernel, agent, file_path: str, content: str,
+               collection: Optional[str] = None):
+    return kernel.send_request(agent, StorageQuery(
+        "sto_write", {"file_path": file_path, "content": content,
+                      "collection_name": collection}))
+
+
+def read_file(kernel, agent, file_path: str):
+    return kernel.send_request(agent, StorageQuery(
+        "sto_read", {"file_path": file_path}))
+
+
+def mount(kernel, agent, collection: str, dir_path: str):
+    return kernel.send_request(agent, StorageQuery(
+        "sto_mount", {"collection_name": collection, "dir_path": dir_path}))
+
+
+def retrieve_file(kernel, agent, collection: str, query: str, k: int = 3,
+                  keywords: Optional[str] = None):
+    return kernel.send_request(agent, StorageQuery(
+        "sto_retrieve", {"collection_name": collection, "query_text": query,
+                         "k": k, "keywords": keywords}))
+
+
+def rollback_file(kernel, agent, file_path: str, n: int = 1):
+    return kernel.send_request(agent, StorageQuery(
+        "sto_rollback", {"file_path": file_path, "n": n}))
+
+
+def share_file(kernel, agent, file_path: str):
+    return kernel.send_request(agent, StorageQuery(
+        "sto_share", {"file_path": file_path}))
+
+
+# -- tools ----------------------------------------------------------------------
+def call_tool(kernel, agent, tool_name: str, params: Dict[str, Any]):
+    return kernel.send_request(agent, ToolQuery(tool_name, params))
+
+
+# -- access ----------------------------------------------------------------------
+def add_privilege(kernel, agent, sid: str, tid: str):
+    return kernel.send_request(agent, AccessQuery(
+        "add_privilege", {"sid": sid, "tid": tid}))
+
+
+def check_access(kernel, agent, sid: str, tid: str):
+    return kernel.send_request(agent, AccessQuery(
+        "check_access", {"sid": sid, "tid": tid}))
+
+
+def ask_permission(kernel, agent, operation: str):
+    return kernel.send_request(agent, AccessQuery(
+        "ask_permission", {"operation": operation}))

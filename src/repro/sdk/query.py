@@ -1,0 +1,109 @@
+"""AIOS SDK query/response structures (paper Appendix B.1) and their mapping
+onto kernel syscalls. send_request lives on the kernel; queries know how to
+become syscalls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+from repro.core.syscall import (AccessSyscall, LLMSyscall, MemorySyscall,
+                                StorageSyscall, ToolSyscall)
+
+
+@dataclasses.dataclass
+class LLMQuery:
+    prompt: List[int]                       # token ids (ToyTokenizer encodes)
+    action_type: str = "chat"               # chat | chat_with_json_output | call_tool
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: int = -1
+    priority: int = 0
+    query_class: str = "llm"
+
+    def to_syscall(self, agent_name: str) -> LLMSyscall:
+        return LLMSyscall(agent_name, {
+            "prompt": self.prompt, "max_new_tokens": self.max_new_tokens,
+            "temperature": self.temperature, "eos_id": self.eos_id,
+            "action_type": self.action_type}, priority=self.priority)
+
+
+@dataclasses.dataclass
+class MemoryQuery:
+    operation_type: str                     # add|get|update|remove|retrieve (_memory)
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    query_class: str = "memory"
+
+    def to_syscall(self, agent_name: str) -> MemorySyscall:
+        return MemorySyscall(agent_name, {
+            "operation": self.operation_type, "params": self.params})
+
+
+@dataclasses.dataclass
+class StorageQuery:
+    operation_type: str                     # sto_*
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    query_class: str = "storage"
+
+    def to_syscall(self, agent_name: str) -> StorageSyscall:
+        return StorageSyscall(agent_name, {
+            "operation": self.operation_type, "params": self.params})
+
+
+@dataclasses.dataclass
+class ToolQuery:
+    tool_name: str
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    query_class: str = "tool"
+
+    def to_syscall(self, agent_name: str) -> ToolSyscall:
+        return ToolSyscall(agent_name, {
+            "tool_name": self.tool_name, "params": self.params})
+
+
+@dataclasses.dataclass
+class AccessQuery:
+    operation_type: str                     # add_privilege|check_access|ask_permission
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    query_class: str = "access"
+
+    def to_syscall(self, agent_name: str) -> AccessSyscall:
+        return AccessSyscall(agent_name, {
+            "operation": self.operation_type, "params": self.params})
+
+
+# -- response wrappers (paper B.1) -- kernels return dicts; these add typing --
+@dataclasses.dataclass
+class LLMResponse:
+    response_message: Optional[str] = None
+    tokens: Optional[List[int]] = None
+    tool_calls: Optional[List[Dict[str, Any]]] = None
+    finished: bool = False
+    error: Optional[str] = None
+    status_code: int = 200
+
+
+@dataclasses.dataclass
+class MemoryResponse:
+    memory_id: Optional[str] = None
+    content: Optional[str] = None
+    metadata: Optional[Dict[str, Any]] = None
+    search_results: Optional[List[Dict[str, Any]]] = None
+    success: bool = False
+    error: Optional[str] = None
+
+
+@dataclasses.dataclass
+class StorageResponse:
+    response_message: Optional[str] = None
+    finished: bool = False
+    error: Optional[str] = None
+    status_code: int = 200
+
+
+@dataclasses.dataclass
+class ToolResponse:
+    response_message: Optional[str] = None
+    finished: bool = False
+    error: Optional[str] = None
+    status_code: int = 200

@@ -1,0 +1,25 @@
+"""Deterministic toy tokenizer: hashed word-piece ids in [0, vocab).
+Round-trip is not required (random-weight models emit arbitrary ids); agents
+use it to turn task text into stable prompts of realistic lengths.
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+from typing import List
+
+
+class ToyTokenizer:
+    def __init__(self, vocab: int = 512):
+        self.vocab = vocab
+
+    def encode(self, text: str) -> List[int]:
+        toks = re.findall(r"\w+|[^\w\s]", text)
+        out = []
+        for t in toks:
+            h = int(hashlib.md5(t.encode()).hexdigest()[:8], 16)
+            out.append(1 + h % (self.vocab - 2))
+        return out or [1]
+
+    def decode(self, ids: List[int]) -> str:
+        return " ".join(f"tok{i}" for i in ids)

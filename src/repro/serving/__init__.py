@@ -1,0 +1,2 @@
+from repro.serving.engine import ServingEngine, ContextSnapshot  # noqa: F401
+from repro.serving.paging import PageAllocator  # noqa: F401

@@ -1,0 +1,357 @@
+"""Continuous-batching serving engine with preemption (context snapshot /
+restore) -- the TPU data plane under the AIOS kernel's LLM core.
+
+Fixed decode-slot batch: ``max_slots`` sequences decode together in one jit'd
+step (shape-stable, no recompiles). Sequences are admitted into free slots
+after a bucketed single-sequence prefill; preemption extracts a slot's cache
+slice to host memory (a ContextSnapshot -- the paper's logits-based context)
+and frees the slot.
+
+Sampling invariants (what makes context switch bit-exact, paper Table 7):
+  * every sequence has its own PRNG key; draw #n uses fold_in(key, n),
+    independent of slot placement and batch composition;
+  * ``next_tokens[slot]`` holds the *pending* token: sampled, not yet fed;
+  * ``counter`` = number of tokens sampled so far = len(generated) + 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+from repro.serving import sampler as smp
+from repro.serving.paging import PageAllocator
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return ((n + 4095) // 4096) * 4096
+
+
+@dataclasses.dataclass
+class ContextSnapshot:
+    """Paper §3.4 context. kind="logits": exact decode state (KV/recurrent
+    slices + pending token). kind="text": token ids only; restore re-prefills
+    (exact because prefill<->decode are consistent and sampling is replayed
+    from the same per-sequence stream)."""
+    kind: str
+    prompt: np.ndarray
+    generated: List[int]
+    seq_len: int
+    seq_key_data: np.ndarray
+    counter: int
+    state: Optional[List[np.ndarray]] = None
+    pending_token: Optional[int] = None
+
+    def nbytes(self) -> int:
+        n = self.prompt.nbytes + 8 * len(self.generated)
+        if self.state is not None:
+            n += sum(v.nbytes for v in self.state)
+        return n
+
+
+class _Slot:
+    __slots__ = ("active", "seq_id", "prompt", "generated", "counter",
+                 "max_new", "eos_id")
+
+    def __init__(self):
+        self.active = False
+        self.seq_id = None
+        self.prompt = None
+        self.generated: List[int] = []
+        self.counter = 0
+        self.max_new = 0
+        self.eos_id = -1
+
+
+class ServingEngine:
+    def __init__(self, cfg, *, max_slots: int = 8, max_len: int = 512,
+                 temperature: float = 0.0, rng_seed: int = 0,
+                 page_size: int = 16, hbm_pages: Optional[int] = None,
+                 params=None):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        if params is None:
+            params, _ = self.model.init_params(jax.random.key(rng_seed))
+        self.params = params
+        self.cache, self.cache_logical = self.model.init_cache(max_slots, max_len)
+        self._batch_axes = jax.tree.map(
+            lambda l: l.index("batch") if "batch" in l else None,
+            self.cache_logical,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+        self._piece_treedef = jax.tree.structure(self.cache)
+        self.slots = [_Slot() for _ in range(max_slots)]
+        self.seq_keys = jax.random.split(jax.random.key(rng_seed + 1), max_slots)
+        self.counters = jnp.zeros((max_slots,), jnp.int32)
+        self.next_tokens = jnp.zeros((max_slots,), jnp.int32)
+        pages = hbm_pages if hbm_pages is not None else max_slots * (
+            -(-max_len // page_size))
+        self.pager = PageAllocator(pages, page_size)
+        self._lock = threading.Lock()
+        self.stats = {"decode_steps": 0, "prefills": 0, "tokens": 0,
+                      "preemptions": 0, "restores": 0}
+        self._build_jits()
+
+    # -- jit'd primitives -------------------------------------------------------
+    def _build_jits(self):
+        model = self.model
+        baxes = self._batch_axes
+
+        @jax.jit
+        def decode(params, tokens, cache, active_mask):
+            cache, logits = model.decode_step(params, tokens, cache)
+            # inactive slots: pin seq_lens so garbage positions never run away
+            cache = dict(cache, seq_lens=jnp.where(
+                active_mask, cache["seq_lens"], 0))
+            return cache, logits
+
+        def insert(cache, piece, slot):
+            def upd(leaf, src, ax):
+                if ax is None:
+                    return leaf
+                return jax.lax.dynamic_update_slice_in_dim(
+                    leaf, src.astype(leaf.dtype), slot, axis=ax)
+            return jax.tree.map(upd, cache, piece, baxes)
+
+        def extract(cache, slot):
+            def get(leaf, ax):
+                if ax is None:
+                    return leaf
+                return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
+            return jax.tree.map(get, cache, baxes)
+
+        self._decode_jit = decode
+        self._insert_jit = jax.jit(insert)
+        self._extract_jit = jax.jit(extract)
+
+        @jax.jit
+        def set_seq_len(cache, slot, value):
+            return dict(cache, seq_lens=cache["seq_lens"].at[slot].set(value))
+        self._set_len_jit = set_seq_len
+
+        @jax.jit
+        def prefill(params, tokens, cache, lengths):
+            return model.prefill(params, tokens, cache, lengths=lengths)
+
+        @jax.jit
+        def prefill_img(params, tokens, cache, lengths, image_embeds):
+            return model.prefill(params, tokens, cache, lengths=lengths,
+                                 image_embeds=image_embeds)
+
+        self._prefill_jit = prefill
+        self._prefill_img_jit = prefill_img
+        self._cache_b1, _ = self.model.init_cache(1, self.max_len)
+
+        temp = self.temperature
+        vocab = self.cfg.vocab
+
+        @jax.jit
+        def sample1(logits, key, counter):
+            logits = smp.mask_padded_vocab(logits, vocab)
+            return smp.sample(logits[None], key[None], counter[None], temp)[0]
+
+        @jax.jit
+        def sample_all(logits, keys, counters):
+            logits = smp.mask_padded_vocab(logits, vocab)
+            return smp.sample(logits, keys, counters, temp)
+
+        self._sample1_jit = sample1
+        self._sample_all_jit = sample_all
+
+    # -- slot management ----------------------------------------------------------
+    def free_slot_count(self) -> int:
+        return sum(not s.active for s in self.slots)
+
+    def _find_free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                return i
+        return None
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.active]
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        return (self._find_free_slot() is not None and
+                prompt_len + max_new <= self.max_len and
+                self.pager.can_admit(prompt_len + max_new))
+
+    # -- admission (prefill) --------------------------------------------------------
+    def add_sequence(self, prompt, *, seq_id=None, max_new: int = 32,
+                     eos_id: int = -1, seq_key=None, image_embeds=None) -> int:
+        prompt = np.asarray(prompt, dtype=np.int32)
+        P = len(prompt)
+        with self._lock:
+            slot = self._find_free_slot()
+            if slot is None:
+                raise RuntimeError("no free decode slot")
+            if P + max_new > self.max_len:
+                raise RuntimeError(f"context {P + max_new} > max_len {self.max_len}")
+            if not self.pager.reserve(f"slot{slot}", P + max_new):
+                raise RuntimeError("HBM pages exhausted")
+            s = self.slots[slot]
+            s.active = True
+            s.seq_id = seq_id
+            s.prompt = prompt
+            s.generated = []
+            s.counter = 0
+            s.max_new = max_new
+            s.eos_id = eos_id
+        if seq_key is None:
+            seq_key = jax.random.key((int(np.sum(prompt)) * 2654435761 + P) % (2**31))
+        self.seq_keys = self.seq_keys.at[slot].set(seq_key)
+        self.counters = self.counters.at[slot].set(0)
+        self._prefill_into(slot, prompt, image_embeds=image_embeds)
+        self.stats["prefills"] += 1
+        return slot
+
+    def _prefill_into(self, slot: int, tokens: np.ndarray, *, image_embeds=None):
+        """Prefill `tokens` into `slot`'s cache and sample the pending token
+        with the slot's current counter (draw #counter)."""
+        P = len(tokens)
+        Spad = min(_bucket(P), self.max_len)
+        buf = np.zeros((1, Spad), np.int32)
+        buf[0, :P] = tokens
+        lengths = jnp.array([P], jnp.int32)
+        if image_embeds is not None:
+            cache1, logits = self._prefill_img_jit(
+                self.params, jnp.asarray(buf), self._cache_b1, lengths,
+                image_embeds)
+        else:
+            cache1, logits = self._prefill_jit(
+                self.params, jnp.asarray(buf), self._cache_b1, lengths)
+        self.cache = self._insert_jit(self.cache, cache1, slot)
+        s = self.slots[slot]
+        pending = self._sample1_jit(logits[0], self.seq_keys[slot],
+                                    jnp.int32(s.counter))
+        self.next_tokens = self.next_tokens.at[slot].set(pending)
+        s.counter += 1
+        self.counters = self.counters.at[slot].set(s.counter)
+
+    # -- decode ---------------------------------------------------------------------
+    def step(self) -> Dict[int, int]:
+        """One decode step for all active slots: feed each slot's pending
+        token (appending it to `generated`) and sample the next pending.
+        Returns {slot: token appended this step}."""
+        active = self.active_slots()
+        if not active:
+            return {}
+        mask_np = np.zeros(self.max_slots, bool)
+        mask_np[active] = True
+        mask = jnp.asarray(mask_np)
+        tokens = self.next_tokens
+        self.cache, logits = self._decode_jit(self.params, tokens, self.cache, mask)
+        nxt = self._sample_all_jit(logits, self.seq_keys, self.counters)
+        tok_host = np.asarray(tokens)
+        emitted: Dict[int, int] = {}
+        for i in active:
+            s = self.slots[i]
+            t = int(tok_host[i])
+            s.generated.append(t)
+            s.counter += 1
+            emitted[i] = t
+            self.pager.grow(f"slot{i}", len(s.prompt) + len(s.generated) + 1)
+        self.next_tokens = jnp.where(mask, nxt, self.next_tokens)
+        self.counters = self.counters + mask.astype(jnp.int32)
+        self.stats["decode_steps"] += 1
+        self.stats["tokens"] += len(active)
+        return emitted
+
+    def probe_failed_load(self, prompt) -> None:
+        """The 'without AIOS' trial-and-error cost (paper §1): speculatively
+        load a prompt with no admission control -- a real prefill's worth of
+        compute is burned and the result discarded, as when a GPU load OOMs."""
+        prompt = np.asarray(prompt, dtype=np.int32)
+        P = len(prompt)
+        Spad = min(_bucket(P), self.max_len)
+        buf = np.zeros((1, Spad), np.int32)
+        buf[0, :P] = prompt
+        _, logits = self._prefill_jit(self.params, jnp.asarray(buf),
+                                      self._cache_b1,
+                                      jnp.array([P], jnp.int32))
+        jax.block_until_ready(logits)
+        self.stats.setdefault("failed_loads", 0)
+        self.stats["failed_loads"] += 1
+
+    def is_done(self, slot: int) -> bool:
+        s = self.slots[slot]
+        if not s.active:
+            return True
+        if len(s.generated) >= s.max_new:
+            return True
+        return bool(s.generated) and s.generated[-1] == s.eos_id
+
+    def result(self, slot: int) -> List[int]:
+        return list(self.slots[slot].generated)
+
+    def free(self, slot: int):
+        with self._lock:
+            self.slots[slot].active = False
+            self.pager.release(f"slot{slot}")
+            self.cache = self._set_len_jit(self.cache, slot, 0)
+
+    # -- context switch (paper §3.4) ---------------------------------------------
+    def snapshot(self, slot: int, *, kind: str = "logits") -> ContextSnapshot:
+        """Suspend a sequence: capture its state and free the slot."""
+        s = self.slots[slot]
+        assert s.active
+        state = None
+        pending = int(self.next_tokens[slot])
+        if kind == "logits":
+            piece = self._extract_jit(self.cache, slot)
+            state = [np.asarray(x) for x in jax.tree.leaves(piece)]
+        snap = ContextSnapshot(
+            kind=kind, prompt=s.prompt.copy(), generated=list(s.generated),
+            seq_len=len(s.prompt) + len(s.generated),
+            seq_key_data=np.asarray(jax.random.key_data(self.seq_keys[slot])),
+            counter=s.counter, state=state, pending_token=pending)
+        max_new, eos = s.max_new, s.eos_id
+        snap.max_new, snap.eos_id = max_new, eos  # dynamic attrs for callers
+        self.free(slot)
+        self.stats["preemptions"] += 1
+        return snap
+
+    def restore(self, snap: ContextSnapshot, *, seq_id=None) -> int:
+        """Resume a suspended sequence into a free slot (exact continuation)."""
+        with self._lock:
+            slot = self._find_free_slot()
+            if slot is None:
+                raise RuntimeError("no free decode slot")
+            if not self.pager.reserve(f"slot{slot}", snap.seq_len + 1):
+                raise RuntimeError("HBM pages exhausted")
+            s = self.slots[slot]
+            s.active = True
+            s.seq_id = seq_id
+            s.prompt = snap.prompt
+            s.generated = list(snap.generated)
+            s.max_new = getattr(snap, "max_new", 32)
+            s.eos_id = getattr(snap, "eos_id", -1)
+        key = jax.random.wrap_key_data(jnp.asarray(snap.seq_key_data))
+        self.seq_keys = self.seq_keys.at[slot].set(key)
+        if snap.kind == "logits":
+            piece = jax.tree.unflatten(
+                self._piece_treedef, [jnp.asarray(x) for x in snap.state])
+            self.cache = self._insert_jit(self.cache, piece, slot)
+            self.next_tokens = self.next_tokens.at[slot].set(snap.pending_token)
+            s.counter = snap.counter
+            self.counters = self.counters.at[slot].set(snap.counter)
+        else:  # text-based: re-prefill prompt + generated prefix, re-draw pending
+            s.counter = snap.counter - 1   # pending token is re-drawn
+            self.counters = self.counters.at[slot].set(s.counter)
+            ctx = np.concatenate([snap.prompt,
+                                  np.asarray(snap.generated, np.int32)]) \
+                if snap.generated else snap.prompt
+            self._prefill_into(slot, ctx)
+        self.stats["restores"] += 1
+        return slot

@@ -1,0 +1,5 @@
+from repro.training.optimizer import AdamW, Adafactor, make_optimizer, warmup_cosine  # noqa: F401
+from repro.training.data import SyntheticLM, FileCorpus, Prefetcher  # noqa: F401
+from repro.training.checkpoint import CheckpointManager  # noqa: F401
+from repro.training.train_loop import Trainer, TrainConfig, make_train_step  # noqa: F401
+from repro.training.fault_tolerance import Heartbeat, StragglerMonitor, retry_with_backoff  # noqa: F401

@@ -1,0 +1,123 @@
+"""Checkpointing for fault tolerance and elastic restarts.
+
+Checkpoints are mesh-agnostic: leaves are gathered to host numpy and written
+as one .npz + a json manifest, so a restart may reshard onto a different mesh
+(elastic scaling). Writes are atomic (tmp dir + rename), optionally async
+(background thread -- training never blocks on disk), with retention of the
+latest K checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _savable(a: np.ndarray) -> Tuple[np.ndarray, str]:
+    """np.savez can't store ml_dtypes (bf16 etc); up-cast losslessly to fp32
+    and record the original dtype name for restore."""
+    name = a.dtype.name
+    if a.dtype.kind == "V" or name.startswith(("bfloat", "float8")):
+        return a.astype(np.float32), name
+    return a, name
+
+
+def _flatten(tree) -> Tuple[List[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(x) for x in leaves], treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.dir = os.path.abspath(directory)
+        os.makedirs(self.dir, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._inflight: Optional[threading.Thread] = None
+        self.stats = {"saves": 0, "restores": 0}
+
+    # -- save --------------------------------------------------------------------
+    def save(self, step: int, tree, *, blocking: Optional[bool] = None):
+        leaves, treedef = _flatten(tree)
+        block = (not self.async_save) if blocking is None else blocking
+        self.wait()            # one in-flight save at a time
+        if block:
+            self._write(step, leaves)
+        else:
+            self._inflight = threading.Thread(
+                target=self._write, args=(step, leaves), daemon=True)
+            self._inflight.start()
+
+    def wait(self):
+        if self._inflight is not None:
+            self._inflight.join()
+            self._inflight = None
+
+    def _write(self, step: int, leaves: List[np.ndarray]):
+        name = f"ckpt_{step:08d}"
+        tmp = os.path.join(self.dir, f".tmp_{name}_{time.time_ns()}")
+        os.makedirs(tmp, exist_ok=True)
+        savable = [_savable(a) for a in leaves]
+        np.savez(os.path.join(tmp, "leaves.npz"),
+                 **{f"l{i}": a for i, (a, _) in enumerate(savable)})
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "num_leaves": len(leaves),
+                       "dtypes": [d for _, d in savable],
+                       "time": time.time()}, f)
+        final = os.path.join(self.dir, name)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # atomic publish
+        self.stats["saves"] += 1
+        self._retain()
+
+    def _retain(self):
+        ckpts = self.list_steps()
+        for step in ckpts[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"ckpt_{step:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------------
+    def list_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("ckpt_") and os.path.isdir(os.path.join(self.dir, d)):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, *, step: Optional[int] = None,
+                shardings=None) -> Tuple[Any, int]:
+        """Restore into the structure of `template`. If `shardings` (a pytree
+        of NamedSharding) is given, leaves are placed with those shardings --
+        this is the elastic-resharding path (any mesh shape)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"ckpt_{step:08d}")
+        data = np.load(os.path.join(path, "leaves.npz"))
+        leaves = [data[f"l{i}"] for i in range(len(data.files))]
+        treedef = jax.tree.structure(template)
+        assert treedef.num_leaves == len(leaves), \
+            f"checkpoint has {len(leaves)} leaves, template {treedef.num_leaves}"
+        tmpl_leaves = jax.tree.leaves(template)
+        leaves = [a.astype(t.dtype) if hasattr(t, "dtype") and
+                  a.dtype != t.dtype else a
+                  for a, t in zip(leaves, tmpl_leaves)]
+        if shardings is not None:
+            shard_leaves = jax.tree.leaves(shardings)
+            leaves = [jax.device_put(a, s) for a, s in zip(leaves, shard_leaves)]
+        self.stats["restores"] += 1
+        return jax.tree.unflatten(treedef, leaves), step

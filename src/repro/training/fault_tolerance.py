@@ -1,0 +1,97 @@
+"""Fault-tolerance primitives for 1000+-node operation:
+  * retry_with_backoff -- transient-failure isolation for any step fn;
+  * StragglerMonitor  -- per-step deadline watchdog (flags slow replicas so
+    the launcher can reschedule/bypass them);
+  * Heartbeat         -- liveness file other processes / the launcher watch.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Callable, List, Optional
+
+
+def retry_with_backoff(fn: Callable, *, retries: int = 3, base_delay: float = 0.1,
+                       retryable=(RuntimeError, OSError), on_retry=None):
+    def wrapped(*a, **kw):
+        delay = base_delay
+        for attempt in range(retries + 1):
+            try:
+                return fn(*a, **kw)
+            except retryable as e:  # noqa: PERF203
+                if attempt == retries:
+                    raise
+                if on_retry:
+                    on_retry(attempt, e)
+                time.sleep(delay)
+                delay *= 2
+        raise RuntimeError("unreachable")
+    return wrapped
+
+
+class StragglerMonitor:
+    """Watchdog: arm() before a step, disarm() after. If a step overruns the
+    deadline, on_straggler fires (e.g. mark the replica for bypass; in the
+    serving kernel, requeue its syscalls to another core)."""
+
+    def __init__(self, deadline_s: float, on_straggler: Optional[Callable] = None):
+        self.deadline = deadline_s
+        self.on_straggler = on_straggler or (lambda info: None)
+        self.flagged: List[dict] = []
+        self._timer: Optional[threading.Timer] = None
+        self._step = 0
+
+    def arm(self, step: int):
+        self._step = step
+        self.disarm()
+        self._timer = threading.Timer(self.deadline, self._fire)
+        self._timer.daemon = True
+        self._timer.start()
+
+    def disarm(self):
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+    def _fire(self):
+        info = {"step": self._step, "deadline": self.deadline,
+                "time": time.time()}
+        self.flagged.append(info)
+        self.on_straggler(info)
+
+
+class Heartbeat:
+    def __init__(self, path: str, interval_s: float = 5.0):
+        self.path = path
+        self.interval = interval_s
+        self._stop = threading.Event()
+        self._t: Optional[threading.Thread] = None
+
+    def start(self):
+        self._stop.clear()
+        self._t = threading.Thread(target=self._beat, daemon=True)
+        self._t.start()
+        return self
+
+    def _beat(self):
+        while not self._stop.is_set():
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"time": time.time(), "pid": os.getpid()}, f)
+            os.replace(tmp, self.path)
+            self._stop.wait(self.interval)
+
+    def stop(self):
+        self._stop.set()
+        if self._t:
+            self._t.join(timeout=2)
+
+    @staticmethod
+    def alive(path: str, stale_s: float = 30.0) -> bool:
+        try:
+            with open(path) as f:
+                return time.time() - json.load(f)["time"] < stale_s
+        except (OSError, ValueError, KeyError):
+            return False

@@ -1,0 +1,137 @@
+"""Optimizers in pure JAX (no external deps): AdamW with dtype-configurable
+moments (bf16 moments for the 480B-class archs -- DESIGN.md §5), Adafactor
+for memory-tight configs, global-norm clipping, warmup+cosine schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_ratio: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable = warmup_cosine(3e-4, 100, 10000)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        b1, b2 = self.b1, self.b2
+
+        def upd(g, mu, nu, p):
+            g32 = g.astype(jnp.float32)
+            mu32 = mu.astype(jnp.float32) * b1 + g32 * (1 - b1)
+            nu32 = nu.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+            mu_hat = mu32 / (1 - b1 ** step.astype(jnp.float32))
+            nu_hat = nu32 / (1 - b2 ** step.astype(jnp.float32))
+            delta = mu_hat / (jnp.sqrt(nu_hat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - self.lr(step) * delta
+            return (new_p.astype(p.dtype), mu32.astype(mu.dtype),
+                    nu32.astype(nu.dtype))
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, gnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second moments: O(n+m) state per (n,m) matrix -- for configs
+    where even bf16 AdamW moments don't fit."""
+    lr: Callable = warmup_cosine(1e-3, 100, 10000)
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_norm: float = 1.0
+
+    def init(self, params):
+        def rows(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 else \
+                jnp.zeros(p.shape, jnp.float32)
+
+        def cols(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+                if p.ndim >= 2 else jnp.zeros((1,), jnp.float32)
+        return {"vr": jax.tree.map(rows, params),
+                "vc": jax.tree.map(cols, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        beta = 1.0 - (step.astype(jnp.float32) + 1) ** (-self.decay)
+
+        def upd(g, vr, vc, p):
+            g32 = jnp.square(g.astype(jnp.float32)) + self.eps
+            if p.ndim >= 2:
+                vr2 = beta * vr + (1 - beta) * jnp.mean(g32, axis=-1)
+                vc2 = beta * vc + (1 - beta) * jnp.mean(g32, axis=-2)
+                denom = jnp.sqrt(
+                    vr2[..., None] * vc2[..., None, :] /
+                    jnp.maximum(jnp.mean(vr2, axis=-1, keepdims=True)[..., None], self.eps))
+            else:
+                vr2 = beta * vr + (1 - beta) * g32
+                vc2 = vc
+                denom = jnp.sqrt(vr2)
+            delta = g.astype(jnp.float32) / jnp.maximum(denom, 1e-12)
+            new_p = p.astype(jnp.float32) - self.lr(step) * delta
+            return new_p.astype(p.dtype), vr2, vc2
+
+        out = jax.tree.map(upd, grads, state["vr"], state["vc"], params)
+        istup = lambda x: isinstance(x, tuple)
+        return (jax.tree.map(lambda t: t[0], out, is_leaf=istup),
+                {"vr": jax.tree.map(lambda t: t[1], out, is_leaf=istup),
+                 "vc": jax.tree.map(lambda t: t[2], out, is_leaf=istup),
+                 "step": step}, gnorm)
+
+
+def make_optimizer(name: str = "adamw", **kw):
+    if name == "adamw":
+        return AdamW(**kw)
+    if name == "adafactor":
+        return Adafactor(**kw)
+    raise KeyError(name)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests must see exactly 1 device (the dry-run sets its own flags in-process)
+os.environ.pop("XLA_FLAGS", None)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,119 @@
+"""Serving engine: admission control (no trial-and-error), page accounting,
+context-switch exactness (paper Table 7), batch-composition independence."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import PageAllocator, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return ServingEngine(get_config("tiny"), max_slots=4, max_len=128,
+                         rng_seed=0)
+
+
+def _drain(eng, slot):
+    while not eng.is_done(slot):
+        eng.step()
+    out = eng.result(slot)
+    eng.free(slot)
+    return out
+
+
+class TestPaging:
+    def test_reserve_grow_release(self):
+        pa = PageAllocator(num_pages=10, page_size=16)
+        assert pa.reserve("s0", 40)          # 3 pages
+        assert pa.used_pages == 3
+        assert pa.grow("s0", 70)             # -> 5 pages
+        assert pa.held("s0") == 5
+        assert not pa.reserve("s1", 100)     # 7 > 5 free
+        assert pa.failed_reservations == 1
+        assert pa.release("s0") == 5
+        assert pa.free_pages == 10
+
+    def test_admission_never_overcommits(self):
+        pa = PageAllocator(num_pages=4, page_size=16)
+        assert pa.can_admit(64)
+        assert not pa.can_admit(65)
+
+
+class TestEngine:
+    def test_generate_and_free(self, engine):
+        slot = engine.add_sequence(np.arange(1, 9), max_new=8)
+        out = _drain(engine, slot)
+        assert len(out) == 8
+        assert engine.free_slot_count() == engine.max_slots
+
+    def test_admission_rejects_when_full(self, engine):
+        slots = [engine.add_sequence(np.arange(1, 5), max_new=4)
+                 for _ in range(engine.max_slots)]
+        with pytest.raises(RuntimeError):
+            engine.add_sequence(np.arange(1, 5), max_new=4)
+        for s in slots:
+            _drain(engine, s)
+
+    def test_context_too_long_rejected(self, engine):
+        with pytest.raises(RuntimeError):
+            engine.add_sequence(np.arange(1, 100), max_new=100)
+
+    def test_batch_composition_independence(self):
+        """A sequence's output must not depend on what else is in the batch."""
+        cfg = get_config("tiny")
+        eng = ServingEngine(cfg, max_slots=4, max_len=128, rng_seed=0)
+        prompt = np.arange(1, 9)
+        alone = _drain(eng, eng.add_sequence(prompt, max_new=10))
+        # same prompt co-batched with others
+        others = [eng.add_sequence(np.arange(2, 20, 2), max_new=10),
+                  eng.add_sequence(np.array([9, 8, 7]), max_new=10)]
+        mine = eng.add_sequence(prompt, max_new=10)
+        while not eng.is_done(mine):
+            eng.step()
+        together = eng.result(mine)
+        assert alone == together
+
+    @pytest.mark.parametrize("kind", ["logits", "text"])
+    @pytest.mark.parametrize("temperature", [0.0, 0.7])
+    def test_context_switch_exact(self, kind, temperature):
+        """Paper Table 7: outputs with and without a mid-generation context
+        switch must match exactly (BLEU/BERTScore 1.0 <=> identical ids)."""
+        cfg = get_config("tiny")
+        eng = ServingEngine(cfg, max_slots=4, max_len=128,
+                            temperature=temperature, rng_seed=1)
+        prompt = np.arange(1, 9)
+        ref = _drain(eng, eng.add_sequence(prompt, max_new=12))
+
+        slot = eng.add_sequence(prompt, max_new=12)
+        for _ in range(5):
+            eng.step()
+        snap = eng.snapshot(slot, kind=kind)
+        # interleave unrelated work
+        other = eng.add_sequence(np.arange(5, 50, 5), max_new=6)
+        _drain(eng, other)
+        slot = eng.restore(snap)
+        out = _drain(eng, slot)
+        assert out == ref, (kind, temperature)
+
+    def test_snapshot_accounting(self):
+        cfg = get_config("tiny")
+        eng = ServingEngine(cfg, max_slots=2, max_len=128, rng_seed=2)
+        slot = eng.add_sequence(np.arange(1, 9), max_new=8)
+        used_before = eng.pager.used_pages
+        assert used_before > 0
+        eng.step()
+        snap = eng.snapshot(slot)
+        assert eng.pager.used_pages == 0          # pages released on preempt
+        assert snap.nbytes() > 0                  # host pool now holds state
+        slot = eng.restore(snap)
+        assert eng.pager.used_pages > 0
+        _drain(eng, slot)
+
+    def test_failed_load_probe_counts(self):
+        cfg = get_config("tiny")
+        eng = ServingEngine(cfg, max_slots=1, max_len=64, rng_seed=3)
+        s = eng.add_sequence(np.arange(1, 5), max_new=4)
+        eng.probe_failed_load(np.arange(1, 9))
+        assert eng.stats["failed_loads"] == 1
+        _drain(eng, s)

@@ -1,0 +1,86 @@
+"""Serving-side fault tolerance: multi-core pools, core-fault retry (the
+context snapshot bounds lost work to one quantum), straggler-adjacent
+behaviour of the pool router."""
+import threading
+import time
+
+import pytest
+
+from repro.agents import register_builtin_tools
+from repro.core import AIOSKernel
+from repro.core.llm_core import LLMCorePool
+from repro.sdk.query import LLMQuery
+
+
+def _llm(agent, max_new=6):
+    return LLMQuery(prompt=list(range(1, 9)),
+                    max_new_tokens=max_new).to_syscall(agent)
+
+
+def test_multi_core_pool_serves_concurrently():
+    k = AIOSKernel(arch="tiny", scheduler="fifo", num_cores=2,
+                   engine_kw={"max_slots": 2, "max_len": 128})
+    register_builtin_tools(k.tools)
+    with k:
+        scs = [_llm(f"mc{i}") for i in range(6)]
+        for sc in scs:
+            k.submit(sc)
+        outs = [sc.join(timeout=300) for sc in scs]
+    assert all(len(o["tokens"]) == 6 for o in outs)
+    # both cores did work
+    assert all(c.executed > 0 for c in k.pool.cores)
+
+
+def test_pool_router_strategies():
+    k = AIOSKernel(arch="tiny", scheduler="fifo", num_cores=3,
+                   engine_kw={"max_slots": 2, "max_len": 64})
+    pool = k.pool
+    # round robin cycles
+    seq = [pool.route().core_id for _ in range(6)]
+    assert sorted(set(seq)) == [0, 1, 2]
+    pool.strategy = "sequential"
+    assert pool.route().core_id == 0
+    k.stop()
+
+
+def test_core_fault_retries_and_completes():
+    """A core that faults once must not fail the syscall: the scheduler
+    requeues it and a healthy execution completes it."""
+    k = AIOSKernel(arch="tiny", scheduler="rr", quantum=4,
+                   engine_kw={"max_slots": 2, "max_len": 128})
+    register_builtin_tools(k.tools)
+    core = k.pool.cores[0]
+    original = core.execute_llm_syscall
+    state = {"failed": False}
+
+    def flaky(sc, quantum=None):
+        if not state["failed"]:
+            state["failed"] = True
+            raise RuntimeError("injected core fault")
+        return original(sc, quantum=quantum)
+
+    core.execute_llm_syscall = flaky
+    with k:
+        sc = _llm("faulty", max_new=8)
+        k.submit(sc)
+        out = sc.join(timeout=300)
+    assert out["finished"] and len(out["tokens"]) == 8
+    assert getattr(sc, "_retries", 0) == 1
+
+
+def test_core_fault_exhausts_retries():
+    k = AIOSKernel(arch="tiny", scheduler="fifo",
+                   engine_kw={"max_slots": 2, "max_len": 128})
+    register_builtin_tools(k.tools)
+    core = k.pool.cores[0]
+
+    def always_fail(sc, quantum=None):
+        raise RuntimeError("dead core")
+
+    core.execute_llm_syscall = always_fail
+    with k:
+        sc = _llm("doomed")
+        k.submit(sc)
+        with pytest.raises(RuntimeError, match="dead core"):
+            sc.join(timeout=300)
+    assert sc._retries == k.scheduler.llm_retries

@@ -1,0 +1,185 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracles,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Skv,H,K,hd,bq,bk", [
+    (1, 64, 64, 2, 2, 16, 32, 32),
+    (2, 96, 96, 4, 2, 32, 32, 32),
+    (2, 128, 128, 4, 1, 64, 64, 32),   # MQA
+    (1, 100, 100, 2, 2, 16, 32, 32),   # ragged vs block size
+])
+def test_flash_attention_matches_ref(dtype, B, Sq, Skv, H, K, hd, bq, bk):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = _rand(ks[0], (B, Sq, H, hd), dtype)
+    k = _rand(ks[1], (B, Skv, K, hd), dtype)
+    v = _rand(ks[2], (B, Skv, K, hd), dtype)
+    out = ops.flash_attention(q, k, v, backend="interpret", block_q=bq, block_k=bk)
+    exp = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [16, 40])
+def test_flash_attention_window(window):
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = _rand(ks[0], (2, 96, 4, 32), jnp.float32)
+    k = _rand(ks[1], (2, 96, 2, 32), jnp.float32)
+    v = _rand(ks[2], (2, 96, 2, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, window=window, backend="interpret",
+                              block_q=32, block_k=32)
+    exp = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(out, exp, atol=2e-4, rtol=2e-4)
+
+
+def test_flash_attention_jnp_backend_equals_ref():
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = _rand(ks[0], (1, 64, 2, 16), jnp.float32)
+    k = _rand(ks[1], (1, 64, 2, 16), jnp.float32)
+    v = _rand(ks[2], (1, 64, 2, 16), jnp.float32)
+    out = ops.flash_attention(q, k, v, backend="jnp")
+    exp = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, exp, atol=0, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,K,hd,bk", [
+    (2, 64, 2, 2, 16, 32),
+    (3, 130, 4, 2, 32, 64),
+    (1, 257, 4, 1, 64, 64),
+])
+def test_decode_attention_matches_ref(dtype, B, S, H, K, hd, bk):
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = _rand(ks[0], (B, H, hd), dtype)
+    kc = _rand(ks[1], (B, S, K, hd), dtype)
+    vc = _rand(ks[2], (B, S, K, hd), dtype)
+    sl = jnp.asarray(np.linspace(1, S, B).astype(np.int32))
+    out = ops.decode_attention(q, kc, vc, sl, backend="interpret", block_k=bk)
+    exp = ref.decode_attention_ref(q, kc, vc, sl)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@given(seq_lens=st.lists(st.integers(1, 96), min_size=2, max_size=2),
+       window=st.sampled_from([0, 24]))
+@settings(max_examples=10, deadline=None)
+def test_decode_attention_property(seq_lens, window):
+    """Property: decode attention over a cache only depends on the first
+    seq_len positions (garbage beyond is masked)."""
+    ks = jax.random.split(jax.random.key(4), 4)
+    B, S, H, K, hd = 2, 96, 2, 1, 16
+    q = _rand(ks[0], (B, H, hd), jnp.float32)
+    kc = _rand(ks[1], (B, S, K, hd), jnp.float32)
+    vc = _rand(ks[2], (B, S, K, hd), jnp.float32)
+    sl = jnp.asarray(seq_lens, jnp.int32)
+    base = ops.decode_attention(q, kc, vc, sl, window=window, backend="interpret")
+    # corrupt cache beyond each sequence's length -- output must not change
+    noise = _rand(ks[3], (B, S, K, hd), jnp.float32) * 100
+    mask = (jnp.arange(S)[None, :, None, None] >= sl[:, None, None, None])
+    kc2 = jnp.where(mask, noise, kc)
+    vc2 = jnp.where(mask, noise, vc)
+    out = ops.decode_attention(q, kc2, vc2, sl, window=window, backend="interpret")
+    np.testing.assert_allclose(base, out, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rglru
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,W,bb,bw,bt", [
+    (2, 128, 64, 2, 32, 32),
+    (4, 256, 128, 2, 64, 64),
+    (1, 64, 256, 1, 128, 64),
+])
+def test_rglru_matches_ref(B, T, W, bb, bw, bt):
+    ks = jax.random.split(jax.random.key(5), 3)
+    log_a = -jnp.abs(jax.random.normal(ks[0], (B, T, W))) * 0.5
+    bx = jax.random.normal(ks[1], (B, T, W))
+    h0 = jax.random.normal(ks[2], (B, W))
+    h, hl = ops.rglru(log_a, bx, h0, backend="interpret",
+                      block_b=bb, block_w=bw, block_t=bt)
+    h_ref, hl_ref = ref.rglru_ref(log_a, bx, h0)
+    np.testing.assert_allclose(h, h_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(hl, hl_ref, atol=1e-4, rtol=1e-4)
+
+
+@given(decay=st.floats(0.01, 2.0), t_split=st.integers(1, 7))
+@settings(max_examples=10, deadline=None)
+def test_rglru_chunking_invariance(decay, t_split):
+    """Property: running the recurrence in two chunks (carrying h) equals one
+    pass -- the exact invariant the kernel's scratch carry relies on."""
+    B, T, W = 2, 8, 16
+    ks = jax.random.split(jax.random.key(6), 3)
+    log_a = -jnp.abs(jax.random.normal(ks[0], (B, T, W))) * decay
+    bx = jax.random.normal(ks[1], (B, T, W))
+    h0 = jax.random.normal(ks[2], (B, W))
+    full, _ = ref.rglru_ref(log_a, bx, h0)
+    h1, carry = ref.rglru_ref(log_a[:, :t_split], bx[:, :t_split], h0)
+    h2, _ = ref.rglru_ref(log_a[:, t_split:], bx[:, t_split:], carry)
+    np.testing.assert_allclose(jnp.concatenate([h1, h2], 1), full,
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,H,hd,chunk", [
+    (1, 32, 1, 8, 8),
+    (2, 64, 2, 16, 16),
+    (2, 96, 2, 32, 32),
+])
+def test_wkv6_matches_ref(B, T, H, hd, chunk):
+    ks = jax.random.split(jax.random.key(7), 6)
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd)) * 0.3
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    w = jnp.exp(-jnp.exp(jnp.clip(jax.random.normal(ks[3], (B, T, H, hd)),
+                                  -8, 0.7)))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.2
+    st0 = jax.random.normal(ks[5], (B, H, hd, hd)) * 0.1
+    out, s = ops.wkv6(r, k, v, w, u, st0, backend="interpret", chunk=chunk)
+    out_ref, s_ref = ref.wkv6_ref(r, k, v, w, u, st0)
+    np.testing.assert_allclose(out, out_ref, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(s, s_ref, atol=2e-3, rtol=2e-3)
+
+
+def test_wkv6_chunked_jnp_path_matches_sequential():
+    """models/rwkv6.wkv_chunked (jnp path) vs the sequential oracle."""
+    from repro.models.rwkv6 import wkv_chunked
+    ks = jax.random.split(jax.random.key(8), 6)
+    B, T, H, hd = 2, 64, 2, 16
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd)) * 0.3
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    w = jnp.exp(-jnp.exp(jnp.clip(jax.random.normal(ks[3], (B, T, H, hd)),
+                                  -8, 0.7)))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.2
+    st0 = jnp.zeros((B, H, hd, hd))
+    out, s = wkv_chunked(r, k, v, w, u, st0)
+    out_ref, s_ref = ref.wkv6_ref(r, k, v, w, u, st0)
+    np.testing.assert_allclose(out, out_ref, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(s, s_ref, atol=2e-3, rtol=2e-3)

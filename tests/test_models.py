@@ -1,0 +1,114 @@
+"""Per-architecture smoke tests (reduced configs, deliverable f) and
+prefill<->decode consistency -- the invariant the serving engine and the
+paper's Table-7 exactness claim rest on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get_config
+from repro.models import build_model
+
+ARCHS = all_archs()
+
+
+def _inputs(cfg, B=2, S=64, key=1):
+    tokens = jax.random.randint(jax.random.key(key), (B, S), 0, cfg.vocab)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["image_embeds"] = jax.random.normal(
+            jax.random.key(key + 1), (B, cfg.num_frontend_tokens, cfg.d_model),
+            cfg.dtype)
+    return tokens, kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one train step on the reduced config: output shapes and
+    no NaNs (the per-arch smoke gate)."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params, logical = model.init_params(jax.random.key(0))
+    assert jax.tree.structure(params) == jax.tree.structure(
+        logical, is_leaf=lambda x: isinstance(x, tuple))
+    B, S = 2, 64
+    tokens, kw = _inputs(cfg, B, S)
+    logits = model.forward(params, tokens, **kw)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+    batch = {"tokens": tokens, "labels": tokens, **kw}
+    from repro.training.optimizer import AdamW
+    from repro.training.train_loop import make_train_step
+    opt = AdamW()
+    step = jax.jit(make_train_step(model, opt))
+    opt_state = opt.init(params)
+    params2, _, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params must actually change
+    delta = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                      b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(params2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """Split prefill+decode must equal one-shot prefill (exactness substrate
+    for context switching)."""
+    cfg = get_config(arch, smoke=True).replace(dtype=jnp.float32,
+                                               param_dtype=jnp.float32)
+    model = build_model(cfg)
+    params, _ = model.init_params(jax.random.key(0))
+    B, S, P = 2, 48, 23
+    tokens, kw = _inputs(cfg, B, S)
+
+    cache_a, _ = model.init_cache(B, S + 8)
+    cache_a, lg_ref = model.prefill(params, tokens, cache_a, **kw)
+
+    cache, _ = model.init_cache(B, S + 8)
+    cache, lg = model.prefill(params, tokens[:, :P], cache, **kw)
+    for t in range(P, S):
+        cache, lg = model.decode_step(params, tokens[:, t], cache)
+    err = float(jnp.max(jnp.abs(lg - lg_ref)))
+    scale = float(jnp.max(jnp.abs(lg_ref)))
+    assert err < 1e-3 * max(scale, 1.0), (arch, err, scale)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "rwkv6-1.6b",
+                                  "recurrentgemma-2b"])
+def test_ragged_prefill_lengths(arch):
+    """Right-padded prefill with per-sequence lengths must match per-sequence
+    unpadded prefill."""
+    cfg = get_config(arch, smoke=True).replace(dtype=jnp.float32,
+                                               param_dtype=jnp.float32)
+    model = build_model(cfg)
+    params, _ = model.init_params(jax.random.key(0))
+    S = 40
+    lengths = [17, 33]
+    tokens = jax.random.randint(jax.random.key(5), (2, S), 0, cfg.vocab)
+    cache, _ = model.init_cache(2, S + 8)
+    cache, lg = model.prefill(params, tokens, cache,
+                              lengths=jnp.asarray(lengths, jnp.int32))
+    for b, L in enumerate(lengths):
+        c1, _ = model.init_cache(1, S + 8)
+        c1, lg1 = model.prefill(params, tokens[b:b + 1, :L], c1)
+        err = float(jnp.max(jnp.abs(lg1[0] - lg[b])))
+        assert err < 1e-3, (arch, b, err)
+
+
+def test_param_counts_match_published_scale():
+    """Analytic parameter counts should land near the published sizes."""
+    # moonshot: the assigned 48L x 64e x 1408ff implies ~28B total (the
+    # "16b" name comes from the 27-layer Moonlight original; the assignment's
+    # numbers are authoritative -- DESIGN.md §4). musicgen-large is 3.3B.
+    expect = {"granite-3-8b": 8e9, "yi-9b": 9e9, "yi-6b": 6e9,
+              "nemotron-4-15b": 15e9, "arctic-480b": 480e9,
+              "moonshot-v1-16b-a3b": 28e9, "rwkv6-1.6b": 1.6e9,
+              "llama-3.2-vision-90b": 90e9, "recurrentgemma-2b": 2.7e9,
+              "musicgen-large": 3.3e9}
+    for arch, target in expect.items():
+        n = get_config(arch).param_count()
+        assert 0.55 * target < n < 1.45 * target, (arch, n, target)

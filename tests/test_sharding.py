@@ -1,0 +1,109 @@
+"""Distribution plumbing: logical->PartitionSpec rules, duplicate-axis guard,
+vocab padding, collective-bytes HLO parser, input_specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import all_archs, get_config, get_shapes
+from repro.configs.base import LONG_500K, TRAIN_4K
+from repro.distributed.sharding import (DEFAULT_RULES, logical_to_spec,
+                                        rules_for, spec_tree)
+
+
+class FakeMesh:
+    def __init__(self, axis_names):
+        self.axis_names = axis_names
+
+
+def test_logical_to_spec_basic():
+    rules = {"embed": None, "heads": "model", "batch": ("pod", "data")}
+    assert logical_to_spec(("embed", "heads"), rules) == P(None, "model")
+    assert logical_to_spec(("batch", None), rules) == P(("pod", "data"))
+    assert logical_to_spec((None, None), rules) == P()
+
+
+def test_duplicate_mesh_axis_dropped():
+    rules = {"a": "model", "b": "model"}
+    # second use of "model" must be dropped, not duplicated
+    assert logical_to_spec(("a", "b"), rules) == P("model")
+
+
+def test_rules_for_filters_missing_axes():
+    cfg = get_config("tiny")
+    r = rules_for(cfg, FakeMesh(("data", "model")))
+    assert r["batch"] == ("data",) or r["batch"] == "data"
+    r2 = rules_for(cfg, FakeMesh(("pod", "data", "model")))
+    assert set(r2["batch"]) == {"pod", "data"}
+
+
+def test_fsdp_rules():
+    cfg = get_config("arctic-480b")
+    assert cfg.fsdp
+    r = rules_for(cfg, FakeMesh(("data", "model")))
+    assert r["embed"] == "data"
+
+
+def test_spec_tree_maps_leaves():
+    logical = {"w": ("embed", "mlp"), "b": ("norm",)}
+    rules = rules_for(get_config("tiny"), FakeMesh(("data", "model")))
+    specs = spec_tree(logical, rules)
+    assert specs["w"] == P(None, "model")
+    assert specs["b"] == P()
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_padded_vocab_divisible_by_model_axis(arch):
+    cfg = get_config(arch)
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab >= cfg.vocab
+    assert cfg.padded_vocab % 16 == 0   # TP16 clean split
+
+
+def test_shapes_assignment():
+    """All 10 archs x 4 shapes defined; long_500k runs only for sub-quadratic
+    archs (skip reasons recorded for the rest)."""
+    archs = all_archs()
+    assert len(archs) == 10
+    total = 0
+    runnable_long = []
+    for arch in archs:
+        shapes = get_shapes(arch)
+        assert [s.name for s in shapes] == ["train_4k", "prefill_32k",
+                                            "decode_32k", "long_500k"]
+        total += len(shapes)
+        long = shapes[3]
+        if long.skip is None:
+            runnable_long.append(arch)
+    assert total == 40
+    assert sorted(runnable_long) == ["recurrentgemma_2b", "rwkv6_1_6b"]
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ar = f32[256,128]{1,0} all-reduce(f32[256,128]{1,0} %x), replica_groups=...
+  %ag = (bf16[8,4]{1,0}, bf16[8,4]{1,0}) all-gather-start(bf16[4,4] %y)
+  %agd = bf16[8,4]{1,0} all-gather-done((bf16[8,4], bf16[8,4]) %ag)
+  %rs = bf16[4,4]{1,0} reduce-scatter(bf16[8,4] %z), dimensions={0}
+  %cp = u32[16]{0} collective-permute(u32[16] %w)
+  %add = f32[2]{0} add(f32[2] %a, f32[2] %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 256 * 128 * 4
+    assert out["all-gather"] == 2 * 8 * 4 * 2      # start tuple, done skipped
+    assert out["reduce-scatter"] == 4 * 4 * 2
+    assert out["collective-permute"] == 16 * 4
+    assert out["counts"]["all-reduce"] == 1
+
+
+def test_input_specs():
+    from repro.models.api import input_specs
+    cfg = get_config("llama-3.2-vision-90b")
+    sp = input_specs(cfg, TRAIN_4K)
+    assert sp["tokens"].shape == (256, 4096)
+    assert sp["image_embeds"].shape == (256, cfg.num_frontend_tokens,
+                                        cfg.d_model)
+    cfg2 = get_config("rwkv6-1.6b")
+    spd = input_specs(cfg2, LONG_500K)
+    assert spd["tokens"].shape == (1,)

@@ -1,0 +1,128 @@
+"""Prefix-cache reuse, two agent-serving scenarios:
+
+* multiturn -- each agent resubmits a grown conversation (previous prompt +
+  previous generation + a new turn); with the cache ON the shared prefix is
+  restored and only the new suffix is decoded in (restore-then-extend), with
+  it OFF every turn re-prefills from token zero.
+* shared-prompt -- concurrent agents of one framework submit an identical
+  long prompt (shared system preamble + task template); with the cache ON
+  only the first admission prefills, the rest are exact hits.
+
+Reports wall-time speedups, prefills skipped, tokens restored from cache, and
+an exactness check (tokens with the cache on must equal tokens with it off).
+On the CPU-hosted tiny model the multiturn win is mostly in skipped prefills
+(decode steps dominate wall time); shared-prompt shows the wall-clock win.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import TINY, shared_params
+from repro.serving import PrefixCache, ServingEngine
+
+
+def _conversation(eng: ServingEngine, *, base_len: int, turns: int,
+                  max_new: int, delta: int, seed: int):
+    """One agent's multi-turn conversation; returns per-turn generations."""
+    rng = np.random.default_rng(seed)
+    prompt = list(rng.integers(1, TINY.vocab - 1, base_len))
+    outs = []
+    for turn in range(turns):
+        slot = eng.add_sequence(np.asarray(prompt, np.int32), max_new=max_new)
+        while not eng.is_done(slot):
+            eng.step()
+        g = eng.result(slot)
+        eng.harvest_prefix(slot)
+        eng.free(slot)
+        outs.append(list(g))
+        new_turn = list(rng.integers(1, TINY.vocab - 1, delta))
+        prompt = prompt + g + new_turn
+    return outs
+
+
+def _shared_prompt(eng: ServingEngine, *, agents: int, prompt_len: int,
+                   max_new: int):
+    """Concurrent agents of one framework submit the same long prompt (shared
+    system preamble + task template): with the cache ON only the first
+    admission prefills; every other is an exact hit."""
+    rng = np.random.default_rng(12345)
+    prompt = np.asarray(rng.integers(1, TINY.vocab - 1, prompt_len), np.int32)
+    outs = []
+    for _ in range(agents):
+        slot = eng.add_sequence(prompt, max_new=max_new)
+        while not eng.is_done(slot):
+            eng.step()
+        outs.append(eng.result(slot))
+        eng.harvest_prefix(slot)
+        eng.free(slot)
+    return outs
+
+
+def run(agents: int = 3, turns: int = 4, base_len: int = 140, delta: int = 6,
+        max_new: int = 8, max_len: int = 512, shared_agents: int = 8,
+        shared_len: int = 480, quiet: bool = False) -> Dict:
+    params = shared_params()
+    rows = []
+    outputs = {"multiturn": {}, "shared": {}}
+    for mode in ("off", "on"):
+        eng = ServingEngine(
+            TINY, max_slots=4, max_len=max_len, params=params,
+            prefix_cache=PrefixCache() if mode == "on" else None)
+        # warm ALL jits outside the timed section: prefill at the measured
+        # buckets, decode, and (cache on) the suffix-extension scan chunks --
+        # a 2-turn conversation with the measured delta/max_new hits them all
+        _conversation(eng, base_len=base_len, turns=2, max_new=max_new,
+                      delta=delta, seed=997)
+        _shared_prompt(eng, agents=1, prompt_len=shared_len, max_new=2)
+        if eng.prefix_cache is not None:
+            eng.prefix_cache.clear()
+        for k in eng.stats:
+            eng.stats[k] = 0
+        t0 = time.monotonic()
+        outputs["multiturn"][mode] = [
+            _conversation(eng, base_len=base_len, turns=turns,
+                          max_new=max_new, delta=delta, seed=seed)
+            for seed in range(agents)]
+        t1 = time.monotonic()
+        outputs["shared"][mode] = _shared_prompt(
+            eng, agents=shared_agents, prompt_len=shared_len, max_new=max_new)
+        t2 = time.monotonic()
+        rows.append({
+            "cache": mode,
+            "multiturn_seconds": round(t1 - t0, 3),
+            "shared_prompt_seconds": round(t2 - t1, 3),
+            "prefills": eng.stats["prefills"],
+            "prefix_hits": eng.stats["prefix_hits"],
+            "prefix_saved_tokens": eng.stats["prefix_saved_tokens"],
+            "prefix_extend_tokens": eng.stats["prefix_extend_tokens"],
+        })
+    exact = (outputs["multiturn"]["off"] == outputs["multiturn"]["on"] and
+             outputs["shared"]["off"] == outputs["shared"]["on"])
+    off, on = rows
+    summary = {
+        "exact_match": 1.0 if exact else 0.0,
+        "speedup_multiturn": round(
+            off["multiturn_seconds"] / on["multiturn_seconds"], 2),
+        "speedup_shared_prompt": round(
+            off["shared_prompt_seconds"] / on["shared_prompt_seconds"], 2),
+        "prefills_off": off["prefills"],
+        "prefills_on": on["prefills"],
+    }
+    if not quiet:
+        print(f"[prefix_cache] multiturn off {off['multiturn_seconds']}s -> "
+              f"on {on['multiturn_seconds']}s "
+              f"({summary['speedup_multiturn']}x) | shared-prompt off "
+              f"{off['shared_prompt_seconds']}s -> on "
+              f"{on['shared_prompt_seconds']}s "
+              f"({summary['speedup_shared_prompt']}x) | prefills "
+              f"{off['prefills']}->{on['prefills']}, {on['prefix_hits']} "
+              f"hits, {on['prefix_saved_tokens']} tokens restored, "
+              f"exact={exact}")
+    return {"rows": rows, **summary}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,22 +1,27 @@
 """Paper Figure 8: overall execution time and average waiting time as the
 number of concurrent agents grows (paper: 250 -> 2000 on a GPU; here scaled to
-the CPU host, same linearity claim)."""
+the CPU host, same linearity claim).
+
+Modes: none (direct trial-and-error), aios (1-core continuous batching),
+aios-pool (pool-wide continuous batching across 2 cores -- the central
+dispatcher admits to the least-loaded core)."""
 from __future__ import annotations
 
 from typing import Dict, List
 
 from benchmarks.common import (DirectRuntime, make_aios_kernel, run_agents,
-                               task_suite, warmup)
+                               task_suite, warm_cores, warmup)
 from repro.agents.frameworks import ReActAgent
 
 
-def run(agent_counts: List[int] = (8, 16, 32, 64), quiet=False) -> Dict:
+def run(agent_counts: List[int] = (8, 16, 32, 64), pool_cores: int = 2,
+        quiet=False) -> Dict:
     rows = []
     for n in agent_counts:
         tasks = task_suite(n)
         specs = [(ReActAgent, f"ag{i}", tasks[i]) for i in range(n)]
         row = {"agents": n}
-        for mode in ("none", "aios"):
+        for mode in ("none", "aios", "aios-pool"):
             if mode == "none":
                 rt = DirectRuntime()
                 warmup(rt)
@@ -24,10 +29,12 @@ def run(agent_counts: List[int] = (8, 16, 32, 64), quiet=False) -> Dict:
                 out = run_agents(rt, specs)
                 m = rt.metrics()
             else:
+                cores = pool_cores if mode == "aios-pool" else 1
                 k = make_aios_kernel(scheduler="batched", quantum=32,
-                                     max_slots=8)
+                                     max_slots=8, num_cores=cores)
                 with k:
                     warmup(k)
+                    warm_cores(k)
                     k.scheduler.completed.clear()
                     out = run_agents(k, specs)
                 m = k.metrics()
@@ -37,7 +44,9 @@ def run(agent_counts: List[int] = (8, 16, 32, 64), quiet=False) -> Dict:
         if not quiet:
             print(f"[scalability] n={n}: none {row['none_seconds']}s "
                   f"(wait {row['none_avg_wait_s']}s) | aios "
-                  f"{row['aios_seconds']}s (wait {row['aios_avg_wait_s']}s)")
+                  f"{row['aios_seconds']}s (wait {row['aios_avg_wait_s']}s) "
+                  f"| aios-pool {row['aios-pool_seconds']}s "
+                  f"(wait {row['aios-pool_avg_wait_s']}s)")
     # linearity check: time per agent roughly constant for aios
     times = [r["aios_seconds"] / r["agents"] for r in rows]
     rows.append({"aios_linearity_ratio_last_over_first":

@@ -12,11 +12,57 @@ import time
 from typing import Dict
 
 from benchmarks.common import (DirectRuntime, make_aios_kernel, run_agents,
-                               task_suite, warmup)
+                               task_suite, warm_cores, warmup)
 from repro.agents.frameworks import FRAMEWORKS
+from repro.sdk.query import LLMQuery
 
 
-def run(agents_per_framework: int = 6, frameworks=None, quiet=False) -> Dict:
+def _pool_tokens_per_s(scheduler: str, *, num_cores: int, n_syscalls: int,
+                       max_new: int) -> float:
+    """Raw LLM-plane pool throughput: submit n_syscalls concurrent LLM
+    syscalls (distinct prompts, so prefix caching is not the variable) and
+    measure completed tokens/sec across all cores."""
+    k = make_aios_kernel(scheduler=scheduler, quantum=16, max_slots=8,
+                         max_len=256, num_cores=num_cores)
+    with k:
+        warm_cores(k)
+        base = sum(c.engine.stats["tokens"] for c in k.pool.cores)
+        scs = [LLMQuery(prompt=list(range(i + 1, i + 13)),
+                        max_new_tokens=max_new).to_syscall(f"pool{i}")
+               for i in range(n_syscalls)]
+        t0 = time.monotonic()
+        for sc in scs:
+            k.submit(sc)
+        for sc in scs:
+            sc.join(timeout=600)
+        dt = time.monotonic() - t0
+        toks = sum(c.engine.stats["tokens"] for c in k.pool.cores) - base
+    return toks / dt
+
+
+def run_pool(num_cores: int = 2, n_syscalls: int = 16, max_new: int = 32,
+             quiet: bool = False) -> Dict:
+    """Pool-wide continuous batching vs exclusive FIFO at the same core
+    count: the dispatcher keeps every decode slot on every core full, so
+    tokens/sec must scale past the one-syscall-per-core ceiling."""
+    fifo = _pool_tokens_per_s("fifo", num_cores=num_cores,
+                              n_syscalls=n_syscalls, max_new=max_new)
+    batched = _pool_tokens_per_s("batched", num_cores=num_cores,
+                                 n_syscalls=n_syscalls, max_new=max_new)
+    pool = {"num_cores": num_cores, "n_syscalls": n_syscalls,
+            "fifo_tokens_per_s": round(fifo, 1),
+            "batched_tokens_per_s": round(batched, 1),
+            "speedup_batched_vs_fifo": round(batched / fifo, 2)}
+    if not quiet:
+        print(f"[throughput/pool] {num_cores} cores: fifo "
+              f"{pool['fifo_tokens_per_s']} tok/s, batched "
+              f"{pool['batched_tokens_per_s']} tok/s "
+              f"({pool['speedup_batched_vs_fifo']}x)")
+    return pool
+
+
+def run(agents_per_framework: int = 6, frameworks=None, pool_cores: int = 2,
+        quiet=False) -> Dict:
     frameworks = frameworks or list(FRAMEWORKS)
     tasks = task_suite(agents_per_framework)
     rows = []
@@ -55,7 +101,8 @@ def run(agents_per_framework: int = 6, frameworks=None, quiet=False) -> Dict:
                   f"({row['speedup_rr_vs_none']}x), "
                   f"batched {row['aios-batched_seconds']}s "
                   f"({row['speedup_batched_vs_none']}x)")
-    return {"rows": rows}
+    pool = run_pool(num_cores=pool_cores, quiet=quiet)
+    return {"rows": rows, "pool": pool}
 
 
 if __name__ == "__main__":

@@ -158,6 +158,20 @@ def run_agents(runtime, agent_specs, *, join_timeout=600) -> Dict[str, Any]:
     return {"results": results, "seconds": dt}
 
 
+def warm_cores(kernel):
+    """Compile every core engine's jits (prefill/decode/sample) outside the
+    timed section -- without this, whichever core admits its first syscall
+    mid-benchmark pays XLA compilation inside the measurement. The warm
+    prompt starts at 50 so it is not a prefix of the benchmark prompts (no
+    accidental prefix-cache hits)."""
+    for c in kernel.pool.cores:
+        eng = c.engine
+        slot = eng.add_sequence(np.arange(50, 58, dtype=np.int32), max_new=2)
+        while not eng.is_done(slot):
+            eng.step()
+        eng.free(slot)
+
+
 def warmup(runtime):
     """Compile/jit + tool-load warmup so timed sections measure steady state."""
     from repro.agents.frameworks import ReActAgent

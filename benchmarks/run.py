@@ -1,5 +1,7 @@
 """Benchmark runner: one module per paper table/figure. Prints a
-``name,us_per_call,derived`` CSV summary plus per-bench detail lines.
+``name,us_per_call,derived`` CSV summary plus per-bench detail lines, and
+writes one machine-readable ``BENCH_<name>.json`` per table so the perf
+trajectory is tracked across PRs (CI uploads them as artifacts).
 
   PYTHONPATH=src python -m benchmarks.run            (full suite)
   PYTHONPATH=src python -m benchmarks.run --quick    (reduced sizes)
@@ -9,11 +11,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main(argv=None) -> None:
@@ -24,12 +22,16 @@ def main(argv=None) -> None:
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks import (bench_agent_success, bench_context_switch,
-                            bench_kernels, bench_scalability,
-                            bench_scheduling, bench_throughput)
+                            bench_kernels, bench_prefix_cache,
+                            bench_scalability, bench_scheduling,
+                            bench_throughput)
 
     suite = [
         ("kernels(us/call)", bench_kernels.run, {}),
         ("context_switch(T7)", bench_context_switch.run, {}),
+        ("prefix_cache", bench_prefix_cache.run,
+         {"agents": 2 if args.quick else 3,
+          "turns": 3 if args.quick else 4}),
         ("scheduling(T6)", bench_scheduling.run,
          {"n_agents": 8 if args.quick else 16}),
         ("throughput(F6/7)", bench_throughput.run,
@@ -48,8 +50,8 @@ def main(argv=None) -> None:
         us = dt / max(len(out.get("rows", [1])), 1) * 1e6
         derived = _derive(name, out)
         csv_lines.append(f"{name},{us:.0f},{derived}")
-        with open(os.path.join(args.out,
-                               name.split("(")[0] + ".json"), "w") as f:
+        fname = "BENCH_" + name.split("(")[0] + ".json"
+        with open(os.path.join(args.out, fname), "w") as f:
             json.dump(out, f, indent=1)
     print("\n".join(csv_lines))
 
@@ -61,6 +63,11 @@ def _derive(name: str, out: dict) -> str:
     if name.startswith("context_switch"):
         ok = all(r["exact_match"] == 1.0 for r in rows)
         return f"exact_match_all={'1.0' if ok else 'FAIL'}"
+    if name.startswith("prefix_cache"):
+        return (f"exact_match={out['exact_match']};"
+                f"speedup_shared={out['speedup_shared_prompt']}x;"
+                f"speedup_multiturn={out['speedup_multiturn']}x;"
+                f"prefills={out['prefills_off']}->{out['prefills_on']}")
     if name.startswith("scheduling"):
         d = {r["strategy"]: r for r in rows}
         return (f"none={d['none']['overall_seconds']}s;"
@@ -70,8 +77,11 @@ def _derive(name: str, out: dict) -> str:
     if name.startswith("throughput"):
         sp = [r["speedup_batched_vs_none"] for r in rows]
         sp_rr = [r["speedup_rr_vs_none"] for r in rows]
+        pool = out.get("pool", {})
         return (f"max_speedup_rr={max(sp_rr):.2f}x;"
-                f"max_speedup_batched={max(sp):.2f}x")
+                f"max_speedup_batched={max(sp):.2f}x;"
+                f"pool_batched_vs_fifo="
+                f"{pool.get('speedup_batched_vs_fifo', 'n/a')}x")
     if name.startswith("scalability"):
         lin = rows[-1].get("aios_linearity_ratio_last_over_first")
         return f"aios_linearity={lin}"

@@ -17,6 +17,7 @@ from collections import deque
 from typing import Any, Dict, Optional
 
 from repro.serving.engine import ContextSnapshot
+from repro.serving.prefix_cache import PrefixCache
 
 
 class LRUKPool:
@@ -79,11 +80,16 @@ class LRUKPool:
 class ContextManager:
     def __init__(self, storage, *, mode: str = "logits",
                  budget_bytes: int = 256 << 20, k: int = 2,
-                 watermark: float = 0.8):
+                 watermark: float = 0.8,
+                 prefix_budget_bytes: int = 32 << 20):
         assert mode in ("logits", "text")
         self.mode = mode
         self.storage = storage
         self.pool = LRUKPool(budget_bytes, k=k, watermark=watermark)
+        # shared across every core in the pool: a prefix prefilled on one
+        # core is a hit on all of them (prefix_budget_bytes=0 disables)
+        self.prefix_cache = (PrefixCache(budget_bytes=prefix_budget_bytes)
+                             if prefix_budget_bytes > 0 else None)
         self.stats = {"saves": 0, "loads": 0, "spills": 0, "disk_loads": 0}
         self._lock = threading.Lock()
 

@@ -68,6 +68,9 @@ class AIOSKernel:
         ekw = dict(engine_kw or {})
         if shared_params is not None:
             ekw["params"] = shared_params
+        # one prefix cache for the whole pool: replicas are identical, so a
+        # prefill snapshot from any core restores on every core
+        ekw.setdefault("prefix_cache", self.context.prefix_cache)
         cores = [useLLM(cfg, self.context, core_id=i, **ekw)
                  for i in range(num_cores)]
         self.pool = LLMCorePool(cores)
@@ -124,6 +127,8 @@ class AIOSKernel:
     def metrics(self) -> Dict[str, Any]:
         m = dict(self.scheduler.metrics())
         m["context"] = dict(self.context.stats)
+        if self.context.prefix_cache is not None:
+            m["prefix_cache"] = dict(self.context.prefix_cache.stats)
         m["memory"] = dict(self.memory.stats)
         m["tools"] = dict(self.tools.stats)
         m["engine"] = [dict(c.engine.stats) for c in self.pool.cores]

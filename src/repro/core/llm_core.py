@@ -29,6 +29,12 @@ class LLMCore:
         self.busy_time = 0.0
         self.executed = 0
 
+    # -- occupancy ------------------------------------------------------------------
+    def free_capacity(self) -> Tuple[int, int]:
+        """Real occupancy for pool routing: (free decode slots, free HBM
+        pages). Bigger is less loaded."""
+        return (self.engine.free_slot_count(), self.engine.pager.free_pages)
+
     # -- admission ------------------------------------------------------------------
     def admit(self, sc: LLMSyscall) -> int:
         """Place a syscall into a decode slot (restore if it was suspended)."""
@@ -48,6 +54,7 @@ class LLMCore:
 
     def _finish(self, sc: LLMSyscall, slot: int) -> Dict[str, Any]:
         tokens = self.engine.result(slot)
+        self.engine.harvest_prefix(slot)   # grown resubmissions extend, not re-prefill
         self.engine.free(slot)
         return {"tokens": tokens, "finished": True,
                 "usage": {"new_tokens": len(tokens)}}
@@ -107,5 +114,5 @@ class LLMCorePool:
         if self.strategy == "sequential":
             return self.cores[0]
         if self.strategy == "least_loaded":
-            return min(self.cores, key=lambda c: c.engine.free_slot_count() * -1)
+            return max(self.cores, key=lambda c: c.free_capacity())
         return self.cores[next(self._rr)]

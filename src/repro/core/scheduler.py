@@ -147,6 +147,20 @@ class BaseScheduler:
 
     llm_retries = 2   # fault tolerance: failed cores lose at most one quantum
 
+    def _retry_or_fail(self, sc: Syscall, err: Exception, core_idx: int):
+        """Core fault: requeue so another core (or a recovered one) picks it
+        up; the context snapshot bounds lost work to one quantum (DESIGN.md
+        §5). Fail only after llm_retries."""
+        retries = getattr(sc, "_retries", 0)
+        if retries < self.llm_retries:
+            sc._retries = retries + 1
+            self.log(f"llm syscall pid={sc.pid} retry {sc._retries} after "
+                     f"core{core_idx} fault: {err}")
+            self.llm_queue.put(sc)
+        else:
+            sc.fail(str(err))
+            self._record(sc)
+
     def _llm_worker(self, core_idx: int):
         core = self.pool.cores[core_idx]
         while not self._stop.is_set():
@@ -159,18 +173,7 @@ class BaseScheduler:
                 finished, resp = core.execute_llm_syscall(
                     sc, quantum=self.llm_quantum)
             except Exception as e:  # noqa: BLE001
-                # core fault: requeue so another core (or a recovered one)
-                # picks it up; the context snapshot bounds lost work to one
-                # quantum (DESIGN.md §5). Fail only after llm_retries.
-                retries = getattr(sc, "_retries", 0)
-                if retries < self.llm_retries:
-                    sc._retries = retries + 1
-                    self.log(f"llm syscall pid={sc.pid} retry "
-                             f"{sc._retries} after core{core_idx} fault: {e}")
-                    self.llm_queue.put(sc)
-                else:
-                    sc.fail(str(e))
-                    self._record(sc)
+                self._retry_or_fail(sc, e, core_idx)
                 continue
             if finished:
                 sc.complete(resp)
@@ -220,45 +223,187 @@ class PriorityScheduler(BaseScheduler):
 
 
 class BatchedScheduler(BaseScheduler):
-    """Beyond-paper strategy (DESIGN.md §2): token-level continuous batching.
-    The LLM worker keeps every free decode slot filled from the queue and
-    steps all admitted syscalls together; RR fairness is kept via the
-    per-syscall quantum (preempt + requeue on expiry)."""
+    """Beyond-paper strategy (DESIGN.md §2): POOL-WIDE token-level continuous
+    batching. A central dispatcher thread owns admission: it pops the shared
+    LLM queue and routes each syscall to the least-loaded core by *real*
+    occupancy (free decode slots, then free HBM pages -- not blind
+    round-robin), applying backpressure when every core is saturated. Each
+    core's worker keeps its decode batch full from its private run queue and
+    steps all admitted syscalls together.
+
+    Fairness is cross-core: a quantum-expired syscall is suspended and
+    requeued on the CENTRAL queue, so it resumes on whichever core has
+    capacity (context snapshots are host-side and core-agnostic). The same
+    path gives fault tolerance: a core fault requeues its in-flight syscalls
+    centrally (up to ``llm_retries`` each) so healthy cores absorb them, and
+    no core idles while another has a backlog."""
     name = "batched"
 
     def __init__(self, *args, quantum: Optional[int] = 64, **kw):
         super().__init__(*args, **kw)
         self.llm_quantum = quantum
+        self._core_queues: List["queue.Queue"] = []
+        self._inflight: List[int] = []        # dispatched-not-finished per core
+        self._inflight_lock = threading.Lock()
+        self._dispatcher_held = 0             # 1 while the dispatcher holds a
+                                              # syscall it cannot yet place
 
+    # -- lifecycle ------------------------------------------------------------------
+    def start(self):
+        n = self.pool.num_cores
+        self._core_queues = [queue.Queue() for _ in range(n)]
+        self._inflight = [0] * n
+        self._dispatcher_held = 0
+        super().start()
+        t = threading.Thread(target=self._dispatcher,
+                             name=f"aios-{self.name}-dispatch", daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    # -- central dispatcher (control plane) -------------------------------------------
+    def _required_tokens(self, sc: Syscall) -> int:
+        rd = sc.request_data
+        # suspended syscalls need seq_len + remaining <= prompt + max_new,
+        # so this bound covers both fresh and resumed admissions
+        return len(rd["prompt"]) + rd.get("max_new_tokens", 32)
+
+    def _pick_core(self, sc: Syscall) -> Optional[int]:
+        """Least-loaded core that can actually hold `sc`: most free decode
+        slots (net of syscalls already dispatched there), pages as the
+        tie-break. None when the whole pool is saturated. Cores `sc` already
+        faulted on are avoided (a dead core has zero inflight and free pages,
+        so it would otherwise look least-loaded and attract its own retries);
+        they become candidates again only when every core has faulted."""
+        need = self._required_tokens(sc)
+        best, best_key = None, None
+        with self._inflight_lock:
+            inflight = list(self._inflight)
+        avoid = getattr(sc, "_faulted_cores", None)
+        candidates = list(range(self.pool.num_cores))
+        if avoid:
+            healthy = [i for i in candidates if i not in avoid]
+            candidates = healthy or candidates
+        for idx in candidates:
+            engine = self.pool.cores[idx].engine
+            free_slots = engine.max_slots - inflight[idx]
+            if free_slots <= 0:
+                continue
+            if not engine.pager.can_admit(need):
+                continue
+            key = (free_slots, engine.pager.free_pages)
+            if best_key is None or key > best_key:
+                best, best_key = idx, key
+        return best
+
+    def _dispatch(self, core_idx: int, sc: Syscall):
+        with self._inflight_lock:
+            self._inflight[core_idx] += 1
+        self._core_queues[core_idx].put(sc)
+
+    def _undispatch(self, core_idx: int, sc: Syscall):
+        """Hand a syscall back to the central queue (capacity race or
+        cross-core preemption): any core may pick it up next."""
+        with self._inflight_lock:
+            self._inflight[core_idx] -= 1
+        self.llm_queue.put(sc)
+
+    def _backlog(self) -> int:
+        return self.llm_queue.qsize() + self._dispatcher_held
+
+    def _infeasible_reason(self, sc: Syscall) -> Optional[str]:
+        """Non-None when NO core could ever admit `sc` (context longer than
+        max_len / more pages than exist): such a syscall must fail fast, not
+        ping-pong between dispatcher and workers forever."""
+        need = self._required_tokens(sc)
+        for core in self.pool.cores:
+            eng = core.engine
+            if (need <= eng.max_len and
+                    eng.pager.pages_for(need) <= eng.pager.num_pages):
+                return None
+        return f"context {need} tokens exceeds every core's capacity"
+
+    def _dispatcher(self):
+        pending: Optional[Syscall] = None
+        while not self._stop.is_set():
+            if pending is None:
+                try:
+                    pending = self.llm_queue.get(timeout=0.05)
+                    self._dispatcher_held = 1
+                except queue.Empty:
+                    continue
+                reason = self._infeasible_reason(pending)
+                if reason is not None:
+                    pending.fail(reason)
+                    self._record(pending)
+                    pending = None
+                    self._dispatcher_held = 0
+                    continue
+            idx = self._pick_core(pending)
+            if idx is None:
+                time.sleep(0.001)     # admission backpressure: pool saturated
+                continue
+            self._dispatch(idx, pending)
+            pending = None
+            self._dispatcher_held = 0
+        if pending is not None:        # stop(): don't strand the held syscall
+            self.llm_queue.put(pending)
+            self._dispatcher_held = 0
+
+    # -- per-core fault path ------------------------------------------------------------
+    def _retry_or_fail(self, sc: Syscall, err: Exception, core_idx: int):
+        """Base retry semantics + inflight accounting; the faulting core is
+        remembered so the central requeue lands on a healthy core."""
+        with self._inflight_lock:
+            self._inflight[core_idx] -= 1
+        faulted = getattr(sc, "_faulted_cores", None) or set()
+        faulted.add(core_idx)
+        sc._faulted_cores = faulted
+        super()._retry_or_fail(sc, err, core_idx)
+
+    # -- per-core worker (data plane) ----------------------------------------------------
     def _llm_worker(self, core_idx: int):
         core = self.pool.cores[core_idx]
         engine = core.engine
+        myq = self._core_queues[core_idx]
         running: Dict[int, Syscall] = {}      # slot -> syscall
         used: Dict[int, int] = {}             # slot -> steps this quantum
         while not self._stop.is_set():
-            # fill free slots from the queue (admission-controlled)
+            # admit everything the dispatcher routed here
             while engine.free_slot_count() > 0:
                 try:
-                    sc = self.llm_queue.get(timeout=0.0 if running else 0.05)
+                    sc = myq.get(timeout=0.0 if running else 0.05)
                 except queue.Empty:
                     break
                 sc.mark_running()
                 try:
                     slot = core.admit(sc)
                 except RuntimeError:
-                    # cannot admit right now (pages); push back and stop filling
-                    self.llm_queue.put(sc)
+                    # lost the capacity race (slots/pages went to another
+                    # admission); hand back for re-dispatch
+                    self._undispatch(core_idx, sc)
                     break
                 except Exception as e:  # noqa: BLE001
-                    sc.fail(str(e))
-                    self._record(sc)
+                    self._retry_or_fail(sc, e, core_idx)
                     continue
                 running[slot] = sc
                 used[slot] = 0
             if not running:
                 time.sleep(0.001)
                 continue
-            engine.step()
+            try:
+                engine.step()
+            except Exception as e:  # noqa: BLE001
+                # core fault mid-decode: every in-flight syscall loses at most
+                # this quantum; requeue centrally so healthy cores absorb them
+                for slot, sc in list(running.items()):
+                    try:
+                        engine.free(slot)
+                    except Exception:  # noqa: BLE001
+                        pass
+                    self._retry_or_fail(sc, e, core_idx)
+                running.clear()
+                used.clear()
+                continue
             for slot in list(running):
                 sc = running[slot]
                 used[slot] += 1
@@ -266,15 +411,19 @@ class BatchedScheduler(BaseScheduler):
                     resp = core._finish(sc, slot)
                     sc.complete(resp)
                     self._record(sc)
+                    with self._inflight_lock:
+                        self._inflight[core_idx] -= 1
                     del running[slot], used[slot]
                 elif self.llm_quantum and used[slot] >= self.llm_quantum and \
-                        self.llm_queue.qsize() > 0:
-                    # preempt only when someone is waiting
+                        (self._backlog() > 0 or myq.qsize() > 0):
+                    # quantum expired AND someone is waiting anywhere in the
+                    # pool: yield the slot; the dispatcher may resume this
+                    # generation on a different core
                     ctx_id = core._suspend(sc, slot)
                     sc.suspend(ctx_id)
-                    self.llm_queue.put(sc)
+                    self._undispatch(core_idx, sc)
                     del running[slot], used[slot]
-        # drain on stop: fail whatever is still running
+        # drain on stop: finish whatever is still running
         for slot, sc in running.items():
             try:
                 resp = core._finish(sc, slot)

@@ -1,0 +1,59 @@
+"""JAX version-compatibility shims.
+
+The repo pins jax/jaxlib in pyproject.toml, but the mesh + pallas APIs moved
+between 0.4.x and 0.5+:
+
+* ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)`` only
+  exist on newer jax; on 0.4.x every axis is implicitly "auto".
+* ``jax.set_mesh`` replaced entering the ``Mesh`` object as a context
+  manager.
+* ``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams``.
+
+Call sites use these helpers so the same code runs on both.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+# Pallas TPU compiler-params class under its current name
+PallasCompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+    _pltpu.TPUCompilerParams
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with auto axis_types when the installed jax supports
+    them, plain make_mesh otherwise (0.4.x: auto is the only behaviour)."""
+    axis_type = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map (0.5+) or jax.experimental.shard_map.shard_map (0.4.x)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def axis_size(axis_name):
+    """jax.lax.axis_size (0.5+) or the psum(1) idiom (0.4.x)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def set_mesh(mesh):
+    """Context manager binding `mesh` as the ambient mesh: jax.set_mesh on
+    newer jax, the Mesh object itself (enter/exit) on 0.4.x."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh

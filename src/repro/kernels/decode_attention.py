@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.distributed.compat import PallasCompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -100,7 +102,7 @@ def decode_attention(q, k_cache, v_cache, seq_lens, *, window: int = 0,
             pltpu.VMEM((1, 1), jnp.float32),
             pltpu.VMEM((1, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(seq_lens.astype(jnp.int32), qh, kh, vh)

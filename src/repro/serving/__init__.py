@@ -1,2 +1,3 @@
 from repro.serving.engine import ServingEngine, ContextSnapshot  # noqa: F401
 from repro.serving.paging import PageAllocator  # noqa: F401
+from repro.serving.prefix_cache import PrefixCache  # noqa: F401

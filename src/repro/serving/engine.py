@@ -40,20 +40,25 @@ class ContextSnapshot:
     """Paper §3.4 context. kind="logits": exact decode state (KV/recurrent
     slices + pending token). kind="text": token ids only; restore re-prefills
     (exact because prefill<->decode are consistent and sampling is replayed
-    from the same per-sequence stream)."""
+    from the same per-sequence stream). kind="prefix": a prefix-cache entry
+    (post-prefill KV slice + last-position logits; no sampling state -- the
+    admitting sequence supplies its own key/counter)."""
     kind: str
     prompt: np.ndarray
     generated: List[int]
     seq_len: int
-    seq_key_data: np.ndarray
-    counter: int
+    seq_key_data: Optional[np.ndarray] = None
+    counter: int = 0
     state: Optional[List[np.ndarray]] = None
     pending_token: Optional[int] = None
+    logits: Optional[np.ndarray] = None
 
     def nbytes(self) -> int:
         n = self.prompt.nbytes + 8 * len(self.generated)
         if self.state is not None:
             n += sum(v.nbytes for v in self.state)
+        if self.logits is not None:
+            n += self.logits.nbytes
         return n
 
 
@@ -71,42 +76,26 @@ class _Slot:
         self.eos_id = -1
 
 
-class ServingEngine:
-    def __init__(self, cfg, *, max_slots: int = 8, max_len: int = 512,
-                 temperature: float = 0.0, rng_seed: int = 0,
-                 page_size: int = 16, hbm_pages: Optional[int] = None,
-                 params=None):
-        self.cfg = cfg
-        self.model = build_model(cfg)
-        self.max_slots = max_slots
-        self.max_len = max_len
-        self.temperature = temperature
-        if params is None:
-            params, _ = self.model.init_params(jax.random.key(rng_seed))
-        self.params = params
-        self.cache, self.cache_logical = self.model.init_cache(max_slots, max_len)
-        self._batch_axes = jax.tree.map(
+class _EngineJits:
+    """One compiled program set per (model config, temperature). Every
+    ServingEngine replica with the same key shares it (the cores of an
+    ``LLMCorePool`` are identical), so adding a core to the pool never
+    re-compiles XLA programs -- without this, the Nth core pays full
+    prefill/decode compilation inside its first serving request.
+
+    All programs are pure in (params, cache): per-engine state stays in the
+    engine; shapes still specialize per call as usual."""
+
+    EXTEND_CHUNKS = (16, 8, 4, 2, 1)
+
+    def __init__(self, cfg, temperature: float):
+        self.model = model = build_model(cfg)
+        _, logical = model.init_cache(1, 8)
+        self.batch_axes = baxes = jax.tree.map(
             lambda l: l.index("batch") if "batch" in l else None,
-            self.cache_logical,
+            logical,
             is_leaf=lambda x: isinstance(x, tuple) and all(
                 isinstance(e, (str, type(None))) for e in x))
-        self._piece_treedef = jax.tree.structure(self.cache)
-        self.slots = [_Slot() for _ in range(max_slots)]
-        self.seq_keys = jax.random.split(jax.random.key(rng_seed + 1), max_slots)
-        self.counters = jnp.zeros((max_slots,), jnp.int32)
-        self.next_tokens = jnp.zeros((max_slots,), jnp.int32)
-        pages = hbm_pages if hbm_pages is not None else max_slots * (
-            -(-max_len // page_size))
-        self.pager = PageAllocator(pages, page_size)
-        self._lock = threading.Lock()
-        self.stats = {"decode_steps": 0, "prefills": 0, "tokens": 0,
-                      "preemptions": 0, "restores": 0}
-        self._build_jits()
-
-    # -- jit'd primitives -------------------------------------------------------
-    def _build_jits(self):
-        model = self.model
-        baxes = self._batch_axes
 
         @jax.jit
         def decode(params, tokens, cache, active_mask):
@@ -131,14 +120,29 @@ class ServingEngine:
                 return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
             return jax.tree.map(get, cache, baxes)
 
-        self._decode_jit = decode
-        self._insert_jit = jax.jit(insert)
-        self._extract_jit = jax.jit(extract)
+        def make_extend(n):
+            @jax.jit
+            def extend(params, tokens, cache):
+                """Decode `n` known tokens into a batch-1 cache piece via
+                lax.scan (prefix-cache suffix extension): one dispatch per
+                chunk instead of one per token. Returns the logits of the
+                last position."""
+                def body(c, tok):
+                    c, logits = model.decode_step(params, tok[None], c)
+                    return c, logits[0]
+                cache, logits = jax.lax.scan(body, cache, tokens)
+                return cache, logits[-1]
+            return extend
+
+        self.decode = decode
+        self.insert = jax.jit(insert)
+        self.extract = jax.jit(extract)
+        self.extend = {n: make_extend(n) for n in self.EXTEND_CHUNKS}
 
         @jax.jit
         def set_seq_len(cache, slot, value):
             return dict(cache, seq_lens=cache["seq_lens"].at[slot].set(value))
-        self._set_len_jit = set_seq_len
+        self.set_len = set_seq_len
 
         @jax.jit
         def prefill(params, tokens, cache, lengths):
@@ -149,12 +153,11 @@ class ServingEngine:
             return model.prefill(params, tokens, cache, lengths=lengths,
                                  image_embeds=image_embeds)
 
-        self._prefill_jit = prefill
-        self._prefill_img_jit = prefill_img
-        self._cache_b1, _ = self.model.init_cache(1, self.max_len)
+        self.prefill = prefill
+        self.prefill_img = prefill_img
 
-        temp = self.temperature
-        vocab = self.cfg.vocab
+        temp = temperature
+        vocab = cfg.vocab
 
         @jax.jit
         def sample1(logits, key, counter):
@@ -166,8 +169,69 @@ class ServingEngine:
             logits = smp.mask_padded_vocab(logits, vocab)
             return smp.sample(logits, keys, counters, temp)
 
-        self._sample1_jit = sample1
-        self._sample_all_jit = sample_all
+        self.sample1 = sample1
+        self.sample_all = sample_all
+
+
+_JIT_CACHE: Dict[Any, _EngineJits] = {}
+_JIT_CACHE_LOCK = threading.Lock()
+
+
+def _jits_for(cfg, temperature: float) -> _EngineJits:
+    key = (repr(cfg), float(temperature))
+    with _JIT_CACHE_LOCK:
+        js = _JIT_CACHE.get(key)
+        if js is None:
+            js = _JIT_CACHE[key] = _EngineJits(cfg, temperature)
+        return js
+
+
+class ServingEngine:
+    def __init__(self, cfg, *, max_slots: int = 8, max_len: int = 512,
+                 temperature: float = 0.0, rng_seed: int = 0,
+                 page_size: int = 16, hbm_pages: Optional[int] = None,
+                 params=None, prefix_cache=None):
+        self.cfg = cfg
+        self._jits = _jits_for(cfg, temperature)
+        self.model = self._jits.model
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        if params is None:
+            params, _ = self.model.init_params(jax.random.key(rng_seed))
+        self.params = params
+        self.cache, self.cache_logical = self.model.init_cache(max_slots, max_len)
+        self._batch_axes = self._jits.batch_axes
+        self._piece_treedef = jax.tree.structure(self.cache)
+        self.slots = [_Slot() for _ in range(max_slots)]
+        self.seq_keys = jax.random.split(jax.random.key(rng_seed + 1), max_slots)
+        self.counters = jnp.zeros((max_slots,), jnp.int32)
+        self.next_tokens = jnp.zeros((max_slots,), jnp.int32)
+        pages = hbm_pages if hbm_pages is not None else max_slots * (
+            -(-max_len // page_size))
+        self.pager = PageAllocator(pages, page_size)
+        self.prefix_cache = prefix_cache   # shared PrefixCache or None
+        self._last_logits = None           # device (max_slots, vocab), last step
+        self._lock = threading.Lock()
+        self.stats = {"decode_steps": 0, "prefills": 0, "tokens": 0,
+                      "preemptions": 0, "restores": 0,
+                      "prefix_hits": 0, "prefix_saved_tokens": 0,
+                      "prefix_extend_tokens": 0}
+        self._build_jits()
+
+    # -- jit'd primitives -------------------------------------------------------
+    def _build_jits(self):
+        js = self._jits
+        self._decode_jit = js.decode
+        self._insert_jit = js.insert
+        self._extract_jit = js.extract
+        self._set_len_jit = js.set_len
+        self._prefill_jit = js.prefill
+        self._prefill_img_jit = js.prefill_img
+        self._extend_jits = js.extend
+        self._sample1_jit = js.sample1
+        self._sample_all_jit = js.sample_all
+        self._cache_b1, _ = self.model.init_cache(1, self.max_len)
 
     # -- slot management ----------------------------------------------------------
     def free_slot_count(self) -> int:
@@ -212,8 +276,14 @@ class ServingEngine:
             seq_key = jax.random.key((int(np.sum(prompt)) * 2654435761 + P) % (2**31))
         self.seq_keys = self.seq_keys.at[slot].set(seq_key)
         self.counters = self.counters.at[slot].set(0)
-        self._prefill_into(slot, prompt, image_embeds=image_embeds)
-        self.stats["prefills"] += 1
+        hit = None
+        if self.prefix_cache is not None and image_embeds is None:
+            hit = self.prefix_cache.lookup(prompt)
+        if hit is not None:
+            self._admit_from_prefix(slot, prompt, hit)
+        else:
+            self._prefill_into(slot, prompt, image_embeds=image_embeds)
+            self.stats["prefills"] += 1
         return slot
 
     def _prefill_into(self, slot: int, tokens: np.ndarray, *, image_embeds=None):
@@ -231,13 +301,72 @@ class ServingEngine:
         else:
             cache1, logits = self._prefill_jit(
                 self.params, jnp.asarray(buf), self._cache_b1, lengths)
+            if self.prefix_cache is not None:
+                self._cache_prefix(tokens, cache1, logits[0])
+        self._activate_slot(slot, cache1, logits[0])
+
+    def _activate_slot(self, slot: int, cache1, logits_vec):
+        """Insert a ready batch-1 cache into `slot` and sample its pending
+        token with the slot's own key/counter -- the sampling protocol that
+        keeps prefill, restore and prefix-cache admission bit-identical."""
         self.cache = self._insert_jit(self.cache, cache1, slot)
         s = self.slots[slot]
-        pending = self._sample1_jit(logits[0], self.seq_keys[slot],
+        pending = self._sample1_jit(logits_vec, self.seq_keys[slot],
                                     jnp.int32(s.counter))
         self.next_tokens = self.next_tokens.at[slot].set(pending)
         s.counter += 1
         self.counters = self.counters.at[slot].set(s.counter)
+
+    # -- prefix cache (restore-then-extend instead of re-prefill) -----------------
+    def _cache_prefix(self, tokens: np.ndarray, cache1, logits_vec):
+        """Store a batch-1 cache tree + last-position logits under `tokens`.
+        Leaves stay on device: entries restore with zero host round-trips
+        (the prefix cache never spills to storage, unlike suspend contexts)."""
+        snap = ContextSnapshot(
+            kind="prefix", prompt=np.asarray(tokens, np.int32).copy(),
+            generated=[], seq_len=len(tokens),
+            state=list(jax.tree.leaves(cache1)), logits=logits_vec)
+        self.prefix_cache.insert(snap)
+
+    def _admit_from_prefix(self, slot: int, prompt: np.ndarray,
+                           snap: ContextSnapshot):
+        """Restore a cached prefill prefix and extend it over the remaining
+        suffix tokens -- no prefill. The suffix is decoded in power-of-two
+        scan chunks (compiled once per chunk size, ever). Bit-exact vs the
+        prefill path: the cache state is deterministic in the tokens, and the
+        pending token is sampled with this sequence's own key/counter."""
+        P = len(prompt)
+        cache1 = jax.tree.unflatten(
+            self._piece_treedef, [jnp.asarray(x) for x in snap.state])
+        if snap.seq_len == P:
+            logits_vec = jnp.asarray(snap.logits)
+        else:
+            suffix = np.asarray(prompt[snap.seq_len:], np.int32)
+            i = 0
+            for n in _EngineJits.EXTEND_CHUNKS:
+                while len(suffix) - i >= n:
+                    cache1, logits_vec = self._extend_jits[n](
+                        self.params, jnp.asarray(suffix[i:i + n]), cache1)
+                    i += n
+            self.stats["prefix_extend_tokens"] += len(suffix)
+            if self.prefix_cache is not None:
+                self._cache_prefix(prompt, cache1, logits_vec)
+        self._activate_slot(slot, cache1, logits_vec)
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_saved_tokens"] += snap.seq_len
+
+    def harvest_prefix(self, slot: int):
+        """Cache a finishing sequence's full context (prompt + generation) so
+        the grown multi-turn resubmission extends instead of re-prefilling.
+        Call after the finishing step, before free()."""
+        if self.prefix_cache is None or self._last_logits is None:
+            return
+        s = self.slots[slot]
+        if not s.active or not s.generated:
+            return
+        tokens = np.concatenate([s.prompt, np.asarray(s.generated, np.int32)])
+        piece = self._extract_jit(self.cache, slot)
+        self._cache_prefix(tokens, piece, jnp.asarray(self._last_logits[slot]))
 
     # -- decode ---------------------------------------------------------------------
     def step(self) -> Dict[int, int]:
@@ -252,6 +381,7 @@ class ServingEngine:
         mask = jnp.asarray(mask_np)
         tokens = self.next_tokens
         self.cache, logits = self._decode_jit(self.params, tokens, self.cache, mask)
+        self._last_logits = logits
         nxt = self._sample_all_jit(logits, self.seq_keys, self.counters)
         tok_host = np.asarray(tokens)
         emitted: Dict[int, int] = {}

@@ -1,0 +1,123 @@
+"""Prompt prefix cache: byte-budgeted LRU of post-prefill KV snapshots.
+
+The pool-wide admission path (BatchedScheduler dispatcher) hands every new
+prompt to ``ServingEngine.add_sequence``; multi-turn agents resubmit grown
+conversations whose prefix (previous prompt + previous generation) was already
+prefilled, and concurrent agents of one framework often share identical
+prompts outright. Entries are ``ContextSnapshot`` objects (the paper §3.4
+context machinery) with ``kind="prefix"``: the slot's cache slice captured
+right after prefill, plus the last-position logits so an exact hit can sample
+its pending token without touching the model.
+
+Keys are the raw token bytes of the cached prefix; lookup returns the longest
+cached entry that is a prefix of the incoming prompt, and the engine
+restores-then-extends (decode over the suffix) instead of re-prefilling.
+
+One PrefixCache instance is shared by every core in an ``LLMCorePool``
+(identical replicas => snapshots are interchangeable), so a prefix prefilled
+on core 0 is a hit on core 1.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Optional
+
+import numpy as np
+
+
+class PrefixCache:
+    """LRU over token-prefix -> snapshot. Values are duck-typed: anything
+    with ``.prompt`` (np.int32 tokens), ``.seq_len`` and ``.nbytes()``
+    (ContextSnapshot in practice -- kept un-imported to avoid a cycle with
+    serving.engine)."""
+
+    def __init__(self, budget_bytes: int = 32 << 20, max_entries: int = 64,
+                 min_tokens: int = 4):
+        assert budget_bytes > 0 and max_entries > 0
+        self.budget_bytes = budget_bytes
+        self.max_entries = max_entries
+        self.min_tokens = min_tokens
+        self._entries: "OrderedDict[bytes, Any]" = OrderedDict()
+        self._hit_counts: dict = {}   # key -> hits (hit-proven entries are
+                                      # evicted only after all unhit ones)
+        self._used = 0
+        self._lock = threading.Lock()
+        self.stats = {"hits": 0, "misses": 0, "inserts": 0, "evictions": 0,
+                      "hit_tokens": 0}
+
+    @staticmethod
+    def key_of(tokens) -> bytes:
+        return np.ascontiguousarray(np.asarray(tokens, np.int32)).tobytes()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def used_bytes(self) -> int:
+        return self._used
+
+    # -- lookup -----------------------------------------------------------------
+    def lookup(self, tokens) -> Optional[Any]:
+        """Longest cached entry whose tokens are a prefix of `tokens`
+        (at least ``min_tokens`` long). Touches the entry (LRU)."""
+        tok = np.asarray(tokens, np.int32)
+        with self._lock:
+            best_key, best = None, None
+            for key, snap in self._entries.items():
+                n = snap.seq_len
+                if n < self.min_tokens or n > len(tok):
+                    continue
+                if best is not None and n <= best.seq_len:
+                    continue
+                if key == tok[:n].tobytes():
+                    best_key, best = key, snap
+            if best is None:
+                self.stats["misses"] += 1
+                return None
+            self._entries.move_to_end(best_key)
+            self._hit_counts[best_key] = self._hit_counts.get(best_key, 0) + 1
+            self.stats["hits"] += 1
+            self.stats["hit_tokens"] += best.seq_len
+            return best
+
+    # -- insert -----------------------------------------------------------------
+    def insert(self, snap) -> bool:
+        """Insert (or refresh) the snapshot under its full token prefix."""
+        if snap.seq_len < self.min_tokens:
+            return False
+        nbytes = snap.nbytes()
+        if nbytes > self.budget_bytes:
+            return False
+        key = self.key_of(snap.prompt)
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._used -= old.nbytes()
+            self._entries[key] = snap
+            self._used += nbytes
+            self.stats["inserts"] += 1
+            while (self._used > self.budget_bytes or
+                   len(self._entries) > self.max_entries):
+                self._evict_one(protect=key)
+            return True
+
+    def _evict_one(self, protect: bytes):
+        """Oldest never-hit entry first; hit-proven entries (the shared
+        prompts this cache exists for) survive churn from one-shot harvest
+        inserts and go only when everything unproven is gone. The entry being
+        inserted is protected so a proven-full cache still admits newcomers."""
+        victim = next((k for k in self._entries
+                       if k != protect and not self._hit_counts.get(k)), None)
+        if victim is None:
+            victim = next(k for k in self._entries if k != protect)
+        snap = self._entries.pop(victim)
+        self._hit_counts.pop(victim, None)
+        self._used -= snap.nbytes()
+        self.stats["evictions"] += 1
+
+    def clear(self):
+        with self._lock:
+            self._entries.clear()
+            self._hit_counts.clear()
+            self._used = 0

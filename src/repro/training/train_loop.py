@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.distributed.compat import make_mesh, set_mesh
 from repro.distributed.sharding import logical_to_spec, rules_for, spec_tree
 from repro.models import build_model
 from repro.models.api import abstract_init
@@ -92,9 +93,8 @@ class Trainer:
         self.cfg = cfg
         self.tc = tc
         self.log = log
-        self.mesh = mesh if mesh is not None else jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        self.mesh = mesh if mesh is not None else make_mesh(
+            (1, 1), ("data", "model"))
         self.model = build_model(cfg)
         from repro.training.optimizer import warmup_cosine
         opt_kw = {"lr": warmup_cosine(tc.lr, tc.warmup, tc.steps)}
@@ -112,7 +112,7 @@ class Trainer:
         self.batch_spec = NamedSharding(
             self.mesh, logical_to_spec(("batch", "seq"), self.rules))
 
-        with jax.set_mesh(self.mesh):
+        with set_mesh(self.mesh):
             init_fn = jax.jit(
                 lambda k: self.model.init_params(k)[0],
                 out_shardings=self.param_sharding)
@@ -181,7 +181,7 @@ class Trainer:
                                      on_retry=lambda a, e: self.log(
                                          f"step retry {a}: {e}"))
         t0 = time.time()
-        with jax.set_mesh(self.mesh):
+        with set_mesh(self.mesh):
             for step in range(self.start_step, steps):
                 batch = next(it)
                 self.monitor.arm(step)

@@ -1,0 +1,45 @@
+"""Hypothesis compatibility layer: the property-based tests degrade to
+skipped tests when `hypothesis` is not installed (CI installs it via the
+``dev`` extra in pyproject.toml), instead of erroring the whole module at
+collection time.
+
+Usage in test modules::
+
+    from _hyp import given, settings, st
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for `hypothesis.strategies`: every strategy constructor
+        returns an inert placeholder (the decorated test is skipped anyway)."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+            return _strategy
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # zero-arg stub: the strategy-named parameters must not be
+            # mistaken for pytest fixtures
+            @pytest.mark.skip(
+                reason="hypothesis not installed (pip install -e .[dev])")
+            def _skipped():
+                pass
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco

@@ -117,3 +117,106 @@ class TestEngine:
         eng.probe_failed_load(np.arange(1, 9))
         assert eng.stats["failed_loads"] == 1
         _drain(eng, s)
+
+
+class TestPrefixCache:
+    """Pool-wide prompt prefix caching: restore-then-extend instead of
+    re-prefill, bit-exact with the cache on and off."""
+
+    def _mk(self, cache, params=None):
+        from repro.serving import PrefixCache
+        return ServingEngine(get_config("tiny"), max_slots=4, max_len=256,
+                             rng_seed=0, params=params,
+                             prefix_cache=PrefixCache() if cache else None)
+
+    def test_exact_hit_skips_prefill(self):
+        eng = self._mk(cache=True)
+        prompt = np.arange(1, 33)
+        first = _drain(eng, eng.add_sequence(prompt, max_new=6))
+        assert eng.stats["prefills"] == 1
+        second = _drain(eng, eng.add_sequence(prompt, max_new=6))
+        assert eng.stats["prefills"] == 1          # prefill skipped entirely
+        assert eng.stats["prefix_hits"] == 1
+        assert first == second                     # and tokens identical
+
+    def test_multi_turn_extend_bit_exact(self):
+        """A grown conversation (prev prompt + prev generation + new turn)
+        must decode-extend from the cached prefix and emit exactly the tokens
+        the cache-off engine produces."""
+        ref = self._mk(cache=False)
+        eng = self._mk(cache=True, params=ref.params)
+
+        def conversation(e):
+            prompt = list(range(1, 33))
+            outs = []
+            for turn in range(3):
+                slot = e.add_sequence(np.asarray(prompt, np.int32), max_new=6)
+                while not e.is_done(slot):
+                    e.step()
+                g = e.result(slot)
+                e.harvest_prefix(slot)
+                e.free(slot)
+                outs.append(list(g))
+                prompt = prompt + g + [40 + turn, 50 + turn]  # new user turn
+            return outs
+
+        assert conversation(ref) == conversation(eng)
+        assert ref.stats["prefills"] == 3
+        assert eng.stats["prefills"] == 1          # turns 2,3 extended
+        assert eng.stats["prefix_hits"] == 2
+        assert eng.stats["prefix_saved_tokens"] > 0
+
+    def test_lru_budget_eviction(self):
+        from repro.serving import PrefixCache
+        from repro.serving.engine import ContextSnapshot
+
+        def snap(tokens, nbytes):
+            s = ContextSnapshot(kind="prefix",
+                                prompt=np.asarray(tokens, np.int32),
+                                generated=[], seq_len=len(tokens),
+                                state=[np.zeros(nbytes, np.uint8)])
+            return s
+
+        pc = PrefixCache(budget_bytes=4096, max_entries=8, min_tokens=4)
+        assert pc.insert(snap(range(8), 1500))
+        assert pc.insert(snap(range(100, 108), 1500))
+        assert pc.insert(snap(range(200, 208), 1500))   # evicts the oldest
+        assert pc.stats["evictions"] >= 1
+        assert pc.lookup(list(range(8)) + [9]) is None  # evicted
+        assert pc.lookup(list(range(200, 208)) + [9]) is not None
+        assert not pc.insert(snap(range(300, 303), 64))  # below min_tokens
+
+    def test_longest_prefix_wins(self):
+        from repro.serving import PrefixCache
+        from repro.serving.engine import ContextSnapshot
+        pc = PrefixCache(min_tokens=2)
+        base = list(range(10, 30))
+        for n in (4, 8, 16):
+            pc.insert(ContextSnapshot(kind="prefix",
+                                      prompt=np.asarray(base[:n], np.int32),
+                                      generated=[], seq_len=n, state=[]))
+        hit = pc.lookup(np.asarray(base, np.int32))
+        assert hit is not None and hit.seq_len == 16
+
+    def test_pool_shares_prefix_across_cores(self):
+        """A prefix prefilled on one core must be a hit on any core: the
+        kernel gives every core the same PrefixCache instance."""
+        from repro.core import AIOSKernel
+        from repro.sdk.query import LLMQuery
+        k = AIOSKernel(arch="tiny", scheduler="batched", num_cores=2,
+                       engine_kw={"max_slots": 2, "max_len": 256})
+        assert (k.pool.cores[0].engine.prefix_cache
+                is k.pool.cores[1].engine.prefix_cache)
+        with k:
+            prompt = list(range(1, 33))
+            outs = []
+            for i in range(3):                      # sequential resubmissions
+                sc = LLMQuery(prompt=prompt,
+                              max_new_tokens=6).to_syscall(f"share{i}")
+                k.submit(sc)
+                outs.append(sc.join(timeout=300)["tokens"])
+            m = k.metrics()
+        assert outs[0] == outs[1] == outs[2]
+        assert m["prefix_cache"]["hits"] >= 2
+        total_prefills = sum(e["prefills"] for e in m["engine"])
+        assert total_prefills <= 1                  # only the first admission

@@ -13,8 +13,8 @@ from repro.sdk.query import LLMQuery
 
 
 def make_kernel(scheduler, **kw):
-    k = AIOSKernel(arch="tiny", scheduler=scheduler,
-                   engine_kw={"max_slots": 4, "max_len": 256}, **kw)
+    kw.setdefault("engine_kw", {"max_slots": 4, "max_len": 256})
+    k = AIOSKernel(arch="tiny", scheduler=scheduler, **kw)
     register_builtin_tools(k.tools)
     return k
 
@@ -104,6 +104,102 @@ def test_batched_scheduler_overlaps_and_matches_exclusive_outputs():
     assert outs["fifo"] == outs["batched"]
 
 
+def test_batched_pool_dispatches_by_occupancy():
+    """Pool-wide continuous batching: the central dispatcher must keep every
+    core busy (no core idles while another has a backlog) and complete all
+    syscalls exactly once."""
+    with make_kernel("batched", num_cores=2) as k:
+        scs = [_llm(f"pool{i}", max_new=12) for i in range(12)]
+        for sc in scs:
+            k.submit(sc)
+        outs = [sc.join(timeout=300) for sc in scs]
+    assert all(len(o["tokens"]) == 12 for o in outs)
+    per_core = [c.engine.stats["tokens"] for c in k.pool.cores]
+    assert all(t > 0 for t in per_core), per_core   # both cores did real work
+    done_pids = [s.pid for s in k.scheduler.completed if s.category == "llm"]
+    assert sorted(done_pids) == sorted(s.pid for s in scs)
+
+
+def test_batched_pool_matches_single_core_exclusive_outputs():
+    """Cross-core dispatch + shared prefix cache must not change tokens:
+    2-core batched == 1-core exclusive FIFO (replicas are identical)."""
+    prompts = [list(range(1, 9)), list(range(3, 20, 2)), [7, 5, 3],
+               list(range(2, 30, 3)), list(range(4, 11))]
+    outs = {}
+    for sched, cores in (("fifo", 1), ("batched", 2)):
+        with make_kernel(sched, num_cores=cores) as k:
+            scs = [LLMQuery(prompt=p, max_new_tokens=10).to_syscall(f"x{i}")
+                   for i, p in enumerate(prompts)]
+            for sc in scs:
+                k.submit(sc)
+            outs[sched] = [sc.join(timeout=300)["tokens"] for sc in scs]
+    assert outs["fifo"] == outs["batched"]
+
+
+def test_batched_preemption_fairness_long_job_yields():
+    """A long generation must yield its decode slot at the quantum boundary
+    when the queue is non-empty (here: the only slot), instead of running to
+    completion while the short job starves."""
+    with make_kernel("batched", quantum=4,
+                     engine_kw={"max_slots": 1, "max_len": 256}) as k:
+        long_sc = _llm("long", max_new=40)
+        k.submit(long_sc)
+        time.sleep(0.3)                      # long job admitted and decoding
+        short_sc = _llm("short", max_new=4)
+        k.submit(short_sc)
+        short_sc.join(timeout=300)
+        long_sc.join(timeout=300)
+    assert short_sc.end_time < long_sc.end_time
+    assert long_sc.quanta_used >= 1          # preempted, not run-to-completion
+    assert len(long_sc.response["tokens"]) == 40
+    assert len(short_sc.response["tokens"]) == 4
+
+
+def test_batched_fault_requeues_centrally():
+    """A core fault during batched admission must requeue the syscall on the
+    central queue (llm_retries), not fail it."""
+    with make_kernel("batched") as k:
+        core = k.pool.cores[0]
+        original = core.admit
+        state = {"failed": False}
+
+        def flaky(sc):
+            if not state["failed"]:
+                state["failed"] = True
+                raise ValueError("injected admission fault")
+            return original(sc)
+
+        core.admit = flaky
+        sc = _llm("faulty", max_new=6)
+        k.submit(sc)
+        out = sc.join(timeout=300)
+    assert out["finished"] and len(out["tokens"]) == 6
+    assert sc._retries == 1
+
+
+def test_batched_step_fault_retries_inflight():
+    """A core fault mid-decode requeues every in-flight syscall; they are
+    absorbed on retry within llm_retries."""
+    with make_kernel("batched") as k:
+        eng = k.pool.cores[0].engine
+        original = eng.step
+        state = {"failed": False}
+
+        def flaky_step():
+            if not state["failed"]:
+                state["failed"] = True
+                raise ValueError("injected decode fault")
+            return original()
+
+        eng.step = flaky_step
+        scs = [_llm(f"f{i}", max_new=6) for i in range(3)]
+        for sc in scs:
+            k.submit(sc)
+        outs = [sc.join(timeout=300) for sc in scs]
+    assert all(len(o["tokens"]) == 6 for o in outs)
+    assert any(getattr(sc, "_retries", 0) >= 1 for sc in scs)
+
+
 def test_metrics_populated():
     with make_kernel("rr") as k:
         scs = [_llm(f"m{i}", max_new=4) for i in range(3)]
@@ -114,3 +210,39 @@ def test_metrics_populated():
         m = k.metrics()
     assert m["completed"] == 3
     assert m["avg_wait"] > 0 and m["p90_wait"] >= m["avg_wait"] * 0.5
+
+
+def test_batched_infeasible_syscall_fails_fast():
+    """A syscall no core could ever admit (context > max_len) must fail at
+    dispatch, not spin between dispatcher and workers forever."""
+    with make_kernel("batched", num_cores=2,
+                     engine_kw={"max_slots": 2, "max_len": 64}) as k:
+        poison = LLMQuery(prompt=list(range(1, 60)),
+                          max_new_tokens=32).to_syscall("poison")
+        ok = _llm("ok", max_new=4)
+        k.submit(poison)
+        k.submit(ok)
+        assert len(ok.join(timeout=120)["tokens"]) == 4
+        with pytest.raises(RuntimeError, match="capacity"):
+            poison.join(timeout=120)
+    assert poison.status == "error"
+
+
+def test_batched_dead_core_does_not_attract_retries():
+    """A persistently faulty core has zero inflight and all pages free, so
+    naive least-loaded routing would keep feeding it its own retries until
+    llm_retries is exhausted. Retried syscalls must avoid the core they
+    faulted on: every syscall completes on the healthy core."""
+    with make_kernel("batched", num_cores=2) as k:
+        dead = k.pool.cores[1].engine
+
+        def always_fail():
+            raise ValueError("dead core")
+
+        dead.step = always_fail
+        scs = [_llm(f"d{i}", max_new=6) for i in range(8)]
+        for sc in scs:
+            k.submit(sc)
+        outs = [sc.join(timeout=300) for sc in scs]
+    assert all(len(o["tokens"]) == 6 for o in outs)
+    assert k.pool.cores[0].engine.stats["tokens"] > 0

@@ -2,8 +2,8 @@
 
 * multiturn -- each agent resubmits a grown conversation (previous prompt +
   previous generation + a new turn); with the cache ON the shared prefix is
-  restored and only the new suffix is decoded in (restore-then-extend), with
-  it OFF every turn re-prefills from token zero.
+  restored and only the new suffix is consumed by one chunked-prefill job,
+  with it OFF every turn re-prefills from token zero.
 * shared-prompt -- concurrent agents of one framework submit an identical
   long prompt (shared system preamble + task template); with the cache ON
   only the first admission prefills, the rest are exact hits.
@@ -72,8 +72,9 @@ def run(agents: int = 3, turns: int = 4, base_len: int = 140, delta: int = 6,
             TINY, max_slots=4, max_len=max_len, params=params,
             prefix_cache=PrefixCache() if mode == "on" else None)
         # warm ALL jits outside the timed section: prefill at the measured
-        # buckets, decode, and (cache on) the suffix-extension scan chunks --
-        # a 2-turn conversation with the measured delta/max_new hits them all
+        # buckets, decode, and (cache on) the suffix-extension chunk programs
+        # -- a 2-turn conversation with the measured delta/max_new hits them
+        # all
         _conversation(eng, base_len=base_len, turns=2, max_new=max_new,
                       delta=delta, seed=997)
         _shared_prompt(eng, agents=1, prompt_len=shared_len, max_new=2)

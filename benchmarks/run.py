@@ -5,6 +5,8 @@ trajectory is tracked across PRs (CI uploads them as artifacts).
 
   PYTHONPATH=src python -m benchmarks.run            (full suite)
   PYTHONPATH=src python -m benchmarks.run --quick    (reduced sizes)
+  PYTHONPATH=src python -m benchmarks.run --smoke    (CI fast path, <5 min:
+                                                      core signals only)
 """
 from __future__ import annotations
 
@@ -17,30 +19,41 @@ import time
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest sizes AND only the core-signal benches "
+                         "(prefill, prefix_cache, scheduling, kernels)")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args(argv)
+    quick = args.quick or args.smoke
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks import (bench_agent_success, bench_context_switch,
-                            bench_kernels, bench_prefix_cache,
+                            bench_kernels, bench_prefill, bench_prefix_cache,
                             bench_scalability, bench_scheduling,
                             bench_throughput)
 
     suite = [
         ("kernels(us/call)", bench_kernels.run, {}),
+        ("prefill", bench_prefill.run,
+         {"burst_sizes": (1, 4) if quick else (1, 2, 4, 8),
+          "prompt_lens": (96,) if args.smoke else (96, 224),
+          "repeats": 2 if quick else 3}),
         ("context_switch(T7)", bench_context_switch.run, {}),
         ("prefix_cache", bench_prefix_cache.run,
-         {"agents": 2 if args.quick else 3,
-          "turns": 3 if args.quick else 4}),
+         {"agents": 2 if quick else 3,
+          "turns": 3 if quick else 4}),
         ("scheduling(T6)", bench_scheduling.run,
-         {"n_agents": 8 if args.quick else 16}),
+         {"n_agents": 8 if quick else 16}),
         ("throughput(F6/7)", bench_throughput.run,
-         {"agents_per_framework": 4 if args.quick else 6,
-          "frameworks": ["react", "reflexion"] if args.quick else None}),
+         {"agents_per_framework": 4 if quick else 6,
+          "frameworks": ["react", "reflexion"] if quick else None}),
         ("scalability(F8)", bench_scalability.run,
-         {"agent_counts": [4, 8] if args.quick else [8, 16, 32, 64]}),
+         {"agent_counts": [4, 8] if quick else [8, 16, 32, 64]}),
         ("agent_success(T1)", bench_agent_success.run, {}),
     ]
+    if args.smoke:
+        keep = ("kernels", "prefill", "prefix_cache", "scheduling")
+        suite = [s for s in suite if s[0].split("(")[0] in keep]
 
     csv_lines = ["name,us_per_call,derived"]
     for name, fn, kw in suite:
@@ -60,6 +73,12 @@ def _derive(name: str, out: dict) -> str:
     rows = out.get("rows", [])
     if name.startswith("kernels"):
         return "|".join(f"{r['name']}={r['us_per_call']}" for r in rows)
+    if name.startswith("prefill"):
+        return (f"exact={out['exact_match']};"
+                f"engine_max={out['max_engine_speedup']}x;"
+                f"pool_burst4={out['speedup_burst4plus_pool']}x;"
+                f"dispatch={out['dispatch_reduction_burst4plus']}x;"
+                f"stall={out['decode_stall_reduction']}x")
     if name.startswith("context_switch"):
         ok = all(r["exact_match"] == 1.0 for r in rows)
         return f"exact_match_all={'1.0' if ok else 'FAIL'}"

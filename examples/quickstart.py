@@ -13,8 +13,9 @@ from repro.sdk import api  # noqa: E402
 
 
 def main():
-    # 1. boot the kernel: RR scheduler, 16-token quantum, one LLM core
-    kernel = AIOSKernel(arch="tiny", scheduler="rr", quantum=16,
+    # 1. boot the kernel: pool-wide batched scheduler (burst admission +
+    # continuous batching), 16-token quantum, one LLM core
+    kernel = AIOSKernel(arch="tiny", scheduler="batched", quantum=16,
                         engine_kw={"max_slots": 4, "max_len": 256})
     register_builtin_tools(kernel.tools)
 
@@ -32,7 +33,24 @@ def main():
                              {"expression": "(20-2)/3"})
         print("calculator:", calc["result"])
 
-        # 3. a full ReAct agent on top of the SDK
+        # 3. burst admission: submit several agents' prompts AT ONCE -- the
+        # kernel admits the burst as one batched chunked prefill instead of
+        # one XLA prefill per agent
+        from repro.sdk.query import LLMQuery
+        eng = kernel.pool.cores[0].engine
+        chunks_before = eng.stats["prefill_chunks"]
+        burst = [LLMQuery(prompt=list(range(1, 40 + 7 * i)),
+                          max_new_tokens=6).to_syscall(f"burst{i}")
+                 for i in range(4)]
+        for sc in burst:
+            kernel.submit(sc)
+        outs = [sc.join(timeout=120) for sc in burst]
+        print(f"burst of {len(burst)} admitted through "
+              f"{eng.stats['prefill_chunks'] - chunks_before} "
+              f"chunked-prefill dispatches; "
+              f"tokens: {[o['tokens'][:3] for o in outs]}")
+
+        # 4. a full ReAct agent on top of the SDK
         agent = FRAMEWORKS["react"](kernel, "react-demo")
         result = agent.run({"kind": "math", "expression": "(7+5)*3",
                             "expected": 36.0})

@@ -36,12 +36,16 @@ class LLMCore:
         return (self.engine.free_slot_count(), self.engine.pager.free_pages)
 
     # -- admission ------------------------------------------------------------------
-    def admit(self, sc: LLMSyscall) -> int:
-        """Place a syscall into a decode slot (restore if it was suspended)."""
+    def admit(self, sc: LLMSyscall, eager: bool = True) -> int:
+        """Place a syscall into a decode slot (restore if it was suspended).
+        With ``eager=False`` a fresh prompt only joins the engine's
+        chunked-prefill queue; the caller interleaves ``prefill_step()`` with
+        decode steps, so a burst routed to this core shares one batched
+        chunk dispatch instead of one prefill per sequence."""
         rd = sc.request_data
         if sc.context_id is not None:
             snap = self.ctx.load(sc.context_id)
-            slot = self.engine.restore(snap, seq_id=sc.pid)
+            slot = self.engine.restore(snap, seq_id=sc.pid, eager=eager)
             self.ctx.clear(sc.context_id)
             sc.context_id = None
         else:
@@ -49,7 +53,8 @@ class LLMCore:
                 np.asarray(rd["prompt"], np.int32), seq_id=sc.pid,
                 max_new=rd.get("max_new_tokens", 32),
                 eos_id=rd.get("eos_id", -1),
-                image_embeds=rd.get("image_embeds"))
+                image_embeds=rd.get("image_embeds"),
+                eager=eager)
         return slot
 
     def _finish(self, sc: LLMSyscall, slot: int) -> Dict[str, Any]:

@@ -225,11 +225,15 @@ class PriorityScheduler(BaseScheduler):
 class BatchedScheduler(BaseScheduler):
     """Beyond-paper strategy (DESIGN.md §2): POOL-WIDE token-level continuous
     batching. A central dispatcher thread owns admission: it pops the shared
-    LLM queue and routes each syscall to the least-loaded core by *real*
+    LLM queue and routes syscalls to the least-loaded core by *real*
     occupancy (free decode slots, then free HBM pages -- not blind
-    round-robin), applying backpressure when every core is saturated. Each
-    core's worker keeps its decode batch full from its private run queue and
-    steps all admitted syscalls together.
+    round-robin), applying backpressure when every core is saturated. An
+    admission burst is routed as a GROUP (up to the core's free slots and a
+    fair share of the backlog), so the core's engine prefills the whole
+    burst through shared chunked-prefill dispatches; each core's worker
+    keeps its decode batch full from its private run queue, interleaving one
+    prefill chunk with each decode step so long prompts never stall running
+    generations.
 
     Fairness is cross-core: a quantum-expired syscall is suspended and
     requeued on the CENTRAL queue, so it resumes on whichever core has
@@ -313,14 +317,32 @@ class BatchedScheduler(BaseScheduler):
     def _infeasible_reason(self, sc: Syscall) -> Optional[str]:
         """Non-None when NO core could ever admit `sc` (context longer than
         max_len / more pages than exist): such a syscall must fail fast, not
-        ping-pong between dispatcher and workers forever."""
+        ping-pong between dispatcher and workers forever. The message names
+        the limiting resource -- decode slots (max_len) vs HBM pages -- so
+        operators know which knob to turn."""
         need = self._required_tokens(sc)
+        slots_fit = pages_fit = False
         for core in self.pool.cores:
             eng = core.engine
-            if (need <= eng.max_len and
-                    eng.pager.pages_for(need) <= eng.pager.num_pages):
+            s_ok = need <= eng.max_len
+            p_ok = eng.pager.pages_for(need) <= eng.pager.num_pages
+            if s_ok and p_ok:
                 return None
-        return f"context {need} tokens exceeds every core's capacity"
+            slots_fit |= s_ok
+            pages_fit |= p_ok
+        if not slots_fit:
+            biggest = max(c.engine.max_len for c in self.pool.cores)
+            return (f"context {need} tokens exceeds every core's capacity: "
+                    f"longest decode slot holds {biggest} tokens "
+                    f"(limiting resource: slots)")
+        if not pages_fit:
+            worst = max((c.engine.pager.num_pages * c.engine.pager.page_size)
+                        for c in self.pool.cores)
+            return (f"context {need} tokens exceeds every core's capacity: "
+                    f"largest HBM page budget holds {worst} tokens "
+                    f"(limiting resource: pages)")
+        return (f"context {need} tokens exceeds every core's capacity "
+                f"(limiting resource: slots on some cores, pages on others)")
 
     def _dispatcher(self):
         pending: Optional[Syscall] = None
@@ -338,6 +360,14 @@ class BatchedScheduler(BaseScheduler):
                     pending = None
                     self._dispatcher_held = 0
                     continue
+                # burst admission: wait one batching window so the rest of a
+                # burst (agents submitting together) lands on the queue, then
+                # place the whole burst in one dispatch cycle -- each core
+                # receives its share as a contiguous group, which its engine
+                # prefills through shared chunked-prefill dispatches.
+                # Resumed syscalls skip the window (they arrive alone).
+                if pending.context_id is None and self.llm_queue.qsize() == 0:
+                    time.sleep(0.001)
             idx = self._pick_core(pending)
             if idx is None:
                 time.sleep(0.001)     # admission backpressure: pool saturated
@@ -345,6 +375,25 @@ class BatchedScheduler(BaseScheduler):
             self._dispatch(idx, pending)
             pending = None
             self._dispatcher_held = 0
+            # drain the rest of the burst: least-loaded placement per syscall
+            # (inflight accounting updates as we go, so a burst spreads
+            # evenly and lands on every core as one group)
+            while True:
+                try:
+                    sc = self.llm_queue.get_nowait()
+                except queue.Empty:
+                    break
+                reason = self._infeasible_reason(sc)
+                if reason is not None:
+                    sc.fail(reason)
+                    self._record(sc)
+                    continue
+                idx = self._pick_core(sc)
+                if idx is None:
+                    pending = sc           # pool saturated: hold + backoff
+                    self._dispatcher_held = 1
+                    break
+                self._dispatch(idx, sc)
         if pending is not None:        # stop(): don't strand the held syscall
             self.llm_queue.put(pending)
             self._dispatcher_held = 0
@@ -362,21 +411,29 @@ class BatchedScheduler(BaseScheduler):
 
     # -- per-core worker (data plane) ----------------------------------------------------
     def _llm_worker(self, core_idx: int):
+        """Keeps the decode batch full AND interleaves chunked prefill with
+        decode: each loop iteration consumes at most one prompt chunk for the
+        whole admission burst (`prefill_step`), then runs one decode step for
+        every active slot -- so a burst of long prompts admits as one batched
+        chunked prefill and never stalls running generations."""
         core = self.pool.cores[core_idx]
         engine = core.engine
         myq = self._core_queues[core_idx]
         running: Dict[int, Syscall] = {}      # slot -> syscall
-        used: Dict[int, int] = {}             # slot -> steps this quantum
+        used: Dict[int, int] = {}             # slot -> decode steps this quantum
         while not self._stop.is_set():
-            # admit everything the dispatcher routed here
+            # admit everything the dispatcher routed here; fresh prompts only
+            # JOIN the chunked-prefill queue (eager=False) so the whole burst
+            # shares each chunk dispatch below
             while engine.free_slot_count() > 0:
+                busy = bool(running) or engine.prefill_pending() > 0
                 try:
-                    sc = myq.get(timeout=0.0 if running else 0.05)
+                    sc = myq.get(timeout=0.0 if busy else 0.05)
                 except queue.Empty:
                     break
                 sc.mark_running()
                 try:
-                    slot = core.admit(sc)
+                    slot = core.admit(sc, eager=False)
                 except RuntimeError:
                     # lost the capacity race (slots/pages went to another
                     # admission); hand back for re-dispatch
@@ -391,7 +448,9 @@ class BatchedScheduler(BaseScheduler):
                 time.sleep(0.001)
                 continue
             try:
-                engine.step()
+                if engine.prefill_pending():
+                    engine.prefill_step()     # one chunk for the whole burst
+                emitted = engine.step()       # {} when nothing decodes yet
             except Exception as e:  # noqa: BLE001
                 # core fault mid-decode: every in-flight syscall loses at most
                 # this quantum; requeue centrally so healthy cores absorb them
@@ -406,7 +465,8 @@ class BatchedScheduler(BaseScheduler):
                 continue
             for slot in list(running):
                 sc = running[slot]
-                used[slot] += 1
+                if slot in emitted:
+                    used[slot] += 1
                 if engine.is_done(slot):
                     resp = core._finish(sc, slot)
                     sc.complete(resp)
@@ -415,6 +475,7 @@ class BatchedScheduler(BaseScheduler):
                         self._inflight[core_idx] -= 1
                     del running[slot], used[slot]
                 elif self.llm_quantum and used[slot] >= self.llm_quantum and \
+                        not engine.is_prefilling(slot) and \
                         (self._backlog() > 0 or myq.qsize() > 0):
                     # quantum expired AND someone is waiting anywhere in the
                     # pool: yield the slot; the dispatcher may resume this
@@ -423,7 +484,8 @@ class BatchedScheduler(BaseScheduler):
                     sc.suspend(ctx_id)
                     self._undispatch(core_idx, sc)
                     del running[slot], used[slot]
-        # drain on stop: finish whatever is still running
+        # drain on stop: finish whatever is still running (mid-prefill slots
+        # report the tokens they have, i.e. none -- same as mid-decode)
         for slot, sc in running.items():
             try:
                 resp = core._finish(sc, slot)

@@ -1,11 +1,17 @@
-"""Pallas TPU decode attention: one new token per sequence attending to a
-contiguous KV cache with per-sequence valid lengths (and optional sliding
-window). This is the serve_step hot loop.
+"""Pallas TPU attention over a contiguous KV cache with per-sequence state:
 
-Grid: (batch, q_heads, num_kv_blocks); kv dimension sequential with online
-softmax carried in VMEM scratch. KV blocks entirely beyond seq_len are
-skipped -- decode FLOPs scale with the *actual* context length, not the cache
-allocation.
+* ``chunk_attention`` -- a chunk of C new tokens per sequence at absolute
+  positions ``q_offsets[b] .. q_offsets[b]+C-1`` attending to cache positions
+  ``0 .. q_offsets[b]+i`` (the prefix+chunk causal mask of chunked prefill;
+  optional sliding window).
+* ``decode_attention`` -- the C == 1 specialization (the serve_step hot loop),
+  expressed through the same kernel.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks); kv dimension sequential
+with online softmax carried in VMEM scratch. KV blocks entirely above the
+causal diagonal for a sequence -- and q blocks entirely beyond its valid
+chunk length -- are skipped, so FLOPs scale with the *actual* context length,
+not the cache allocation.
 """
 from __future__ import annotations
 
@@ -22,9 +28,11 @@ from repro.distributed.compat import PallasCompilerParams as _CompilerParams
 NEG_INF = -1e30
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                   *, scale: float, bk: int, nk: int, window: int):
-    ki = pl.program_id(2)
+def _chunk_kernel(off_ref, qlen_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, bq: int, bk: int,
+                  nk: int, window: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
 
     @pl.when(ki == 0)
     def _init():
@@ -32,24 +40,27 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    seq_len = len_ref[0]
+    q_off = off_ref[0]                      # absolute position of chunk row 0
+    q_len = qlen_ref[0]                     # valid rows in this chunk
+    q_first = q_off + qi * bq               # absolute position of block row 0
     k_first = ki * bk
-    live = k_first < seq_len
+    live = (k_first <= q_first + bq - 1) & (qi * bq < q_len)
     if window:
-        live &= (k_first + bk) > (seq_len - window)
+        live &= (k_first + bk - 1) > (q_first - window)
 
     @pl.when(live)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)              # [1, hd] row
+        q = q_ref[0, 0].astype(jnp.float32)              # [bq, hd]
         k = k_ref[0, 0].astype(jnp.float32)              # [bk, hd]
         v = v_ref[0, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [1, bk]
-        kpos = k_first + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
-        mask = kpos < seq_len
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        qpos = q_first + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_first + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos <= qpos
         if window:
-            mask &= kpos >= (seq_len - window)
+            mask &= kpos > (qpos - window)
         s = jnp.where(mask, s, NEG_INF)
-        m_prev = m_ref[...]
+        m_prev = m_ref[...]                              # [bq, 1]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
         alpha = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new)
@@ -64,46 +75,72 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("window", "block_k", "interpret"))
-def decode_attention(q, k_cache, v_cache, seq_lens, *, window: int = 0,
-                     block_k: int = 256, interpret: bool = False):
-    """q: [B, H, hd]; caches [B, S, K, hd]; seq_lens [B] -> [B, H, hd]."""
-    B, H, hd = q.shape
+    jax.jit, static_argnames=("window", "block_q", "block_k", "interpret"))
+def chunk_attention(q, k_cache, v_cache, q_offsets, q_lens=None, *,
+                    window: int = 0, block_q: int = 128, block_k: int = 256,
+                    interpret: bool = False):
+    """q: [B, C, H, hd]; caches [B, S, K, hd]; q_offsets [B] (absolute
+    position of each sequence's chunk row 0; the chunk's own K/V must already
+    be written into the cache). q_lens [B] optionally gives the valid rows
+    per chunk (block-skip hint; padded rows produce garbage either way).
+    Returns [B, C, H, hd]."""
+    B, C, H, hd = q.shape
     _, S, K, _ = k_cache.shape
     assert H % K == 0
+    bq = min(block_q, C)
     bk = min(block_k, S)
+    C_pad = ((C + bq - 1) // bq) * bq
     S_pad = ((S + bk - 1) // bk) * bk
+    qh = jnp.swapaxes(q, 1, 2)                           # [B, H, C, hd]
     kh = jnp.swapaxes(k_cache, 1, 2)                     # [B, K, S, hd]
     vh = jnp.swapaxes(v_cache, 1, 2)
+    if C_pad != C:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, C_pad - C), (0, 0)))
     if S_pad != S:
         kh = jnp.pad(kh, ((0, 0), (0, 0), (0, S_pad - S), (0, 0)))
         vh = jnp.pad(vh, ((0, 0), (0, 0), (0, S_pad - S), (0, 0)))
-    nk = S_pad // bk
+    nq, nk = C_pad // bq, S_pad // bk
     g = H // K
-    qh = q[:, :, None, :]                                # [B, H, 1, hd]
+    if q_lens is None:
+        q_lens = jnp.full((B,), C, jnp.int32)
 
     kernel = functools.partial(
-        _decode_kernel, scale=1.0 / math.sqrt(hd), bk=bk, nk=nk, window=window)
+        _chunk_kernel, scale=1.0 / math.sqrt(hd), bq=bq, bk=bk, nk=nk,
+        window=window)
 
     out = pl.pallas_call(
         kernel,
-        grid=(B, H, nk),
+        grid=(B, H, nq, nk),
         in_specs=[
-            pl.BlockSpec((1,), lambda b, h, ki: (b,),
+            pl.BlockSpec((1,), lambda b, h, qi, ki: (b,),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, 1, hd), lambda b, h, ki: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h // g, ki, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h // g, ki, 0)),
+            pl.BlockSpec((1,), lambda b, h, qi, ki: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h // g, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, ki: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, C_pad, hd), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((1, 1), jnp.float32),
-            pltpu.VMEM((1, 1), jnp.float32),
-            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
         ],
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(seq_lens.astype(jnp.int32), qh, kh, vh)
-    return out[:, :, 0, :]
+    )(q_offsets.astype(jnp.int32), q_lens.astype(jnp.int32), qh, kh, vh)
+    return jnp.swapaxes(out[:, :, :C], 1, 2)
+
+
+def decode_attention(q, k_cache, v_cache, seq_lens, *, window: int = 0,
+                     block_k: int = 256, interpret: bool = False):
+    """q: [B, H, hd]; caches [B, S, K, hd]; seq_lens [B] (valid prefix length,
+    including the token written for this step) -> [B, H, hd]. The one-token
+    case of chunk_attention: a single query at position seq_len - 1."""
+    out = chunk_attention(q[:, None], k_cache, v_cache,
+                          (seq_lens - 1).astype(jnp.int32),
+                          window=window, block_q=1, block_k=block_k,
+                          interpret=interpret)
+    return out[:, 0]

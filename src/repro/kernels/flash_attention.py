@@ -6,6 +6,12 @@ Grid: (batch, q_heads, num_q_blocks, num_kv_blocks); the kv dimension is
 scratch across kv steps. Fully-masked kv blocks above the causal diagonal are
 skipped with pl.when, so FLOPs are ~half of the dense rectangle (the jnp
 fallback pays the full rectangle; see EXPERIMENTS.md §Perf).
+
+Chunked-prefill support: ``q_offsets`` / ``kv_lens`` give *per-sequence*
+query offsets and valid KV lengths (SMEM scalars), so a ragged batch of
+prefill continuations -- queries at ``q_offsets[b]..q_offsets[b]+Sq``
+attending to keys ``0..q_offsets[b]+Sq`` -- stays on the fused path; blocks
+past a sequence's kv_len are skipped, not just masked.
 """
 from __future__ import annotations
 
@@ -22,9 +28,9 @@ from repro.distributed.compat import PallasCompilerParams as _CompilerParams
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  scale: float, bq: int, bk: int, nk: int, q_offset: int,
-                  window: int, kv_len: int):
+def _flash_kernel(off_ref, klen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  acc_ref, *, scale: float, bq: int, bk: int, nk: int,
+                  window: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -34,15 +40,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    q_offset = off_ref[0]                   # this sequence's chunk offset
+    kv_len = klen_ref[0]                    # this sequence's valid kv length
     q_first = qi * bq + q_offset            # absolute position of q block row 0
     q_last = q_first + bq - 1
     k_first = ki * bk
-    causal_live = k_first <= q_last
-    window_live = True
+    live = (k_first <= q_last) & (k_first < kv_len)
     if window:
-        window_live = (k_first + bk - 1) > (q_first - window)
+        live &= (k_first + bk - 1) > (q_first - window)
 
-    @pl.when(causal_live & window_live)
+    @pl.when(live)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)              # [bq, hd]
         k = k_ref[0, 0].astype(jnp.float32)              # [bk, hd]
@@ -75,8 +82,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     static_argnames=("q_offset", "window", "block_q", "block_k", "interpret"))
 def flash_attention(q, k, v, *, q_offset: int = 0, window: int = 0,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = False):
-    """q: [B, Sq, H, hd]; k, v: [B, Skv, K, hd] -> [B, Sq, H, hd]."""
+                    interpret: bool = False, q_offsets=None, kv_lens=None):
+    """q: [B, Sq, H, hd]; k, v: [B, Skv, K, hd] -> [B, Sq, H, hd].
+
+    q_offset: static offset shared by the batch (prefill continuation).
+    q_offsets: [B] int32 per-sequence offsets (chunked prefill of a ragged
+    batch); overrides q_offset. kv_lens: [B] int32 valid KV lengths -- keys
+    at or beyond kv_lens[b] are masked and fully-dead blocks skipped
+    (defaults to Skv)."""
     B, Sq, H, hd = q.shape
     _, Skv, K, _ = k.shape
     assert H % K == 0
@@ -95,15 +108,23 @@ def flash_attention(q, k, v, *, q_offset: int = 0, window: int = 0,
         vh = jnp.pad(vh, ((0, 0), (0, 0), (0, Skv_pad - Skv), (0, 0)))
     nq, nk = Sq_pad // bq, Skv_pad // bk
     g = H // K
+    if q_offsets is None:
+        q_offsets = jnp.full((B,), q_offset, jnp.int32)
+    if kv_lens is None:
+        kv_lens = jnp.full((B,), Skv, jnp.int32)
 
     kernel = functools.partial(
         _flash_kernel, scale=1.0 / math.sqrt(hd), bq=bq, bk=bk, nk=nk,
-        q_offset=q_offset, window=window, kv_len=Skv)
+        window=window)
 
     out = pl.pallas_call(
         kernel,
         grid=(B, H, nq, nk),
         in_specs=[
+            pl.BlockSpec((1,), lambda b, h, qi, ki: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda b, h, qi, ki: (b,),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
             pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h // g, ki, 0)),
             pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h // g, ki, 0)),
@@ -118,5 +139,5 @@ def flash_attention(q, k, v, *, q_offset: int = 0, window: int = 0,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(qh, kh, vh)
+    )(q_offsets.astype(jnp.int32), kv_lens.astype(jnp.int32), qh, kh, vh)
     return jnp.swapaxes(out[:, :, :Sq], 1, 2)

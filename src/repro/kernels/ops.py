@@ -33,12 +33,29 @@ def set_backend(backend: Optional[str]) -> None:
     _BACKEND = backend
 
 
-def flash_attention(q, k, v, *, q_offset=0, window=0, backend=None, **kw):
+def flash_attention(q, k, v, *, q_offset=0, window=0, q_offsets=None,
+                    kv_lens=None, backend=None, **kw):
     b = backend or default_backend()
     if b == "jnp":
-        return _ref.flash_attention_ref(q, k, v, q_offset=q_offset, window=window)
+        return _ref.flash_attention_ref(q, k, v, q_offset=q_offset,
+                                        window=window, q_offsets=q_offsets,
+                                        kv_lens=kv_lens)
     return _fa.flash_attention(q, k, v, q_offset=q_offset, window=window,
+                               q_offsets=q_offsets, kv_lens=kv_lens,
                                interpret=(b == "interpret"), **kw)
+
+
+def chunk_attention(q, k_cache, v_cache, q_offsets, q_lens=None, *, window=0,
+                    backend=None, **kw):
+    """Chunked-prefill attention: q [B, C, H, hd] at per-sequence offsets
+    against a contiguous KV cache (prefix+chunk causal mask)."""
+    b = backend or default_backend()
+    if b == "jnp":
+        return _ref.chunk_attention_ref(q, k_cache, v_cache, q_offsets,
+                                        q_lens, window=window)
+    return _da.chunk_attention(q, k_cache, v_cache, q_offsets, q_lens,
+                               window=window, interpret=(b == "interpret"),
+                               **kw)
 
 
 def decode_attention(q, k_cache, v_cache, seq_lens, *, window=0, backend=None, **kw):

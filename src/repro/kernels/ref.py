@@ -17,21 +17,49 @@ def _broadcast_kv(k, n_heads):
     return jnp.repeat(k, n_heads // K, axis=-2)
 
 
-def flash_attention_ref(q, k, v, *, q_offset=0, window=0):
+def flash_attention_ref(q, k, v, *, q_offset=0, window=0, q_offsets=None,
+                        kv_lens=None):
     """q: [B, Sq, H, hd]; k, v: [B, Skv, K, hd]. Full-materialization causal
-    (optionally sliding-window) attention in fp32."""
+    (optionally sliding-window) attention in fp32. q_offsets/kv_lens give
+    per-sequence query offsets and valid KV lengths (chunked prefill)."""
     B, Sq, H, hd = q.shape
     Skv = k.shape[1]
     k = _broadcast_kv(k, H)
     v = _broadcast_kv(v, H)
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) / math.sqrt(hd)
-    qpos = q_offset + jnp.arange(Sq)
-    kpos = jnp.arange(Skv)
-    mask = kpos[None, :] <= qpos[:, None]
+    if q_offsets is None:
+        q_offsets = jnp.full((B,), q_offset, jnp.int32)
+    qpos = q_offsets[:, None] + jnp.arange(Sq)[None, :]          # [B, Sq]
+    kpos = jnp.arange(Skv)[None, None, :]                        # [1, 1, Skv]
+    mask = kpos <= qpos[:, :, None]                              # [B, Sq, Skv]
+    if kv_lens is not None:
+        mask &= kpos < kv_lens[:, None, None]
     if window:
-        mask &= kpos[None, :] > (qpos[:, None] - window)
-    s = jnp.where(mask[None, None], s, -1e30)
+        mask &= kpos > (qpos[:, :, None] - window)
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def chunk_attention_ref(q, k_cache, v_cache, q_offsets, q_lens=None, *,
+                        window=0):
+    """q: [B, C, H, hd] (chunk of new tokens, row i of sequence b at absolute
+    position q_offsets[b] + i); caches [B, S, K, hd] with the chunk's K/V
+    already written. Prefix+chunk causal mask; q_lens is accepted for
+    signature parity with the kernel (padded rows are garbage either way)."""
+    B, C, H, hd = q.shape
+    S = k_cache.shape[1]
+    k = _broadcast_kv(k_cache, H)
+    v = _broadcast_kv(v_cache, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = q_offsets[:, None] + jnp.arange(C)[None, :]           # [B, C]
+    kpos = jnp.arange(S)[None, None, :]                          # [1, 1, S]
+    mask = kpos <= qpos[:, :, None]
+    if window:
+        mask &= kpos > (qpos[:, :, None] - window)
+    s = jnp.where(mask[:, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
 

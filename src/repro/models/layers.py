@@ -157,6 +157,43 @@ def _attn_block(q, k, v, q_pos, kv_pos, scale, window):
     return out.reshape(B, sq, H, hd).astype(q.dtype)
 
 
+def chunk_attention(q, k_cache, v_cache, q_offsets, *, window: int = 0,
+                    use_kernel: bool = False):
+    """Prefix+chunk causal attention (chunked prefill): query row i of
+    sequence b sits at absolute position ``q_offsets[b] + i`` and attends to
+    cache positions ``0 .. q_offsets[b] + i`` (optionally sliding-window).
+    The chunk's own K/V must already be written into the cache
+    (cache_write_chunk), so the prefix and the chunk share one fused pass.
+
+    q: [B, C, H, hd]; caches: [B, S, K, hd]; q_offsets: [B] int32.
+    Returns [B, C, H, hd]. Rows whose chunk is shorter than C produce
+    garbage at the padded query positions (mask their K/V writes instead).
+    The Pallas kernel (kernels/decode_attention.chunk_attention) is the TPU
+    hot path; this is the jnp fallback with identical semantics.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.chunk_attention(q, k_cache, v_cache, q_offsets,
+                                    window=window)
+    B, C, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    g = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, C, K, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = q_offsets[:, None] + jnp.arange(C)[None, :]        # [B, C]
+    kpos = jnp.arange(S)[None, None, :]                       # [1, 1, S]
+    mask = kpos <= qpos[:, :, None]                           # [B, C, S]
+    if window:
+        mask &= kpos > (qpos[:, :, None] - window)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, C, H, hd).astype(q.dtype)
+
+
 def decode_attention(q, k_cache, v_cache, seq_lens, *, window: int = 0,
                      use_kernel: bool = False):
     """One-token attention against a contiguous KV cache.
@@ -232,6 +269,23 @@ def cache_write_token(cache, new, seq_lens):
     pos = jax.lax.broadcasted_iota(jnp.int32, (1, S, 1, 1), 1)
     hit = pos == seq_lens[:, None, None, None]
     return jnp.where(hit, new[:, None].astype(cache.dtype), cache)
+
+
+def cache_write_chunk(cache, new, offsets, lengths):
+    """Write a chunk of tokens per sequence into a [B, S, K, hd] cache:
+    ``new[b, :lengths[b]]`` lands at ``cache[b, offsets[b] : offsets[b] +
+    lengths[b]]``. Rows with ``lengths[b] == 0`` are untouched bit-for-bit,
+    so chunked prefill can share a batch with decoding/idle slots. Expressed
+    as a masked gather, not a scatter, for the same GSPMD reason as
+    cache_write_token. cache: [B, S, K, hd]; new: [B, C, K, hd];
+    offsets, lengths: [B] int32."""
+    S, C = cache.shape[1], new.shape[1]
+    pos = jnp.arange(S)[None, :]                       # [1, S]
+    idx = pos - offsets[:, None]                       # chunk-relative index
+    hit = (idx >= 0) & (idx < lengths[:, None])        # [B, S]
+    src = jnp.take_along_axis(new, jnp.clip(idx, 0, C - 1)[:, :, None, None],
+                              axis=1)
+    return jnp.where(hit[:, :, None, None], src.astype(cache.dtype), cache)
 
 
 # ---------------------------------------------------------------------------

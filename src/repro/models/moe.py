@@ -122,6 +122,12 @@ class MoETransformer(DenseTransformer):
             y = y + L.mlp_apply(blk["dense"], h, cfg.activation)
         return x + y, aux
 
+    def _ffn(self, blk, x, *, infer: bool = False):
+        """Expert-MLP feed-forward half; lets DenseTransformer.prefill_chunk
+        drive MoE layers unchanged (aux loss is a training-only signal)."""
+        x, _ = self._mlp_part(blk, x, infer=infer)
+        return x
+
     def forward(self, params, tokens, *, image_embeds=None, return_aux=False):
         cfg = self.cfg
         x = params["embed"][tokens].astype(cfg.dtype)

@@ -65,6 +65,10 @@ def causal_conv1d(x, w, b, conv_state):
 # ---------------------------------------------------------------------------
 
 class RecurrentGemma:
+    # chunked prefill resumes from carried RG-LRU/conv state and the rolling
+    # buffer, so a fresh prompt's rows must be reset before its first chunk
+    stateful_prefill = True
+
     def __init__(self, cfg):
         self.cfg = cfg
         self.n_super = cfg.num_layers // 3
@@ -302,6 +306,110 @@ class RecurrentGemma:
             logits = jnp.tanh(logits / cfg.logits_softcap) * cfg.logits_softcap
         cache = dict(cache, rec_h=rh, rec_conv=rc, ak=ak, av=av, apos=apos,
                      tail_h=th, tail_conv=tc, seq_lens=lengths)
+        return cache, logits
+
+    # -- chunked prefill ----------------------------------------------------------
+    def prefill_chunk(self, params, tokens, cache, *, q_offset, lengths,
+                      image_embeds=None, kv_width=None):
+        """Chunked prefill resuming from carried state: RG-LRU h / conv
+        carries and the rolling attention buffer in ``cache`` hold everything
+        before position ``q_offset[b]``; this call consumes ``lengths[b]``
+        more tokens. Rows with ``lengths[b] == 0`` keep all state untouched.
+        kv_width is accepted for interface parity; the rolling buffer is
+        already bounded by the attention window, so there is nothing to
+        narrow."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        Wn = cache["ak"].shape[2]
+        x = params["embed"][tokens].astype(cfg.dtype)
+        positions = q_offset[:, None] + jnp.arange(T)[None, :]
+        valid = jnp.arange(T)[None, :] < lengths[:, None]
+        end = q_offset + lengths
+
+        # rolling-buffer merge: slot s's new occupant is the latest position
+        # p < end with p % Wn == s; entries older than the chunk stay put.
+        slots = jnp.arange(Wn)[None, :]                          # [1, Wn]
+        p_src = end[:, None] - 1 - ((end[:, None] - 1 - slots) % Wn)
+        from_chunk = (p_src >= q_offset[:, None]) & (p_src >= 0) & \
+            (lengths[:, None] > 0)
+        c_idx = jnp.clip(p_src - q_offset[:, None], 0, T - 1)
+
+        def merge_buffer(k_full, v_full, ak, av, apos):
+            ks = jnp.take_along_axis(k_full, c_idx[:, :, None, None], axis=1)
+            vs = jnp.take_along_axis(v_full, c_idx[:, :, None, None], axis=1)
+            m = from_chunk[:, :, None, None]
+            ak = jnp.where(m, ks.astype(ak.dtype), ak)
+            av = jnp.where(m, vs.astype(av.dtype), av)
+            apos = jnp.where(from_chunk, p_src, apos)
+            return ak, av, apos
+
+        def attn_chunk(blk, x, ak, av, apos):
+            """Windowed attention over (rolling-buffer prefix) U (chunk)."""
+            h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(blk["attn"], h, cfg, positions)
+            H = q.shape[2]
+            k_all = jnp.concatenate(
+                [L._broadcast_kv(ak, H).astype(jnp.float32),
+                 L._broadcast_kv(k, H).astype(jnp.float32)], axis=1)
+            v_all = jnp.concatenate(
+                [L._broadcast_kv(av, H).astype(jnp.float32),
+                 L._broadcast_kv(v, H).astype(jnp.float32)], axis=1)
+            kpos = jnp.concatenate([apos, positions], axis=1)    # [B, Wn+T]
+            kvalid = jnp.concatenate(
+                [(apos >= 0) & (apos < q_offset[:, None]), valid], axis=1)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                           k_all) / math.sqrt(q.shape[-1])
+            mask = kvalid[:, None, :] & (kpos[:, None, :] <= positions[:, :, None])
+            mask &= kpos[:, None, :] > (positions[:, :, None] - cfg.window)
+            s = jnp.where(mask[:, None], s, -1e30)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", p, v_all).astype(x.dtype)
+            x = x + L.attn_out(blk["attn"], o)
+            h = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+            x = x + L.mlp_apply(blk["mlp"], h, cfg.activation)
+            return x, merge_buffer(k, v, ak, av, apos)
+
+        def body(x, xs):
+            blk, rh, rc, ak, av, apos = xs
+
+            def rec_body(x2, sub):
+                rec, h0, c0 = sub
+                x2, ns = self._rec_layer(rec, x2, {"h": h0, "conv": c0},
+                                         decode=False, mask=valid,
+                                         lengths=lengths)
+                return x2, (ns["h"], ns["conv"])
+
+            x, (rh, rc) = L.xscan(rec_body, x, (blk["recs"], rh, rc))
+            x, (ak, av, apos) = attn_chunk(blk["attn_blk"], x, ak, av, apos)
+            return x, (rh, rc, ak, av, apos)
+
+        x, (rh, rc, ak, av, apos) = L.xscan(
+            _remat(body, cfg.remat_policy), x,
+            (params["blocks"], cache["rec_h"], cache["rec_conv"],
+             cache["ak"], cache["av"], cache["apos"]))
+
+        if self.n_tail:
+            def tail_body(x2, sub):
+                rec, h0, c0 = sub
+                x2, ns = self._rec_layer(rec, x2, {"h": h0, "conv": c0},
+                                         decode=False, mask=valid,
+                                         lengths=lengths)
+                return x2, (ns["h"], ns["conv"])
+            x, (th, tc) = L.xscan(
+                tail_body, x, (params["tail"], cache["tail_h"],
+                               cache["tail_conv"]))
+        else:
+            th, tc = cache["tail_h"], cache["tail_conv"]
+
+        x = L.rms_norm(x, params["lnf"], cfg.norm_eps)
+        idx = jnp.clip(lengths - 1, 0)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+        logits = last @ params["head"]
+        if cfg.logits_softcap:
+            logits = jnp.tanh(logits / cfg.logits_softcap) * cfg.logits_softcap
+        new_lens = jnp.where(lengths > 0, end, cache["seq_lens"])
+        cache = dict(cache, rec_h=rh, rec_conv=rc, ak=ak, av=av, apos=apos,
+                     tail_h=th, tail_conv=tc, seq_lens=new_lens)
         return cache, logits
 
     # -- decode ------------------------------------------------------------------

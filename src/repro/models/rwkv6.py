@@ -95,6 +95,10 @@ def _group_norm(x, g, b, H, eps=64e-5):
 
 
 class RWKV6:
+    # chunked prefill resumes from carried wkv/shift state, so a fresh
+    # prompt's rows must be zeroed before its first chunk
+    stateful_prefill = True
+
     def __init__(self, cfg):
         self.cfg = cfg
         self.H = cfg.d_model // cfg.rwkv_head_dim
@@ -316,6 +320,48 @@ class RWKV6:
         idx = jnp.clip(lengths - 1, 0)
         last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
         cache = dict(cache, wkv=wkv, shift_t=sh_t, shift_c=sh_c, seq_lens=lengths)
+        return cache, last @ params["head"]
+
+    def prefill_chunk(self, params, tokens, cache, *, q_offset, lengths,
+                      image_embeds=None, kv_width=None):
+        """Chunked prefill resuming from carried state: the per-layer wkv
+        state and token-shift carries in ``cache`` summarize everything before
+        this chunk (RWKV has no positional encoding, so ``q_offset`` only
+        participates in seq_lens bookkeeping; the O(1) state gives kv_width
+        nothing to narrow). Rows with ``lengths[b] == 0`` keep wkv/shift
+        state untouched bit-for-bit."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        pad = (-T) % CHUNK
+        if pad:
+            tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+        x = params["embed"][tokens].astype(cfg.dtype)
+        valid = jnp.arange(tokens.shape[1])[None] < lengths[:, None]
+        upd = (lengths > 0)[:, None]
+
+        def body(x, xs):
+            blk, wkv, st, sc = xs
+            state = {"wkv": wkv, "shift_t": st, "shift_c": sc}
+            x, ns = self._layer(blk, x, state, decode=False, mask=valid,
+                                lengths=lengths)
+            # lengths == 0 rows: the shift carry would read position 0 of a
+            # fully-padded chunk -- keep the previous carry instead (wkv and
+            # conv-free state are already no-ops under the all-pad mask)
+            sh_t = jnp.where(upd, ns["shift_t"], st)
+            sh_c = jnp.where(upd, ns["shift_c"], sc)
+            return x, (ns["wkv"], sh_t, sh_c)
+
+        x, (wkv, sh_t, sh_c) = L.xscan(
+            _remat(body, cfg.remat_policy), x,
+            (params["blocks"], cache["wkv"], cache["shift_t"],
+             cache["shift_c"]))
+        x = L.rms_norm(x, params["lnf"], cfg.norm_eps)
+        idx = jnp.clip(lengths - 1, 0)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+        new_lens = jnp.where(lengths > 0, q_offset + lengths,
+                             cache["seq_lens"])
+        cache = dict(cache, wkv=wkv, shift_t=sh_t, shift_c=sh_c,
+                     seq_lens=new_lens)
         return cache, last @ params["head"]
 
     def decode_step(self, params, tokens, cache):

@@ -50,6 +50,10 @@ def _stack_init(rng, n: int, init_fn):
 class DenseTransformer:
     """family in {dense, audio, vlm}."""
 
+    # chunked prefill reads nothing but the K/V it wrote itself (causal mask
+    # covers stale cache rows), so a fresh prompt needs no state reset
+    stateful_prefill = False
+
     def __init__(self, cfg):
         self.cfg = cfg
         self.is_vlm = cfg.family == "vlm" and cfg.cross_attn_every > 0
@@ -113,6 +117,14 @@ class DenseTransformer:
         h = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
         x = x + L.mlp_apply(blk["mlp"], h, cfg.activation)
         return x, (k, v)
+
+    def _ffn(self, blk, x, *, infer: bool = False):
+        """Post-attention feed-forward half of a self layer (ln2 + MLP).
+        MoETransformer overrides this with the expert MLP so prefill_chunk is
+        inherited unchanged; `infer` selects inference routing there."""
+        cfg = self.cfg
+        h = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        return x + L.mlp_apply(blk["mlp"], h, cfg.activation)
 
     def _cross_layer(self, blk, x, img):
         """Gated cross-attention onto frontend (image) embeddings."""
@@ -258,6 +270,102 @@ class DenseTransformer:
         if cfg.logits_softcap:
             last_logits = jnp.tanh(last_logits / cfg.logits_softcap) * cfg.logits_softcap
         cache["seq_lens"] = lengths
+        return cache, last_logits
+
+    # -- chunked prefill -------------------------------------------------------
+    def prefill_chunk(self, params, tokens, cache, *, q_offset, lengths,
+                      image_embeds=None, kv_width=None):
+        """Batched chunked prefill: consume chunk ``tokens`` [B, C] with row b
+        at absolute positions ``q_offset[b] .. q_offset[b] + lengths[b] - 1``,
+        attending over the existing KV prefix (cache positions < q_offset[b])
+        plus the chunk itself. Rows with ``lengths[b] == 0`` are a strict
+        no-op (cache, seq_lens and K/V preserved bit-for-bit), so one chunk
+        dispatch can share the batch with slots that are idle or decoding.
+
+        q_offset, lengths: [B] int32 (q_offset is only read where
+        lengths > 0). kv_width (static) bounds every sequence's context after
+        this chunk (max q_offset+lengths <= kv_width): K/V writes and
+        attention run on a [.., :kv_width] view of the cache, so chunk cost
+        scales with the actual context, not the cache allocation. Returns
+        (cache, last_logits) where last_logits[b] is the logits at the
+        chunk's final valid position (garbage when lengths[b] == 0 --
+        callers keep the logits of the finishing chunk).
+        """
+        cfg = self.cfg
+        B, C = tokens.shape
+        x = params["embed"][tokens].astype(cfg.dtype)
+        positions = q_offset[:, None] + jnp.arange(C)[None, :]
+
+        def self_chunk(blk, x, kc, vc):
+            h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(blk["attn"], h, cfg, positions)
+            narrow = kv_width is not None and kv_width < kc.shape[1]
+            kw = kc[:, :kv_width] if narrow else kc
+            vw = vc[:, :kv_width] if narrow else vc
+            kw = L.cache_write_chunk(kw, k, q_offset, lengths)
+            vw = L.cache_write_chunk(vw, v, q_offset, lengths)
+            o = L.chunk_attention(q, kw, vw, q_offset)
+            if narrow:
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, kw, 0, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, vw, 0, axis=1)
+            else:
+                kc, vc = kw, vw
+            x = x + L.attn_out(blk["attn"], o)
+            return self._ffn(blk, x, infer=True), kc, vc
+
+        if self.is_vlm:
+            upd = (lengths > 0)[:, None, None, None]
+
+            def body(x, xs):
+                blk, kc, vc, xk, xv = xs
+
+                def inner(x2, sub):
+                    sblk, kcl, vcl = sub
+                    x2, kcl, vcl = self_chunk(sblk, x2, kcl, vcl)
+                    return x2, (kcl, vcl)
+
+                x, (kc, vc) = L.xscan(inner, x, (blk["selfs"], kc, vc))
+                h = L.rms_norm(x, blk["xln"], cfg.norm_eps)
+                H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+                q = (h @ blk["xattn"]["wq"]).reshape(B, C, H, hd)
+                if image_embeds is not None:
+                    # recompute image K/V (position-independent, identical
+                    # every chunk); keep other rows' cached values intact
+                    xkn = (image_embeds @ blk["xattn"]["wk"]).reshape(B, -1, K, hd)
+                    xvn = (image_embeds @ blk["xattn"]["wv"]).reshape(B, -1, K, hd)
+                    xk = jnp.where(upd, xkn.astype(xk.dtype), xk)
+                    xv = jnp.where(upd, xvn.astype(xv.dtype), xv)
+                o = self._cross_attend(q, xk, xv)
+                gate = jnp.tanh(blk["xgate"]).astype(x.dtype)
+                x = x + gate * L.attn_out(blk["xattn"], o)
+                h = L.rms_norm(x, blk["xln2"], cfg.norm_eps)
+                x = x + L.mlp_apply(blk["xmlp"], h, cfg.activation)
+                return x, (kc, vc, xk, xv)
+
+            x, (kn, vn, xk, xv) = L.xscan(
+                _remat(body, cfg.remat_policy), x,
+                (params["blocks"], cache["k"], cache["v"],
+                 cache["xk"], cache["xv"]))
+            cache = dict(cache, k=kn, v=vn, xk=xk, xv=xv)
+        else:
+            def body(x, xs):
+                blk, kc, vc = xs
+                x, kc, vc = self_chunk(blk, x, kc, vc)
+                return x, (kc, vc)
+
+            x, (kn, vn) = L.xscan(
+                _remat(body, cfg.remat_policy), x,
+                (params["blocks"], cache["k"], cache["v"]))
+            cache = dict(cache, k=kn, v=vn)
+
+        x = L.rms_norm(x, params["lnf"], cfg.norm_eps)
+        idx = jnp.clip(lengths - 1, 0)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+        last_logits = last @ params["head"]
+        if cfg.logits_softcap:
+            last_logits = jnp.tanh(last_logits / cfg.logits_softcap) * cfg.logits_softcap
+        cache["seq_lens"] = jnp.where(lengths > 0, q_offset + lengths,
+                                      cache["seq_lens"])
         return cache, last_logits
 
     # -- decode ---------------------------------------------------------------

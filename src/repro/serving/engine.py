@@ -2,10 +2,15 @@
 restore) -- the TPU data plane under the AIOS kernel's LLM core.
 
 Fixed decode-slot batch: ``max_slots`` sequences decode together in one jit'd
-step (shape-stable, no recompiles). Sequences are admitted into free slots
-after a bucketed single-sequence prefill; preemption extracts a slot's cache
-slice to host memory (a ContextSnapshot -- the paper's logits-based context)
-and frees the slot.
+step (shape-stable, no recompiles). Admission is *batched chunked prefill*:
+every newly admitted sequence (and every prefix-cache suffix extension) joins
+a per-engine prefill queue, and each ``prefill_step`` consumes one fixed-size
+token chunk for ALL queued sequences in a single XLA dispatch directly into
+the decode cache (per-slot position offsets; rows not being prefilled are
+preserved bit-for-bit). Prefill chunks interleave with decode steps, so a
+burst of long prompts never stalls running generations. Preemption extracts a
+slot's cache slice to host memory (a ContextSnapshot -- the paper's
+logits-based context) and frees the slot.
 
 Sampling invariants (what makes context switch bit-exact, paper Table 7):
   * every sequence has its own PRNG key; draw #n uses fold_in(key, n),
@@ -16,6 +21,7 @@ Sampling invariants (what makes context switch bit-exact, paper Table 7):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import threading
 from typing import Any, Dict, List, Optional
 
@@ -63,17 +69,31 @@ class ContextSnapshot:
 
 
 class _Slot:
-    __slots__ = ("active", "seq_id", "prompt", "generated", "counter",
-                 "max_new", "eos_id")
+    __slots__ = ("active", "prefilling", "seq_id", "prompt", "generated",
+                 "counter", "max_new", "eos_id")
 
     def __init__(self):
         self.active = False
+        self.prefilling = False   # admitted, prompt not fully consumed yet
         self.seq_id = None
         self.prompt = None
         self.generated: List[int] = []
         self.counter = 0
         self.max_new = 0
         self.eos_id = -1
+
+
+class _PendingPrefill:
+    """One queued chunked-prefill job: feed tokens[done:] into `slot` (the
+    cache already holds the first `done` positions -- 0 for a fresh prompt,
+    the restored prefix length for a prefix-cache suffix extension)."""
+    __slots__ = ("slot", "tokens", "done", "fresh")
+
+    def __init__(self, slot: int, tokens: np.ndarray, done: int, fresh: bool):
+        self.slot = slot
+        self.tokens = tokens
+        self.done = done
+        self.fresh = fresh        # False: prefix-cache suffix extension
 
 
 class _EngineJits:
@@ -86,7 +106,9 @@ class _EngineJits:
     All programs are pure in (params, cache): per-engine state stays in the
     engine; shapes still specialize per call as usual."""
 
-    EXTEND_CHUNKS = (16, 8, 4, 2, 1)
+    # fixed chunk-size buckets for batched chunked prefill: one compiled
+    # program per chunk size (per max_slots shape), shared across replicas
+    PREFILL_CHUNKS = (32, 64, 128, 256)
 
     def __init__(self, cfg, temperature: float):
         self.model = model = build_model(cfg)
@@ -99,10 +121,21 @@ class _EngineJits:
 
         @jax.jit
         def decode(params, tokens, cache, active_mask):
-            cache, logits = model.decode_step(params, tokens, cache)
-            # inactive slots: pin seq_lens so garbage positions never run away
-            cache = dict(cache, seq_lens=jnp.where(
-                active_mask, cache["seq_lens"], 0))
+            new, logits = model.decode_step(params, tokens, cache)
+            # inactive slots keep their ENTIRE cache row bit-for-bit: decoding
+            # must not disturb half-prefilled neighbours (chunked prefill
+            # interleaves with decode quanta) and pinned seq_lens can never
+            # run away either. Costs ~17% of a CPU decode step (elementwise
+            # select per leaf); a per-model-leaf guard could trim it but a
+            # seq_lens sentinel alone is NOT enough -- rolling-buffer writes
+            # (slot = seq_lens % Wn) wrap back into valid positions.
+            def keep(n, o, ax):
+                if ax is None:
+                    return n
+                shape = [1] * n.ndim
+                shape[ax] = n.shape[ax]
+                return jnp.where(active_mask.reshape(shape), n, o)
+            cache = jax.tree.map(keep, new, cache, baxes)
             return cache, logits
 
         def insert(cache, piece, slot):
@@ -120,24 +153,56 @@ class _EngineJits:
                 return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
             return jax.tree.map(get, cache, baxes)
 
-        def make_extend(n):
-            @jax.jit
-            def extend(params, tokens, cache):
-                """Decode `n` known tokens into a batch-1 cache piece via
-                lax.scan (prefix-cache suffix extension): one dispatch per
-                chunk instead of one per token. Returns the logits of the
-                last position."""
-                def body(c, tok):
-                    c, logits = model.decode_step(params, tok[None], c)
-                    return c, logits[0]
-                cache, logits = jax.lax.scan(body, cache, tokens)
-                return cache, logits[-1]
-            return extend
+        @functools.partial(jax.jit, static_argnames=("kv",))
+        def prefill_chunk(params, tokens, cache, q_offset, lengths, kv):
+            """Consume one token chunk for every queued sequence in a single
+            dispatch, writing K/V (or recurrent state) straight into the
+            cache at per-row position offsets. Rows with lengths == 0 are
+            preserved bit-for-bit. `kv` (static) bounds the live context so
+            attention/write cost tracks actual positions, not max_len."""
+            return model.prefill_chunk(params, tokens, cache,
+                                       q_offset=q_offset, lengths=lengths,
+                                       kv_width=kv)
+
+        def gather_rows(cache, idx):
+            """Compact the rows being prefilled into a small batch: the chunk
+            program's cost scales with the burst, not max_slots."""
+            def g(leaf, ax):
+                if ax is None:
+                    return leaf
+                return jnp.take(leaf, idx, axis=ax)
+            return jax.tree.map(g, cache, baxes)
+
+        def scatter_rows(cache, piece, idx):
+            def s(leaf, p, ax):
+                if ax is None:
+                    return leaf
+                lm = jnp.moveaxis(leaf, ax, 0)
+                lm = lm.at[idx].set(jnp.moveaxis(p, ax, 0).astype(lm.dtype))
+                return jnp.moveaxis(lm, 0, ax)
+            return jax.tree.map(s, cache, piece, baxes)
+
+        def reset_rows(piece, zero, mask):
+            """Reset masked rows of a gathered piece to pristine state
+            (`zero` is a batch-1 init_cache tree, broadcast along batch):
+            stateful models must not resume a fresh prompt from a previous
+            occupant's recurrent carries."""
+            def r(leaf, z, ax):
+                if ax is None:
+                    return leaf
+                shape = [1] * leaf.ndim
+                shape[ax] = leaf.shape[ax]
+                return jnp.where(mask.reshape(shape), z.astype(leaf.dtype),
+                                 leaf)
+            return jax.tree.map(r, piece, zero, baxes)
 
         self.decode = decode
         self.insert = jax.jit(insert)
         self.extract = jax.jit(extract)
-        self.extend = {n: make_extend(n) for n in self.EXTEND_CHUNKS}
+        self.prefill_chunk = prefill_chunk
+        self.gather_rows = jax.jit(gather_rows)
+        self.scatter_rows = jax.jit(scatter_rows)
+        self.reset_rows = jax.jit(reset_rows)
 
         @jax.jit
         def set_seq_len(cache, slot, value):
@@ -190,8 +255,15 @@ class ServingEngine:
     def __init__(self, cfg, *, max_slots: int = 8, max_len: int = 512,
                  temperature: float = 0.0, rng_seed: int = 0,
                  page_size: int = 16, hbm_pages: Optional[int] = None,
-                 params=None, prefix_cache=None):
+                 params=None, prefix_cache=None, serial_prefill: bool = False,
+                 prefill_chunk_cap: Optional[int] = None):
         self.cfg = cfg
+        self.serial_prefill = serial_prefill   # True: legacy one-sequence-
+                                               # per-XLA-call prefill (the
+                                               # baseline bench_prefill beats)
+        self.prefill_chunk_cap = prefill_chunk_cap   # smaller cap = tighter
+                                               # decode-stall bound while a
+                                               # long prompt admits
         self._jits = _jits_for(cfg, temperature)
         self.model = self._jits.model
         self.max_slots = max_slots
@@ -210,13 +282,27 @@ class ServingEngine:
         pages = hbm_pages if hbm_pages is not None else max_slots * (
             -(-max_len // page_size))
         self.pager = PageAllocator(pages, page_size)
+        self._vlm = bool(getattr(self.model, "is_vlm", False))
         self.prefix_cache = prefix_cache   # shared PrefixCache or None
         self._last_logits = None           # device (max_slots, vocab), last step
         self._lock = threading.Lock()
+        self._prefill_queue: List[_PendingPrefill] = []
+        cap = min(max_len, prefill_chunk_cap or max_len)
+        self.prefill_chunks = tuple(
+            c for c in _EngineJits.PREFILL_CHUNKS if c <= cap) or \
+            (_EngineJits.PREFILL_CHUNKS[0],)
+        # coarse live-context buckets: each (batch, chunk, kv) combo is its
+        # own XLA program, so kv granularity trades chunk FLOPs against
+        # compile count (3 buckets keeps interactive workloads to a handful
+        # of programs)
+        self.kv_buckets = tuple(sorted({min(64, max_len), min(256, max_len),
+                                        max_len}))
         self.stats = {"decode_steps": 0, "prefills": 0, "tokens": 0,
                       "preemptions": 0, "restores": 0,
                       "prefix_hits": 0, "prefix_saved_tokens": 0,
-                      "prefix_extend_tokens": 0}
+                      "prefix_extend_tokens": 0,
+                      "prefill_chunks": 0, "prefill_bursts": 0,
+                      "batched_prefill_tokens": 0}
         self._build_jits()
 
     # -- jit'd primitives -------------------------------------------------------
@@ -228,7 +314,10 @@ class ServingEngine:
         self._set_len_jit = js.set_len
         self._prefill_jit = js.prefill
         self._prefill_img_jit = js.prefill_img
-        self._extend_jits = js.extend
+        self._prefill_chunk_jit = js.prefill_chunk
+        self._gather_jit = js.gather_rows
+        self._scatter_jit = js.scatter_rows
+        self._reset_jit = js.reset_rows
         self._sample1_jit = js.sample1
         self._sample_all_jit = js.sample_all
         self._cache_b1, _ = self.model.init_cache(1, self.max_len)
@@ -244,47 +333,239 @@ class ServingEngine:
         return None
 
     def active_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if s.active]
+        """Slots that decode this step (admitted AND done prefilling)."""
+        return [i for i, s in enumerate(self.slots)
+                if s.active and not s.prefilling]
+
+    def is_prefilling(self, slot: int) -> bool:
+        return self.slots[slot].prefilling
+
+    def prefill_pending(self) -> int:
+        """Sequences still consuming prompt chunks (queued prefill jobs)."""
+        return len(self._prefill_queue)
 
     def can_admit(self, prompt_len: int, max_new: int) -> bool:
         return (self._find_free_slot() is not None and
                 prompt_len + max_new <= self.max_len and
                 self.pager.can_admit(prompt_len + max_new))
 
-    # -- admission (prefill) --------------------------------------------------------
+    # -- admission (batched chunked prefill) ----------------------------------------
     def add_sequence(self, prompt, *, seq_id=None, max_new: int = 32,
-                     eos_id: int = -1, seq_key=None, image_embeds=None) -> int:
-        prompt = np.asarray(prompt, dtype=np.int32)
-        P = len(prompt)
+                     eos_id: int = -1, seq_key=None, image_embeds=None,
+                     eager: bool = True) -> int:
+        return self.add_sequences(
+            [dict(prompt=prompt, seq_id=seq_id, max_new=max_new,
+                  eos_id=eos_id, seq_key=seq_key, image_embeds=image_embeds)],
+            eager=eager)[0]
+
+    def add_sequences(self, requests, *, eager: bool = True) -> List[int]:
+        """Admit a burst of sequences. Each request is a dict with ``prompt``
+        plus optional ``seq_id``/``max_new``/``eos_id``/``seq_key``/
+        ``image_embeds``. Exact prefix-cache hits activate immediately;
+        everything else (fresh prompts AND prefix suffix extensions) joins
+        the chunked-prefill queue so the whole burst shares one XLA dispatch
+        per chunk. With ``eager`` the queue is drained before returning;
+        ``eager=False`` lets the caller interleave ``prefill_step()`` with
+        decode ``step()`` (the BatchedScheduler worker loop).
+
+        Raises on the first request that cannot be admitted; requests before
+        it in the burst stay admitted (and, with ``eager``, prefilled)."""
+        slots: List[int] = []
+        if len(requests) > 1:
+            self.stats["prefill_bursts"] += 1
+        admitted, err = [], None
+        for r in requests:
+            prompt = np.asarray(r["prompt"], dtype=np.int32)
+            P = len(prompt)
+            max_new = r.get("max_new", 32)
+            with self._lock:
+                slot = self._find_free_slot()
+                if slot is None:
+                    err = RuntimeError("no free decode slot")
+                    break
+                if P + max_new > self.max_len:
+                    err = RuntimeError(
+                        f"context {P + max_new} > max_len {self.max_len}")
+                    break
+                if not self.pager.reserve(f"slot{slot}", P + max_new):
+                    err = RuntimeError("HBM pages exhausted")
+                    break
+                s = self.slots[slot]
+                s.active = True
+                s.prefilling = False
+                s.seq_id = r.get("seq_id")
+                s.prompt = prompt
+                s.generated = []
+                s.counter = 0
+                s.max_new = max_new
+                s.eos_id = r.get("eos_id", -1)
+            seq_key = r.get("seq_key")
+            if seq_key is None:
+                seq_key = jax.random.key(
+                    (int(np.sum(prompt)) * 2654435761 + P) % (2**31))
+            admitted.append((slot, r, prompt, seq_key))
+            slots.append(slot)
+        if err is not None:
+            # callers of a partially-admitted burst still need handles to the
+            # live slots (to drain/free them) -- attach them to the error
+            err.admitted_slots = list(slots)
+        if not admitted:
+            if err is not None:
+                raise err
+            return []
+        # one batched bookkeeping dispatch for the whole burst
+        idx = jnp.asarray([a[0] for a in admitted], jnp.int32)
+        self.seq_keys = self.seq_keys.at[idx].set(
+            jnp.stack([a[3] for a in admitted]))
+        self.counters = self.counters.at[idx].set(0)
+        for slot, r, prompt, _ in admitted:
+            P = len(prompt)
+            image_embeds = r.get("image_embeds")
+            hit = None
+            if self.prefix_cache is not None and image_embeds is None:
+                hit = self.prefix_cache.lookup(prompt)
+            if hit is not None and hit.seq_len == P:
+                # exact hit: restore the cached cache slice + logits, no
+                # prompt tokens left to consume
+                cache1 = jax.tree.unflatten(
+                    self._piece_treedef, [jnp.asarray(x) for x in hit.state])
+                self._activate_slot(slot, cache1, jnp.asarray(hit.logits))
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_saved_tokens"] += hit.seq_len
+            elif hit is not None and not self.serial_prefill:
+                # suffix extension: restore the prefix, then chunk-prefill
+                # only prompt[hit.seq_len:] (ONE chunked-prefill job, not
+                # token-scan decode chunks). Safe for VLM rows too: the
+                # inserted piece carries the conversation's own image K/V.
+                cache1 = jax.tree.unflatten(
+                    self._piece_treedef, [jnp.asarray(x) for x in hit.state])
+                self.cache = self._insert_jit(self.cache, cache1, slot)
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_saved_tokens"] += hit.seq_len
+                self.stats["prefix_extend_tokens"] += P - hit.seq_len
+                self._enqueue_prefill(slot, prompt, done=hit.seq_len,
+                                      fresh=False)
+            elif (self.serial_prefill or image_embeds is not None or
+                  self._vlm):
+                # legacy path: one full single-sequence prefill per XLA call
+                # (kept as the bench_prefill baseline). FRESH VLM prompts
+                # always land here: a fresh chunked prefill would read the
+                # slot's PREVIOUS image K/V on a text-only admission -- and
+                # image embeds don't join mixed chunk batches anyway
+                # (ROADMAP follow-on)
+                self._prefill_into(slot, prompt, image_embeds=image_embeds)
+                self.stats["prefills"] += 1
+            elif eager and len(admitted) == 1 and not self._prefill_queue:
+                # burst of one with nothing to share a dispatch with: the
+                # plain single-sequence prefill beats a padded chunk dispatch
+                # (non-eager singles still enqueue -- they can join chunks of
+                # work already in flight)
+                self._prefill_into(slot, prompt)
+                self.stats["prefills"] += 1
+            else:
+                self.stats["prefills"] += 1
+                self._enqueue_prefill(slot, prompt, done=0, fresh=True)
+        if eager:
+            while self._prefill_queue:
+                self.prefill_step()
+        if err is not None:       # the rejected request; earlier ones are live
+            raise err
+        return slots
+
+    def _enqueue_prefill(self, slot: int, tokens: np.ndarray, *, done: int,
+                         fresh: bool):
+        # (fresh rows of stateful models are reset batch-wise inside
+        # prefill_step, right after the gather)
+        self.slots[slot].prefilling = True
         with self._lock:
-            slot = self._find_free_slot()
-            if slot is None:
-                raise RuntimeError("no free decode slot")
-            if P + max_new > self.max_len:
-                raise RuntimeError(f"context {P + max_new} > max_len {self.max_len}")
-            if not self.pager.reserve(f"slot{slot}", P + max_new):
-                raise RuntimeError("HBM pages exhausted")
-            s = self.slots[slot]
-            s.active = True
-            s.seq_id = seq_id
-            s.prompt = prompt
-            s.generated = []
-            s.counter = 0
-            s.max_new = max_new
-            s.eos_id = eos_id
-        if seq_key is None:
-            seq_key = jax.random.key((int(np.sum(prompt)) * 2654435761 + P) % (2**31))
-        self.seq_keys = self.seq_keys.at[slot].set(seq_key)
-        self.counters = self.counters.at[slot].set(0)
-        hit = None
-        if self.prefix_cache is not None and image_embeds is None:
-            hit = self.prefix_cache.lookup(prompt)
-        if hit is not None:
-            self._admit_from_prefix(slot, prompt, hit)
-        else:
-            self._prefill_into(slot, prompt, image_embeds=image_embeds)
-            self.stats["prefills"] += 1
-        return slot
+            self._prefill_queue.append(
+                _PendingPrefill(slot, np.asarray(tokens, np.int32), done,
+                                fresh))
+
+    def prefill_step(self) -> List[int]:
+        """Consume ONE token chunk for every queued prefill job in a single
+        batched dispatch. The job rows are compacted (gather -> chunk ->
+        scatter) into a power-of-two batch bucket, the chunk size is the
+        smallest compiled bucket covering the longest remaining prompt (so a
+        short prompt rides along in the tail of a long one's chunk), and the
+        live-context width is bucketed statically -- dispatch cost scales
+        with the burst and its actual context, not max_slots x max_len.
+        Returns the slots whose prompt completed this call -- they are
+        activated (pending token sampled) and, when a prefix cache is
+        attached, their post-prefill state is cached for reuse."""
+        with self._lock:
+            jobs = list(self._prefill_queue)
+        if not jobs:
+            return []
+        rem = max(len(j.tokens) - j.done for j in jobs)
+        c = next((b for b in self.prefill_chunks if b >= rem),
+                 self.prefill_chunks[-1])
+        kb = 1
+        while kb < len(jobs):
+            kb *= 2
+        kb = min(kb, self.max_slots)
+        # pad the gathered batch with slots NOT being prefilled: their rows
+        # ride along as strict no-ops (lengths == 0) and scatter back
+        # bit-identical
+        idx = [j.slot for j in jobs]
+        if len(idx) < kb:
+            spare = [i for i in range(self.max_slots) if i not in set(idx)]
+            idx += spare[:kb - len(idx)]
+        buf = np.zeros((kb, c), np.int32)
+        lengths = np.zeros((kb,), np.int32)
+        offsets = np.zeros((kb,), np.int32)
+        for r, j in enumerate(jobs):
+            n = min(len(j.tokens) - j.done, c)
+            buf[r, :n] = j.tokens[j.done:j.done + n]
+            lengths[r] = n
+            offsets[r] = j.done
+        max_end = int((offsets + lengths).max())
+        kv = next(b for b in self.kv_buckets if b >= max_end)
+        idx_arr = jnp.asarray(np.asarray(idx, np.int32))
+        piece = self._gather_jit(self.cache, idx_arr)
+        if self.model.stateful_prefill:
+            fresh = np.zeros((kb,), bool)
+            for r, j in enumerate(jobs):
+                fresh[r] = j.fresh and j.done == 0
+            if fresh.any():
+                piece = self._reset_jit(piece, self._cache_b1,
+                                        jnp.asarray(fresh))
+        piece, logits = self._prefill_chunk_jit(
+            self.params, jnp.asarray(buf), piece,
+            jnp.asarray(offsets), jnp.asarray(lengths), kv=kv)
+        self.cache = self._scatter_jit(self.cache, piece, idx_arr)
+        self.stats["prefill_chunks"] += 1
+        self.stats["batched_prefill_tokens"] += int(lengths.sum())
+        fin_rows = [r for r, j in enumerate(jobs)
+                    if j.done + int(lengths[r]) >= len(j.tokens)]
+        for r, j in enumerate(jobs):
+            j.done += int(lengths[r])
+        if not fin_rows:
+            return []
+        # activate every finishing sequence with ONE batched sampling
+        # dispatch (identical per-row math to the single-sequence sampler)
+        fin_slots = [jobs[r].slot for r in fin_rows]
+        sl = jnp.asarray(fin_slots, jnp.int32)
+        pend = self._sample_all_jit(logits[jnp.asarray(fin_rows)],
+                                    self.seq_keys[sl], self.counters[sl])
+        self.next_tokens = self.next_tokens.at[sl].set(pend)
+        new_counters = []
+        for r in fin_rows:
+            s = self.slots[jobs[r].slot]
+            s.prefilling = False
+            s.counter += 1
+            new_counters.append(s.counter)
+        self.counters = self.counters.at[sl].set(
+            jnp.asarray(new_counters, jnp.int32))
+        if self.prefix_cache is not None:
+            for r in fin_rows:
+                piece1 = self._extract_jit(self.cache, jobs[r].slot)
+                self._cache_prefix(jobs[r].tokens, piece1, logits[r])
+        with self._lock:
+            done_set = set(fin_slots)
+            self._prefill_queue = [j for j in self._prefill_queue
+                                   if j.slot not in done_set]
+        return fin_slots
 
     def _prefill_into(self, slot: int, tokens: np.ndarray, *, image_embeds=None):
         """Prefill `tokens` into `slot`'s cache and sample the pending token
@@ -310,14 +591,21 @@ class ServingEngine:
         token with the slot's own key/counter -- the sampling protocol that
         keeps prefill, restore and prefix-cache admission bit-identical."""
         self.cache = self._insert_jit(self.cache, cache1, slot)
+        self._activate_in_place(slot, logits_vec)
+
+    def _activate_in_place(self, slot: int, logits_vec):
+        """Sample `slot`'s pending token from its last-position logits (the
+        cache row is already in place -- chunked prefill writes it directly)
+        and mark the slot ready to decode."""
         s = self.slots[slot]
+        s.prefilling = False
         pending = self._sample1_jit(logits_vec, self.seq_keys[slot],
                                     jnp.int32(s.counter))
         self.next_tokens = self.next_tokens.at[slot].set(pending)
         s.counter += 1
         self.counters = self.counters.at[slot].set(s.counter)
 
-    # -- prefix cache (restore-then-extend instead of re-prefill) -----------------
+    # -- prefix cache (restore, then chunk-prefill the suffix) --------------------
     def _cache_prefix(self, tokens: np.ndarray, cache1, logits_vec):
         """Store a batch-1 cache tree + last-position logits under `tokens`.
         Leaves stay on device: entries restore with zero host round-trips
@@ -327,33 +615,6 @@ class ServingEngine:
             generated=[], seq_len=len(tokens),
             state=list(jax.tree.leaves(cache1)), logits=logits_vec)
         self.prefix_cache.insert(snap)
-
-    def _admit_from_prefix(self, slot: int, prompt: np.ndarray,
-                           snap: ContextSnapshot):
-        """Restore a cached prefill prefix and extend it over the remaining
-        suffix tokens -- no prefill. The suffix is decoded in power-of-two
-        scan chunks (compiled once per chunk size, ever). Bit-exact vs the
-        prefill path: the cache state is deterministic in the tokens, and the
-        pending token is sampled with this sequence's own key/counter."""
-        P = len(prompt)
-        cache1 = jax.tree.unflatten(
-            self._piece_treedef, [jnp.asarray(x) for x in snap.state])
-        if snap.seq_len == P:
-            logits_vec = jnp.asarray(snap.logits)
-        else:
-            suffix = np.asarray(prompt[snap.seq_len:], np.int32)
-            i = 0
-            for n in _EngineJits.EXTEND_CHUNKS:
-                while len(suffix) - i >= n:
-                    cache1, logits_vec = self._extend_jits[n](
-                        self.params, jnp.asarray(suffix[i:i + n]), cache1)
-                    i += n
-            self.stats["prefix_extend_tokens"] += len(suffix)
-            if self.prefix_cache is not None:
-                self._cache_prefix(prompt, cache1, logits_vec)
-        self._activate_slot(slot, cache1, logits_vec)
-        self.stats["prefix_hits"] += 1
-        self.stats["prefix_saved_tokens"] += snap.seq_len
 
     def harvest_prefix(self, slot: int):
         """Cache a finishing sequence's full context (prompt + generation) so
@@ -418,6 +679,8 @@ class ServingEngine:
         s = self.slots[slot]
         if not s.active:
             return True
+        if s.prefilling:
+            return False
         if len(s.generated) >= s.max_new:
             return True
         return bool(s.generated) and s.generated[-1] == s.eos_id
@@ -428,6 +691,9 @@ class ServingEngine:
     def free(self, slot: int):
         with self._lock:
             self.slots[slot].active = False
+            self.slots[slot].prefilling = False
+            self._prefill_queue = [j for j in self._prefill_queue
+                                   if j.slot != slot]
             self.pager.release(f"slot{slot}")
             self.cache = self._set_len_jit(self.cache, slot, 0)
 
@@ -435,7 +701,7 @@ class ServingEngine:
     def snapshot(self, slot: int, *, kind: str = "logits") -> ContextSnapshot:
         """Suspend a sequence: capture its state and free the slot."""
         s = self.slots[slot]
-        assert s.active
+        assert s.active and not s.prefilling
         state = None
         pending = int(self.next_tokens[slot])
         if kind == "logits":
@@ -452,8 +718,13 @@ class ServingEngine:
         self.stats["preemptions"] += 1
         return snap
 
-    def restore(self, snap: ContextSnapshot, *, seq_id=None) -> int:
-        """Resume a suspended sequence into a free slot (exact continuation)."""
+    def restore(self, snap: ContextSnapshot, *, seq_id=None,
+                eager: bool = True) -> int:
+        """Resume a suspended sequence into a free slot (exact continuation).
+        A text-kind snapshot re-prefills its context; with ``eager=False``
+        that re-prefill only joins the chunked queue, so a scheduler worker
+        can interleave it with decode instead of stalling on a full
+        prefill."""
         with self._lock:
             slot = self._find_free_slot()
             if slot is None:
@@ -482,6 +753,11 @@ class ServingEngine:
             ctx = np.concatenate([snap.prompt,
                                   np.asarray(snap.generated, np.int32)]) \
                 if snap.generated else snap.prompt
-            self._prefill_into(slot, ctx)
+            if self.serial_prefill or self._vlm:
+                self._prefill_into(slot, ctx)
+            else:
+                self._enqueue_prefill(slot, ctx, done=0, fresh=True)
+                while eager and self.slots[slot].prefilling:
+                    self.prefill_step()
         self.stats["restores"] += 1
         return slot

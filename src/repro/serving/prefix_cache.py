@@ -10,8 +10,11 @@ right after prefill, plus the last-position logits so an exact hit can sample
 its pending token without touching the model.
 
 Keys are the raw token bytes of the cached prefix; lookup returns the longest
-cached entry that is a prefix of the incoming prompt, and the engine
-restores-then-extends (decode over the suffix) instead of re-prefilling.
+cached entry that is a prefix of the incoming prompt, and the engine restores
+the cached state into the slot and consumes only the remaining suffix with
+ONE chunked-prefill job (`ServingEngine._enqueue_prefill` at the prefix
+offset) instead of re-prefilling from token zero -- a suffix extension rides
+the same batched chunk dispatches as fresh admissions.
 
 One PrefixCache instance is shared by every core in an ``LLMCorePool``
 (identical replicas => snapshots are interchangeable), so a prefix prefilled

@@ -119,15 +119,170 @@ class TestEngine:
         _drain(eng, s)
 
 
+class TestChunkedPrefill:
+    """Batched chunked prefill (burst admission) must be bit-exact with the
+    legacy one-sequence-per-XLA-call path, with the prefix cache on or off."""
+
+    def _mk(self, *, serial=False, cache=False, params=None, pc=None,
+            max_len=256):
+        from repro.serving import PrefixCache
+        if cache and pc is None:
+            pc = PrefixCache()
+        return ServingEngine(get_config("tiny"), max_slots=8, max_len=max_len,
+                             rng_seed=0, params=params, serial_prefill=serial,
+                             prefix_cache=pc)
+
+    def _prompts(self):
+        rng = np.random.default_rng(7)
+        return [rng.integers(1, 500, n).astype(np.int32)
+                for n in (8, 33, 100, 230, 64, 17)]
+
+    def _drain_all(self, eng, slots):
+        while any(not eng.is_done(s) for s in slots):
+            eng.step()
+        outs = [eng.result(s) for s in slots]
+        for s in slots:
+            eng.free(s)
+        return outs
+
+    @pytest.mark.parametrize("cache", [False, True])
+    @pytest.mark.parametrize("temperature", [0.0, 0.7])
+    def test_burst_matches_serial(self, cache, temperature):
+        from repro.serving import PrefixCache
+        cfg = get_config("tiny")
+        ref = ServingEngine(cfg, max_slots=8, max_len=256, rng_seed=0,
+                            temperature=temperature, serial_prefill=True,
+                            prefix_cache=PrefixCache() if cache else None)
+        eng = ServingEngine(cfg, max_slots=8, max_len=256, rng_seed=0,
+                            temperature=temperature, params=ref.params,
+                            prefix_cache=PrefixCache() if cache else None)
+        prompts = self._prompts()
+        ref_out = [self._drain_all(ref, [ref.add_sequence(p, max_new=10)])[0]
+                   for p in prompts]
+        slots = eng.add_sequences([dict(prompt=p, max_new=10)
+                                   for p in prompts])
+        assert self._drain_all(eng, slots) == ref_out
+        assert eng.stats["prefill_bursts"] == 1
+        # the whole burst fits one 256-token chunk dispatch
+        assert eng.stats["prefill_chunks"] == 1
+        assert eng.stats["prefills"] == len(prompts)
+
+    def test_single_admissions_match_serial(self):
+        """One-at-a-time admissions stay exact both ways: the eager burst-of-
+        one fast path (delegates to serial prefill) and a forced chunked
+        single (eager=False + manual drain, the scheduler's shape)."""
+        ref = self._mk(serial=True)
+        eng = self._mk(params=ref.params)
+        for p in self._prompts():
+            a = self._drain_all(ref, [ref.add_sequence(p, max_new=10)])[0]
+            b = self._drain_all(eng, [eng.add_sequence(p, max_new=10)])[0]
+            slot = eng.add_sequence(p, max_new=10, eager=False)
+            assert eng.is_prefilling(slot)
+            while eng.prefill_pending():
+                eng.prefill_step()
+            c = self._drain_all(eng, [slot])[0]
+            assert a == b == c
+
+    def test_prefill_interleaves_without_disturbing_decode(self):
+        """Chunked prefill writes into the shared decode cache; rows that are
+        decoding (or idle) must be preserved bit-for-bit across interleaved
+        chunk dispatches -- and vice versa for half-prefilled rows across
+        decode steps."""
+        ref = self._mk(serial=True)
+        eng = self._mk(params=ref.params)
+        prompt = np.arange(1, 9)
+        expect = self._drain_all(ref, [ref.add_sequence(prompt, max_new=12)])[0]
+
+        slot = eng.add_sequence(prompt, max_new=12)
+        for _ in range(3):
+            eng.step()
+        rng = np.random.default_rng(3)
+        late = eng.add_sequences(
+            [dict(prompt=rng.integers(1, 500, 200).astype(np.int32),
+                  max_new=4),
+             dict(prompt=rng.integers(1, 500, 90).astype(np.int32),
+                  max_new=4)], eager=False)
+        while eng.prefill_pending():
+            eng.prefill_step()     # one chunk ...
+            eng.step()             # ... then a decode quantum, interleaved
+        assert self._drain_all(eng, [slot] + late)[0] == expect
+
+    @pytest.mark.parametrize("arch", ["rwkv6-1.6b", "recurrentgemma-2b"])
+    def test_stateful_model_slot_reuse_is_clean(self, arch):
+        """Chunked prefill resumes recurrent state from the cache row, so a
+        reused slot must be reset before a fresh prompt's first chunk -- a
+        previous occupant's wkv/RG-LRU carries must not leak in."""
+        cfg = get_config(arch, smoke=True)
+        eng = ServingEngine(cfg, max_slots=2, max_len=128, rng_seed=0)
+        assert eng.model.stateful_prefill
+        prompt_b = np.arange(5, 45)
+        # reference: B admitted on a pristine slot
+        ref = ServingEngine(cfg, max_slots=2, max_len=128, rng_seed=0,
+                            params=eng.params)
+        expect = self._drain_all(ref, [ref.add_sequence(prompt_b, max_new=6)])
+
+        def admit_chunked(e, prompt):
+            # eager=False forces the chunked path (an eager burst of one
+            # takes the serial fast path, which resets state trivially)
+            slot = e.add_sequence(prompt, max_new=6, eager=False)
+            while e.prefill_pending():
+                e.prefill_step()
+            return slot
+
+        # dirty the slot with a different sequence first, then reuse it
+        self._drain_all(eng, [admit_chunked(eng, np.arange(100, 160))])
+        got = self._drain_all(eng, [admit_chunked(eng, prompt_b)])
+        assert got == expect
+
+    @pytest.mark.parametrize("eager", [True, False])
+    def test_restore_text_reprefills_chunked(self, eager):
+        """Text-kind restore re-prefills through the chunked queue; with
+        eager=False it only enqueues, so a worker can interleave the
+        re-prefill with decode instead of stalling on it."""
+        eng = self._mk()
+        slot = eng.add_sequence(np.arange(1, 40), max_new=12)
+        ref = self._drain_all(eng, [slot])[0]
+        slot = eng.add_sequence(np.arange(1, 40), max_new=12)
+        for _ in range(5):
+            eng.step()
+        snap = eng.snapshot(slot, kind="text")
+        chunks_before = eng.stats["prefill_chunks"]
+        slot = eng.restore(snap, eager=eager)
+        if eager:
+            assert not eng.is_prefilling(slot)
+        else:
+            assert eng.is_prefilling(slot)
+            while eng.prefill_pending():
+                eng.prefill_step()
+                eng.step()
+        assert eng.stats["prefill_chunks"] > chunks_before
+        assert self._drain_all(eng, [slot])[0] == ref
+
+    def test_partial_burst_error_carries_admitted_slots(self):
+        """A burst larger than capacity raises, but the error hands back the
+        slots that WERE admitted so the caller can drain/free them."""
+        eng = ServingEngine(get_config("tiny"), max_slots=2, max_len=256,
+                            rng_seed=0)
+        prompts = [np.arange(1, 20), np.arange(1, 30), np.arange(1, 40)]
+        with pytest.raises(RuntimeError, match="no free decode slot") as ei:
+            eng.add_sequences([dict(prompt=p, max_new=4) for p in prompts])
+        live = ei.value.admitted_slots
+        assert len(live) == 2
+        outs = self._drain_all(eng, live)
+        assert all(len(o) == 4 for o in outs)
+        assert eng.free_slot_count() == 2      # fully recovered
+
+
 class TestPrefixCache:
     """Pool-wide prompt prefix caching: restore-then-extend instead of
     re-prefill, bit-exact with the cache on and off."""
 
-    def _mk(self, cache, params=None):
+    def _mk(self, cache, params=None, pc=None):
         from repro.serving import PrefixCache
+        if cache and pc is None:
+            pc = PrefixCache()
         return ServingEngine(get_config("tiny"), max_slots=4, max_len=256,
-                             rng_seed=0, params=params,
-                             prefix_cache=PrefixCache() if cache else None)
+                             rng_seed=0, params=params, prefix_cache=pc)
 
     def test_exact_hit_skips_prefill(self):
         eng = self._mk(cache=True)
@@ -197,6 +352,112 @@ class TestPrefixCache:
                                       generated=[], seq_len=n, state=[]))
         hit = pc.lookup(np.asarray(base, np.int32))
         assert hit is not None and hit.seq_len == 16
+
+    def test_suffix_extension_on_chunk_boundary(self):
+        """Grown conversations whose suffix lands EXACTLY on a prefill chunk
+        size (32) must extend bit-exactly -- the off-by-one hotspot of the
+        chunk bucket picker."""
+        ref = self._mk(cache=False)
+        eng = self._mk(cache=True, params=ref.params)
+
+        def conversation(e):
+            prompt = list(range(1, 33))          # 32 tokens cached
+            outs = []
+            for turn in range(3):
+                slot = e.add_sequence(np.asarray(prompt, np.int32), max_new=8)
+                while not e.is_done(slot):
+                    e.step()
+                g = e.result(slot)
+                e.harvest_prefix(slot)
+                e.free(slot)
+                outs.append(list(g))
+                # longest cached prefix is the harvested prompt+generation,
+                # so the next suffix = the 32 new-turn tokens: exactly one
+                # full 32-token chunk
+                prompt = prompt + g + [100 + turn + i for i in range(32)]
+            return outs
+
+        assert conversation(ref) == conversation(eng)
+        assert eng.stats["prefix_hits"] == 2
+        assert eng.stats["prefix_extend_tokens"] == 64   # 2 turns x 32
+        assert eng.stats["prefills"] == 1
+
+    def test_eviction_mid_extension_under_tight_budget(self):
+        """A tight byte budget can evict the very entry a sequence is
+        extending from (the completion re-insert of the grown prefix pushes
+        it out). The in-flight extension holds its own reference, so tokens
+        must stay exact and the engine must not crash."""
+        from repro.serving import PrefixCache
+        ref = self._mk(cache=False)
+        probe = self._mk(cache=True, params=ref.params)
+        # measure one entry's size, then budget for ~1.5 entries
+        slot = probe.add_sequence(np.arange(1, 33), max_new=4)
+        while not probe.is_done(slot):
+            probe.step()
+        probe.free(slot)
+        entry_bytes = probe.prefix_cache.used_bytes
+        pc = PrefixCache(budget_bytes=int(entry_bytes * 1.5), max_entries=8)
+        eng = ServingEngine(get_config("tiny"), max_slots=4, max_len=256,
+                            rng_seed=0, params=ref.params, prefix_cache=pc)
+
+        def conversation(e):
+            prompt = list(range(1, 33))
+            outs = []
+            for turn in range(3):
+                slot = e.add_sequence(np.asarray(prompt, np.int32), max_new=6)
+                while not e.is_done(slot):
+                    e.step()
+                g = e.result(slot)
+                e.harvest_prefix(slot)
+                e.free(slot)
+                outs.append(list(g))
+                prompt = prompt + g + [60 + turn, 70 + turn]
+            return outs
+
+        assert conversation(ref) == conversation(eng)
+        assert pc.stats["evictions"] >= 1            # budget forced churn
+        assert eng.stats["prefix_hits"] >= 1         # reuse still happened
+
+    def test_prefix_hit_after_cross_core_migration(self):
+        """Pool scenario: a sequence prefills on core A, is preempted and
+        migrated to core B (snapshot/restore), finishes and is harvested
+        there -- the next grown resubmission on core A must hit the SHARED
+        prefix cache and stay bit-exact."""
+        from repro.serving import PrefixCache
+        pc = PrefixCache()
+        ref = self._mk(cache=False)                       # oracle, no cache
+        core_a = self._mk(cache=True, params=ref.params, pc=pc)
+        core_b = self._mk(cache=True, params=ref.params, pc=pc)
+
+        def finish(e, slot):
+            while not e.is_done(slot):
+                e.step()
+            g = e.result(slot)
+            e.harvest_prefix(slot)
+            e.free(slot)
+            return g
+
+        prompt = np.arange(1, 41)
+        g_ref = finish(ref, ref.add_sequence(prompt, max_new=8))
+        grown_ref = list(prompt) + g_ref + [90, 91]
+        g2_ref = finish(ref, ref.add_sequence(np.asarray(grown_ref, np.int32),
+                                              max_new=8))
+
+        slot = core_a.add_sequence(prompt, max_new=8)
+        for _ in range(3):
+            core_a.step()
+        snap = core_a.snapshot(slot)                      # preempt on A ...
+        slot = core_b.restore(snap)                       # ... migrate to B
+        g = finish(core_b, slot)
+        assert g == g_ref
+        grown = list(prompt) + g + [90, 91]
+        prefills_before = core_a.stats["prefills"]
+        g2 = finish(core_a, core_a.add_sequence(np.asarray(grown, np.int32),
+                                                max_new=8))
+        assert g2 == g2_ref
+        assert core_a.stats["prefills"] == prefills_before   # extended, not re-prefilled
+        assert core_a.stats["prefix_hits"] >= 1
+        assert pc.stats["hits"] >= 1
 
     def test_pool_shares_prefix_across_cores(self):
         """A prefix prefilled on one core must be a hit on any core: the

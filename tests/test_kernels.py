@@ -108,6 +108,82 @@ def test_decode_attention_property(seq_lens, window):
 
 
 # ---------------------------------------------------------------------------
+# chunk attention (chunked prefill: prefix+chunk causal mask)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 24])
+@pytest.mark.parametrize("B,C,S,H,K,hd,bq,bk", [
+    (2, 24, 96, 4, 2, 16, 8, 32),
+    (3, 32, 130, 4, 1, 32, 16, 64),    # MQA, ragged cache vs block size
+])
+def test_chunk_attention_matches_ref(dtype, window, B, C, S, H, K, hd, bq, bk):
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = _rand(ks[0], (B, C, H, hd), dtype)
+    kc = _rand(ks[1], (B, S, K, hd), dtype)
+    vc = _rand(ks[2], (B, S, K, hd), dtype)
+    offs = jnp.asarray(np.linspace(0, S - C, B).astype(np.int32))
+    out = ops.chunk_attention(q, kc, vc, offs, window=window,
+                              backend="interpret", block_q=bq, block_k=bk)
+    exp = ref.chunk_attention_ref(q, kc, vc, offs, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_chunk_attention_one_token_equals_decode():
+    """decode_attention is the C == 1 case of chunk_attention: a query at
+    position seq_len - 1 over the same cache."""
+    ks = jax.random.split(jax.random.key(10), 3)
+    B, S, H, K, hd = 2, 96, 4, 2, 16
+    q = _rand(ks[0], (B, H, hd), jnp.float32)
+    kc = _rand(ks[1], (B, S, K, hd), jnp.float32)
+    vc = _rand(ks[2], (B, S, K, hd), jnp.float32)
+    sl = jnp.array([7, 90], jnp.int32)
+    dec = ops.decode_attention(q, kc, vc, sl, backend="interpret")
+    chk = ops.chunk_attention(q[:, None], kc, vc, sl - 1,
+                              backend="interpret")[:, 0]
+    np.testing.assert_allclose(dec, chk, atol=1e-6, rtol=1e-6)
+
+
+def test_chunk_attention_ignores_stale_cache_tail():
+    """Property: output only depends on cache positions <= each query's
+    absolute position (stale garbage beyond the written prefix is masked)."""
+    ks = jax.random.split(jax.random.key(11), 4)
+    B, C, S, H, K, hd = 2, 16, 64, 2, 1, 16
+    q = _rand(ks[0], (B, C, H, hd), jnp.float32)
+    kc = _rand(ks[1], (B, S, K, hd), jnp.float32)
+    vc = _rand(ks[2], (B, S, K, hd), jnp.float32)
+    offs = jnp.array([3, 40], jnp.int32)
+    base = ops.chunk_attention(q, kc, vc, offs, backend="interpret")
+    noise = _rand(ks[3], (B, S, K, hd), jnp.float32) * 100
+    dead = jnp.arange(S)[None, :, None, None] >= (offs + C)[:, None, None, None]
+    out = ops.chunk_attention(q, jnp.where(dead, noise, kc),
+                              jnp.where(dead, noise, vc), offs,
+                              backend="interpret")
+    np.testing.assert_allclose(base, out, atol=1e-5, rtol=1e-5)
+
+
+def test_flash_attention_per_sequence_offsets_and_kv_lens():
+    """Ragged chunked prefill on the fused path: per-sequence q_offsets and
+    kv_lens (SMEM scalars) vs the reference mask."""
+    ks = jax.random.split(jax.random.key(12), 3)
+    B, Sq, Skv, H, K, hd = 2, 16, 96, 4, 2, 16
+    q = _rand(ks[0], (B, Sq, H, hd), jnp.float32)
+    k = _rand(ks[1], (B, Skv, K, hd), jnp.float32)
+    v = _rand(ks[2], (B, Skv, K, hd), jnp.float32)
+    offs = jnp.array([0, 37], jnp.int32)
+    lens = offs + Sq
+    out = ops.flash_attention(q, k, v, backend="interpret", block_q=8,
+                              block_k=32, q_offsets=offs, kv_lens=lens)
+    exp = ref.flash_attention_ref(q, k, v, q_offsets=offs, kv_lens=lens)
+    np.testing.assert_allclose(out, exp, atol=2e-4, rtol=2e-4)
+    # the jnp fallback dispatcher must honor the same ragged parameters
+    out_jnp = ops.flash_attention(q, k, v, backend="jnp",
+                                  q_offsets=offs, kv_lens=lens)
+    np.testing.assert_allclose(out_jnp, exp, atol=0, rtol=0)
+
+
+# ---------------------------------------------------------------------------
 # rglru
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("B,T,W,bb,bw,bt", [

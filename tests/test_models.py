@@ -99,6 +99,64 @@ def test_ragged_prefill_lengths(arch):
         assert err < 1e-3, (arch, b, err)
 
 
+@pytest.mark.parametrize("arch", ARCHS)
+def test_chunked_prefill_matches_full_prefill(arch):
+    """prefill_chunk fed 16 tokens at a time (ragged lengths, resuming from
+    carried KV/recurrent state at per-sequence offsets) must reproduce the
+    one-shot prefill -- the substrate of batched burst admission."""
+    cfg = get_config(arch, smoke=True).replace(dtype=jnp.float32,
+                                               param_dtype=jnp.float32)
+    model = build_model(cfg)
+    params, _ = model.init_params(jax.random.key(0))
+    B, S = 2, 48
+    tokens, kw = _inputs(cfg, B, S)
+    lengths = jnp.array([S, 37], jnp.int32)
+
+    cache_a, _ = model.init_cache(B, S + 8)
+    cache_a, lg_ref = model.prefill(params, tokens, cache_a, lengths=lengths,
+                                    **kw)
+
+    cache, _ = model.init_cache(B, S + 8)
+    done = jnp.zeros((B,), jnp.int32)
+    lg_keep = jnp.zeros_like(lg_ref)
+    for start in range(0, S, 16):
+        ln = jnp.clip(lengths - done, 0, 16)
+        cache, lg = model.prefill_chunk(params, tokens[:, start:start + 16],
+                                        cache, q_offset=done, lengths=ln, **kw)
+        finishing = (ln > 0) & (done + ln == lengths)
+        lg_keep = jnp.where(finishing[:, None], lg, lg_keep)
+        done = done + ln
+    err = float(jnp.max(jnp.abs(lg_keep - lg_ref)))
+    scale = float(jnp.max(jnp.abs(lg_ref)))
+    assert err < 1e-3 * max(scale, 1.0), (arch, err, scale)
+    assert bool(jnp.all(cache["seq_lens"] == cache_a["seq_lens"]))
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "rwkv6-1.6b",
+                                  "recurrentgemma-2b", "moonshot-v1-16b-a3b"])
+def test_chunked_prefill_len0_rows_untouched(arch):
+    """A chunk dispatch must be a strict no-op for rows with lengths == 0 --
+    the invariant that lets one dispatch share the batch with decoding or
+    already-finished slots."""
+    cfg = get_config(arch, smoke=True).replace(dtype=jnp.float32,
+                                               param_dtype=jnp.float32)
+    model = build_model(cfg)
+    params, _ = model.init_params(jax.random.key(0))
+    B, S = 2, 32
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    cache, _ = model.init_cache(B, S + 8)
+    cache, _ = model.prefill(params, tokens, cache,
+                             lengths=jnp.array([20, 32], jnp.int32))
+    before = jax.tree.leaves(cache)
+    cache2, _ = model.prefill_chunk(params,
+                                    jnp.full((B, 16), 3, jnp.int32), cache,
+                                    q_offset=jnp.zeros((B,), jnp.int32),
+                                    lengths=jnp.zeros((B,), jnp.int32))
+    after = jax.tree.leaves(cache2)
+    for a, b in zip(before, after):
+        assert bool(jnp.all(a == b))
+
+
 def test_param_counts_match_published_scale():
     """Analytic parameter counts should land near the published sizes."""
     # moonshot: the assigned 48L x 64e x 1408ff implies ~28B total (the

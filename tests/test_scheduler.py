@@ -163,11 +163,11 @@ def test_batched_fault_requeues_centrally():
         original = core.admit
         state = {"failed": False}
 
-        def flaky(sc):
+        def flaky(sc, **kw):
             if not state["failed"]:
                 state["failed"] = True
                 raise ValueError("injected admission fault")
-            return original(sc)
+            return original(sc, **kw)
 
         core.admit = flaky
         sc = _llm("faulty", max_new=6)
@@ -226,6 +226,66 @@ def test_batched_infeasible_syscall_fails_fast():
         with pytest.raises(RuntimeError, match="capacity"):
             poison.join(timeout=120)
     assert poison.status == "error"
+
+
+def test_batched_infeasible_message_names_slots():
+    """The fail-fast error must say WHICH resource can never hold the
+    context: here max_len (decode slots) is the binding constraint."""
+    with make_kernel("batched", engine_kw={"max_slots": 2, "max_len": 64}) as k:
+        poison = LLMQuery(prompt=list(range(1, 60)),
+                          max_new_tokens=32).to_syscall("poison")
+        k.submit(poison)
+        with pytest.raises(RuntimeError, match="limiting resource: slots"):
+            poison.join(timeout=120)
+
+
+def test_batched_infeasible_message_names_pages():
+    """Same, with the HBM page budget as the binding constraint (max_len
+    would fit the context; pages cannot)."""
+    with make_kernel("batched", engine_kw={"max_slots": 2, "max_len": 256,
+                                           "hbm_pages": 4}) as k:
+        poison = LLMQuery(prompt=list(range(1, 81)),
+                          max_new_tokens=20).to_syscall("poison")
+        k.submit(poison)
+        with pytest.raises(RuntimeError, match="limiting resource: pages"):
+            poison.join(timeout=120)
+
+
+def test_batched_burst_spreads_evenly_across_cores():
+    """Burst placement is least-loaded per syscall with live inflight
+    accounting, so a burst splits evenly instead of piling onto one core."""
+    n = 8
+    with make_kernel("batched", num_cores=2,
+                     engine_kw={"max_slots": 8, "max_len": 256}) as k:
+        scs = [_llm(f"ev{i}", n_prompt=64, max_new=4) for i in range(n)]
+        for sc in scs:
+            k.submit(sc)
+        for sc in scs:
+            sc.join(timeout=300)
+    per_core = [c.engine.stats["prefills"] for c in k.pool.cores]
+    assert sum(per_core) == n
+    assert min(per_core) >= 2, per_core        # neither core starved
+
+
+def test_batched_burst_shares_prefill_dispatches():
+    """A burst of admissions must share chunked-prefill dispatches: the pool
+    runs strictly fewer chunk dispatches than sequences admitted (serial
+    admission would pay one full prefill per sequence)."""
+    n = 8
+    rng = np.random.default_rng(11)
+    prompts = [list(map(int, rng.integers(1, 500, 120))) for _ in range(n)]
+    with make_kernel("batched", num_cores=2,
+                     engine_kw={"max_slots": 8, "max_len": 256}) as k:
+        scs = [LLMQuery(prompt=p, max_new_tokens=6).to_syscall(f"b{i}")
+               for i, p in enumerate(prompts)]
+        for sc in scs:
+            k.submit(sc)
+        outs = [sc.join(timeout=300) for sc in scs]
+    assert all(len(o["tokens"]) == 6 for o in outs)
+    chunks = sum(c.engine.stats["prefill_chunks"] for c in k.pool.cores)
+    admitted = sum(c.engine.stats["prefills"] for c in k.pool.cores)
+    assert admitted == n
+    assert chunks < n, (chunks, n)
 
 
 def test_batched_dead_core_does_not_attract_retries():

@@ -1,0 +1,229 @@
+"""Control-plane benchmark: what the pool control plane (repro.control) buys
+over occupancy-only dispatch, on the same hardware and workloads.
+
+Three skewed workloads, each run with the control plane OFF (PR-1/2 batched
+scheduler: occupancy placement, quantum-boundary preemption only) and ON:
+
+  slo        -- a saturating wave of long best-effort generations plus a
+                trickle of interactive syscalls: per-class p50/p90 wait and
+                pool tokens/s. The headline number: interactive p90 with the
+                SLO queue + mid-quantum preemption vs without, at equal
+                throughput.
+  migration  -- an arrival order that clusters the long generations on one
+                core (least-loaded alternation is blind to job length): the
+                rebalancer migrates running contexts to the idle core.
+                Reports migrations, per-core token balance, and bit-exactness
+                (tokens with the rebalancer on == off, per syscall).
+  affinity   -- repeated-prefix conversations: fraction routed to the core
+                whose engine already holds the prefix (vs ~1/num_cores for
+                occupancy-only), and prefill work saved.
+
+  PYTHONPATH=src python -m benchmarks.bench_control [--smoke] [--out DIR]
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import make_aios_kernel, warm_cores
+from repro.sdk.query import LLMQuery
+
+
+def _pct(xs: List[float], p: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[int(p * (len(xs) - 1))]
+
+
+def _tokens(k) -> int:
+    return sum(c.engine.stats["tokens"] for c in k.pool.cores)
+
+
+def _kernel(control: bool, *, quantum: int, cores: int = 2,
+            max_slots: int = 4):
+    k = make_aios_kernel(scheduler="batched", quantum=quantum,
+                         num_cores=cores, max_slots=max_slots,
+                         control=control)
+    warm_cores(k)
+    k.scheduler.completed.clear()
+    return k
+
+
+# -- part 1: SLO-aware scheduling -------------------------------------------------
+def _slo_part(control: bool, *, n_bg: int, n_inter: int, bg_new: int,
+              inter_new: int, gap_s: float) -> Dict:
+    rng = np.random.default_rng(3)
+    # quantum 64 (~0.2s of decode): long enough that the SLO policy's
+    # about-to-miss trigger fires BEFORE the boundary, so the control run
+    # shows mid-quantum preemption as well as queue ordering
+    k = _kernel(control, quantum=64)
+    with k:
+        t0 = time.monotonic()
+        tok0 = _tokens(k)
+        bgs = [LLMQuery(prompt=list(map(int, rng.integers(1, 500, 12))),
+                        max_new_tokens=bg_new,
+                        slo_class="best_effort").to_syscall(f"bg{i}")
+               for i in range(n_bg)]
+        for sc in bgs:
+            k.submit(sc)
+        time.sleep(0.05)           # wave admitted; pool saturated
+        inters = []
+        for i in range(n_inter):
+            sc = LLMQuery(prompt=list(map(int, rng.integers(1, 500, 8))),
+                          max_new_tokens=inter_new,
+                          slo_class="interactive").to_syscall(f"ui{i}")
+            k.submit(sc)
+            inters.append(sc)
+            time.sleep(gap_s)
+        for sc in bgs + inters:
+            sc.join(timeout=600)
+        wall = time.monotonic() - t0
+        toks = _tokens(k) - tok0
+        m = k.metrics()
+    iw = [sc.waiting_time for sc in inters]
+    bw = [sc.waiting_time for sc in bgs]
+    return {"mode": "control" if control else "occupancy",
+            "p50_wait_interactive_s": round(_pct(iw, 0.5), 4),
+            "p90_wait_interactive_s": round(_pct(iw, 0.9), 4),
+            "p90_wait_best_effort_s": round(_pct(bw, 0.9), 4),
+            "tokens_per_s": round(toks / wall, 1),
+            "wall_s": round(wall, 2),
+            "preemptions": (m.get("control") or {}).get("preemptions", 0)}
+
+
+# -- part 2: proactive migration --------------------------------------------------
+def _migration_workload(rng) -> List[LLMQuery]:
+    """Long,short,long,short...: least-loaded alternation clusters the longs
+    on one core, so after the shorts drain one core is hot and one idle."""
+    qs = []
+    for i in range(4):
+        qs.append(LLMQuery(prompt=list(map(int, rng.integers(1, 500, 10))),
+                           max_new_tokens=150, slo_class="batch"))
+        qs.append(LLMQuery(prompt=list(map(int, rng.integers(1, 500, 8))),
+                           max_new_tokens=4, slo_class="batch"))
+    return qs
+
+
+def _migration_part(control: bool) -> Dict:
+    rng = np.random.default_rng(11)
+    # quantum effectively off: only the rebalancer may move work
+    k = _kernel(control, quantum=1_000_000)
+    with k:
+        scs = [q.to_syscall(f"m{i}")
+               for i, q in enumerate(_migration_workload(rng))]
+        t0 = time.monotonic()
+        tok0 = _tokens(k)
+        for sc in scs:
+            k.submit(sc)
+        outs = [sc.join(timeout=600)["tokens"] for sc in scs]
+        wall = time.monotonic() - t0
+        per_core = [c.engine.stats["tokens"] for c in k.pool.cores]
+        m = k.metrics()
+        toks = _tokens(k) - tok0
+    return {"mode": "control" if control else "occupancy",
+            "wall_s": round(wall, 2),
+            "tokens_per_s": round(toks / wall, 1),
+            "migrations": (m.get("control") or {}).get("migrations", 0),
+            "per_core_tokens": per_core,
+            "balance": round(min(per_core) / max(per_core), 3),
+            "outs": outs}
+
+
+# -- part 3: prefix-affinity routing ----------------------------------------------
+def _affinity_part(control: bool, *, turns: int) -> Dict:
+    """Conversations sharing one prefix arrive in PAIRS: occupancy-only
+    placement spreads each pair across the cores (live inflight accounting),
+    so half the pool re-prefills a prefix the other core holds; affinity
+    routing keeps the whole family on the origin core."""
+    k = _kernel(control, quantum=32)
+    with k:
+        base = list(range(1, 121))          # 120-token shared prefix
+        seed = LLMQuery(prompt=base, max_new_tokens=4).to_syscall("seed")
+        k.submit(seed)
+        seed.join(timeout=600)
+        origin = getattr(seed, "_core_idx", 0)
+        time.sleep(0.02)
+        on_origin, total = 0, 0
+        for i in range(turns):
+            pair = [LLMQuery(prompt=base + list(map(int, range(
+                                200 + 17 * i + 7 * j,
+                                206 + 17 * i + 7 * j))),
+                             max_new_tokens=4).to_syscall(f"conv{i}_{j}")
+                    for j in range(2)]
+            for sc in pair:
+                k.submit(sc)
+            for sc in pair:
+                sc.join(timeout=600)
+                on_origin += int(getattr(sc, "_core_idx", -1) == origin)
+                total += 1
+        saved = sum(c.engine.stats["prefix_saved_tokens"]
+                    for c in k.pool.cores)
+    return {"mode": "control" if control else "occupancy",
+            "affinity_hit_rate": round(on_origin / total, 3),
+            "prefix_saved_tokens": saved}
+
+
+def run(smoke: bool = False, quiet: bool = False) -> Dict:
+    # n_bg >> pool slots (2 cores x 4): a deep best-effort backlog sits on
+    # the central queue for the whole run. Occupancy-only dispatch is FIFO,
+    # so every interactive arrival queues behind the remaining backlog
+    # (head-of-line blocking); the SLO queue lifts it to the head and
+    # mid-quantum preemption claims a slot without waiting for a boundary.
+    slo_kw = dict(n_bg=20, n_inter=8, bg_new=60, inter_new=6, gap_s=0.15) \
+        if smoke else \
+        dict(n_bg=28, n_inter=12, bg_new=80, inter_new=6, gap_s=0.2)
+    turns = 6 if smoke else 10
+
+    slo_rows = [_slo_part(c, **slo_kw) for c in (False, True)]
+    mig_rows = [_migration_part(c) for c in (False, True)]
+    aff_rows = [_affinity_part(c, turns=turns) for c in (False, True)]
+
+    # bit-exactness across placements: the rebalancer may move any sequence
+    # anywhere; tokens must not change
+    exact = float(mig_rows[0].pop("outs") == mig_rows[1].pop("outs"))
+    off, on = slo_rows
+    p90_gain = (off["p90_wait_interactive_s"] /
+                max(on["p90_wait_interactive_s"], 1e-9))
+    tput_ratio = on["tokens_per_s"] / max(off["tokens_per_s"], 1e-9)
+    out = {
+        "rows": slo_rows + mig_rows + aff_rows,
+        "interactive_p90_improvement": round(p90_gain, 2),
+        "tokens_per_s_ratio_on_vs_off": round(tput_ratio, 3),
+        "migration_exact_match": exact,
+        "migrations": mig_rows[1]["migrations"],
+        "affinity_hit_rate_on": aff_rows[1]["affinity_hit_rate"],
+        "affinity_hit_rate_off": aff_rows[0]["affinity_hit_rate"],
+    }
+    if not quiet:
+        print(f"[control/slo]       interactive p90 "
+              f"{off['p90_wait_interactive_s']}s -> "
+              f"{on['p90_wait_interactive_s']}s "
+              f"({p90_gain:.1f}x) at {tput_ratio:.2f}x tokens/s "
+              f"({on['preemptions']} mid-quantum preemptions)")
+        print(f"[control/migration] {mig_rows[1]['migrations']} migrations, "
+              f"balance {mig_rows[0]['balance']} -> "
+              f"{mig_rows[1]['balance']}, exact_match={exact}")
+        print(f"[control/affinity]  hit rate "
+              f"{aff_rows[0]['affinity_hit_rate']} -> "
+              f"{aff_rows[1]['affinity_hit_rate']}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="directory for BENCH_control.json")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke)
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        with open(os.path.join(args.out, "BENCH_control.json"), "w") as f:
+            json.dump(res, f, indent=1)

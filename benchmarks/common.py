@@ -126,14 +126,15 @@ class DirectRuntime:
 
 
 def make_aios_kernel(scheduler="rr", quantum=16, max_slots=8, max_len=256,
-                     num_cores=1, prefix_cache=True) -> AIOSKernel:
+                     num_cores=1, prefix_cache=True, control=False,
+                     control_kw=None) -> AIOSKernel:
     ekw = {"max_slots": max_slots, "max_len": max_len}
     if not prefix_cache:
         ekw["prefix_cache"] = None   # explicit None survives the kernel's
                                      # setdefault -> engines run uncached
     k = AIOSKernel(arch="tiny", scheduler=scheduler, quantum=quantum,
                    num_cores=num_cores, shared_params=shared_params(),
-                   engine_kw=ekw)
+                   engine_kw=ekw, control=control, control_kw=control_kw)
     register_builtin_tools(k.tools)
     return k
 
@@ -162,49 +163,25 @@ def run_agents(runtime, agent_specs, *, join_timeout=600) -> Dict[str, Any]:
     return {"results": results, "seconds": dt}
 
 
-def warm_engine_prefill(eng):
-    """Compile the chunked-prefill program set -- every (batch-bucket, chunk,
-    kv-width) combo a bursty agent workload can hit -- outside the timed
-    sections. The programs live in the process-wide _EngineJits cache, so
-    later engines/replicas reuse them; repeat calls only pay the (small)
-    warm-run compute. The prefix cache is detached during warming so warm
-    prompts never become cache entries."""
-    pc, eng.prefix_cache = eng.prefix_cache, None
-    try:
-        rng = np.random.default_rng(4242)
-        # lengths chosen to hit every chunk bucket (32/64/128/256) and the
-        # kv-width buckets up to max_len
-        lens = [24, 56, 120, 200, eng.max_len - 40]
-        n = 1
-        while n <= eng.max_slots:
-            for L in lens:
-                if L < 1 or L + 2 > eng.max_len:
-                    continue
-                reqs = [dict(prompt=rng.integers(1, TINY.vocab - 1, L)
-                             .astype(np.int32), max_new=1) for _ in range(n)]
-                slots = eng.add_sequences(reqs)
-                while any(not eng.is_done(s) for s in slots):
-                    eng.step()
-                for s in slots:
-                    eng.free(s)
-            n *= 2
-    finally:
-        eng.prefix_cache = pc
+def warm_engine_prefill(eng, buckets=None):
+    """Compile the full serving program grid -- (batch-bucket, chunk,
+    kv-width) chunked-prefill combos, the serial prefill buckets and the
+    context-switch programs -- outside the timed sections. Thin wrapper over
+    ``ServingEngine.warmup`` (which owns the grid); kept for callers of the
+    old name. Programs live in the process-wide _EngineJits cache, so later
+    engines/replicas reuse them."""
+    eng.warmup(buckets=buckets)
 
 
 def warm_cores(kernel):
     """Compile every core engine's jits (prefill/decode/sample/chunked
-    prefill) outside the timed section -- without this, whichever core
-    admits its first syscall mid-benchmark pays XLA compilation inside the
-    measurement. The warm prompt starts at 50 so it is not a prefix of the
-    benchmark prompts (no accidental prefix-cache hits)."""
+    prefill/context switch) outside the timed section -- without this,
+    whichever core admits its first syscall mid-benchmark pays XLA
+    compilation inside the measurement. ``ServingEngine.warmup`` fills the
+    shared _EngineJits cache, so one core pays the compile and its replicas
+    only pay the (small) warm-run compute."""
     for c in kernel.pool.cores:
-        eng = c.engine
-        slot = eng.add_sequence(np.arange(50, 58, dtype=np.int32), max_new=2)
-        while not eng.is_done(slot):
-            eng.step()
-        eng.free(slot)
-    warm_engine_prefill(kernel.pool.cores[0].engine)
+        c.engine.warmup()
 
 
 def warmup(runtime):

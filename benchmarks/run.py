@@ -28,9 +28,9 @@ def main(argv=None) -> None:
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks import (bench_agent_success, bench_context_switch,
-                            bench_kernels, bench_prefill, bench_prefix_cache,
-                            bench_scalability, bench_scheduling,
-                            bench_throughput)
+                            bench_control, bench_kernels, bench_prefill,
+                            bench_prefix_cache, bench_scalability,
+                            bench_scheduling, bench_throughput)
 
     suite = [
         ("kernels(us/call)", bench_kernels.run, {}),
@@ -44,6 +44,7 @@ def main(argv=None) -> None:
           "turns": 3 if quick else 4}),
         ("scheduling(T6)", bench_scheduling.run,
          {"n_agents": 8 if quick else 16}),
+        ("control", bench_control.run, {"smoke": quick}),
         ("throughput(F6/7)", bench_throughput.run,
          {"agents_per_framework": 4 if quick else 6,
           "frameworks": ["react", "reflexion"] if quick else None}),
@@ -52,7 +53,7 @@ def main(argv=None) -> None:
         ("agent_success(T1)", bench_agent_success.run, {}),
     ]
     if args.smoke:
-        keep = ("kernels", "prefill", "prefix_cache", "scheduling")
+        keep = ("kernels", "prefill", "prefix_cache", "scheduling", "control")
         suite = [s for s in suite if s[0].split("(")[0] in keep]
 
     csv_lines = ["name,us_per_call,derived"]
@@ -92,7 +93,16 @@ def _derive(name: str, out: dict) -> str:
         return (f"none={d['none']['overall_seconds']}s;"
                 f"fifo={d['fifo']['overall_seconds']}s;"
                 f"rr={d['rr']['overall_seconds']}s;"
-                f"batched={d['batched']['overall_seconds']}s")
+                f"batched={d['batched']['overall_seconds']}s;"
+                f"batched_p90={d['batched']['p90_wait_s']}s;"
+                f"batched_tok_s={d['batched']['tokens_per_s']}")
+    if name.startswith("control"):
+        return (f"p90_interactive={out['interactive_p90_improvement']}x;"
+                f"tok_s_ratio={out['tokens_per_s_ratio_on_vs_off']};"
+                f"mig={out['migrations']};"
+                f"mig_exact={out['migration_exact_match']};"
+                f"affinity={out['affinity_hit_rate_off']}->"
+                f"{out['affinity_hit_rate_on']}")
     if name.startswith("throughput"):
         sp = [r["speedup_batched_vs_none"] for r in rows]
         sp_rr = [r["speedup_rr_vs_none"] for r in rows]

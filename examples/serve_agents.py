@@ -1,10 +1,16 @@
 """End-to-end serving driver (deliverable b): serve a small model with
 batched concurrent agent requests through the full AIOS stack, comparing the
 paper's baseline (trial-and-error, no kernel) against AIOS scheduling --
-then demonstrate burst admission: N agents submitting at once are prefilled
-as one batched chunked prefill instead of N serialized XLA calls.
+then demonstrate burst admission (N agents submitting at once are prefilled
+as one batched chunked prefill instead of N serialized XLA calls) and, with
+``--control``, the pool control plane: an interactive syscall preempting a
+wall of best-effort work mid-quantum.
 
-  PYTHONPATH=src python examples/serve_agents.py --agents 12
+Engines are pre-compiled with ``ServingEngine.warmup()`` (via
+benchmarks.common.warm_cores) so every number below is steady-state, not
+cold-compile noise.
+
+  PYTHONPATH=src python examples/serve_agents.py --agents 12 --control
 """
 import argparse
 import os
@@ -43,12 +49,50 @@ def burst_demo(kernel, n: int, prompt_len: int = 200):
           f" dispatches (serial admission would need {n} full prefills)")
 
 
+def control_demo(n_best_effort: int = 10):
+    """An interactive syscall arriving into a pool saturated with
+    best-effort generations: the control plane's SLO queue + mid-quantum
+    preemption get it a slot immediately."""
+    import numpy as np
+    from benchmarks.common import make_aios_kernel, warm_cores
+    from repro.sdk.query import LLMQuery
+
+    rng = np.random.default_rng(5)
+    k = make_aios_kernel(scheduler="batched", quantum=64, num_cores=2,
+                         max_slots=4, control=True)
+    warm_cores(k)
+    with k:
+        bgs = [LLMQuery(prompt=list(map(int, rng.integers(1, 500, 12))),
+                        max_new_tokens=150,
+                        slo_class="best_effort").to_syscall(f"bg{i}")
+               for i in range(n_best_effort)]
+        for sc in bgs:
+            k.submit(sc)
+        time.sleep(0.2)                    # pool saturated, backlog queued
+        inter = LLMQuery(prompt=[3, 1, 4, 1, 5], max_new_tokens=6,
+                         slo_class="interactive").to_syscall("ui")
+        t0 = time.monotonic()
+        k.submit(inter)
+        inter.join(timeout=300)
+        t_inter = time.monotonic() - t0
+        for sc in bgs:
+            sc.join(timeout=300)
+        m = k.metrics()["control"]
+        print(f"   interactive syscall served in {t_inter*1e3:.0f}ms while "
+              f"{n_best_effort} best-effort generations ran "
+              f"({m['preemptions']} mid-quantum preemptions, "
+              f"{m['migrations']} migrations, "
+              f"p90 interactive {m.get('p90_wait_interactive', 0):.3f}s)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--agents", type=int, default=12)
     ap.add_argument("--cores", type=int, default=2)
     ap.add_argument("--scheduler", default="batched",
                     choices=("fifo", "rr", "batched", "priority"))
+    ap.add_argument("--control", action="store_true",
+                    help="demo the pool control plane (SLO preemption)")
     args = ap.parse_args()
 
     from benchmarks.common import (DirectRuntime, make_aios_kernel,
@@ -90,6 +134,9 @@ def main():
             # chunk programs are already compiled by the warm pass above
             print("== burst admission (batched chunked prefill) ==")
             burst_demo(k, args.agents)
+    if args.control:
+        print("== control plane (SLO classes + mid-quantum preemption) ==")
+        control_demo()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,11 @@
+"""Pool control plane (beyond-paper subsystem): SLO-aware scheduling,
+proactive context migration and prefix-affinity routing layered over the
+BatchedScheduler/LLMCore pool. See plane.ControlPlane for the wiring."""
+from repro.control.affinity import AffinityRouter
+from repro.control.plane import ControlPlane
+from repro.control.rebalancer import Rebalancer
+from repro.control.slo import SLOPolicy, SLOQueue
+from repro.control.telemetry import TelemetryBus
+
+__all__ = ["AffinityRouter", "ControlPlane", "Rebalancer", "SLOPolicy",
+           "SLOQueue", "TelemetryBus"]

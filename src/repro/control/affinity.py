@@ -1,0 +1,54 @@
+"""Prefix-affinity routing: prefer the core whose HBM already holds the
+prompt's prefix.
+
+The pool shares one ``PrefixCache``, but every entry is produced by (and, on
+real hardware, device-resident with) exactly one engine -- entries are tagged
+with their ``origin`` engine id at insert time. The router probes the cache
+for the longest resident prefix of an incoming prompt (a read-only probe: no
+LRU touch, no hit accounting) and scores candidate cores by how many pages of
+prompt prefix would NOT need re-prefilling there, trading that saved prefill
+against plain occupancy.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+
+class AffinityRouter:
+    def __init__(self, prefix_cache, *, min_tokens: int = 16):
+        self.prefix_cache = prefix_cache
+        # prefixes shorter than this are cheaper to re-prefill than the
+        # imbalance an affinity override can cause
+        self.min_tokens = min_tokens
+        self.stats = {"probes": 0, "resident": 0, "routed_affine": 0}
+
+    def probe(self, prompt) -> Optional[Tuple[int, int]]:
+        """(origin_engine_id, resident_tokens) of the longest cached prefix
+        of ``prompt``, or None when nothing useful is resident."""
+        if self.prefix_cache is None or prompt is None:
+            return None
+        self.stats["probes"] += 1
+        res = self.prefix_cache.residency(prompt)
+        if res is None:
+            return None
+        origin, n = res
+        if origin is None or n < self.min_tokens:
+            return None
+        self.stats["resident"] += 1
+        return origin, n
+
+    def affinity_pages(self, core_idx: int, residency, page_size: int) -> int:
+        """Pages of the prompt's prefix already held by ``core_idx``'s
+        engine -- the quantity the dispatcher trades against occupancy."""
+        if residency is None:
+            return 0
+        origin, n = residency
+        return n // max(page_size, 1) if origin == core_idx else 0
+
+    def note_routed(self, core_idx: int, residency) -> None:
+        if residency is not None and residency[0] == core_idx:
+            self.stats["routed_affine"] += 1
+
+    def hit_rate(self) -> float:
+        r = self.stats["resident"]
+        return self.stats["routed_affine"] / r if r else 0.0

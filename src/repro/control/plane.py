@@ -1,0 +1,197 @@
+"""The pool control plane: one facade wiring the four cooperating parts
+(telemetry bus, SLO policy, proactive rebalancer, prefix-affinity router)
+into the BatchedScheduler.
+
+Division of labour (who touches what):
+
+  * core workers  -> publish gauges, execute preemptions/migrations that the
+                     plane requested (workers are the only threads allowed to
+                     touch their engine);
+  * dispatcher    -> consults affinity scores at placement, escalates
+                     about-to-miss interactive syscalls into preemption
+                     requests;
+  * plane thread  -> ticks the rebalancer and posts migration requests;
+  * everyone      -> reads/writes shared state only through this facade
+                     (single lock, no engine access).
+
+The plane is strictly advisory-plus-mechanism: with ``control=None`` the
+scheduler behaves exactly as before (occupancy-only placement, quantum-
+boundary preemption, no migration), and the generated tokens are bit-identical
+either way -- the plane moves work in time and space, never changes its
+result.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+from repro.control.affinity import AffinityRouter
+from repro.control.rebalancer import Rebalancer
+from repro.control.slo import SLOPolicy, SLOQueue
+from repro.control.telemetry import TelemetryBus
+
+
+class ControlPlane:
+    def __init__(self, num_cores: int, prefix_cache=None, *,
+                 policy: Optional[SLOPolicy] = None,
+                 rebalance: bool = True, affinity: bool = True,
+                 preemption: bool = True,
+                 rebalancer_kw: Optional[dict] = None,
+                 affinity_kw: Optional[dict] = None):
+        self.num_cores = num_cores
+        self.bus = TelemetryBus(num_cores)
+        self.policy = policy or SLOPolicy()
+        self.rebalancer = (Rebalancer(self.bus, **(rebalancer_kw or {}))
+                           if rebalance else None)
+        self.affinity = (AffinityRouter(prefix_cache, **(affinity_kw or {}))
+                         if affinity else None)
+        self.preemption = preemption
+        self._lock = threading.Lock()
+        # pid -> class rank of every syscall currently admitted, per core
+        self._running: Dict[int, Dict[int, int]] = {
+            i: {} for i in range(num_cores)}
+        # outstanding preemption request per core: the requester's class rank
+        # (victims must be strictly less sensitive); one in flight per core
+        self._preempt: Dict[int, Optional[int]] = {
+            i: None for i in range(num_cores)}
+        # outstanding migration request per core: (target_core, count)
+        self._migrate: Dict[int, Optional[Tuple[int, int]]] = {
+            i: None for i in range(num_cores)}
+        self.stats = {"preempt_requests": 0, "preemptions": 0,
+                      "migrations": 0, "slo_misses": 0, "completions": 0}
+
+    # -- queue construction ------------------------------------------------------
+    def make_queue(self) -> SLOQueue:
+        return SLOQueue(self.policy)
+
+    # -- worker-side lifecycle hooks --------------------------------------------
+    def on_admit(self, core_idx: int, sc) -> None:
+        cls = self.policy.tag(sc)
+        wait = self.policy.waited(sc)
+        self.bus.record("admit_wait", wait, cls)
+        with self._lock:
+            self._running[core_idx][sc.pid] = self.policy.rank(sc)
+
+    def on_exit(self, core_idx: int, sc, reason: str) -> None:
+        """reason: finished | suspended | migrated | fault."""
+        cls = getattr(sc, "slo_class", "batch")
+        with self._lock:
+            self._running[core_idx].pop(sc.pid, None)
+        if reason == "finished":
+            self.stats["completions"] += 1
+            total = sc.waiting_time
+            self.bus.record("wait", total, cls)
+            if total > self.policy.targets.get(cls, float("inf")):
+                self.stats["slo_misses"] += 1
+
+    def publish(self, core_idx: int, core, backlog: int) -> None:
+        """Push one gauge sample for a core: ``LLMCore.telemetry()`` plus the
+        scheduler-side backlog (queued-on-core count the core cannot see)."""
+        self.bus.publish(core_idx, backlog=backlog, **core.telemetry())
+
+    # -- mid-quantum preemption --------------------------------------------------
+    def consider_preempt(self, sc) -> bool:
+        """Called by the dispatcher when it cannot place ``sc``. When the
+        syscall is about to miss its wait target, pick a core running
+        strictly less latency-sensitive work and ask its worker to yield a
+        slot mid-quantum. Returns True when a request was posted."""
+        if not self.preemption:
+            return False
+        self.policy.tag(sc)
+        if not self.policy.about_to_miss(sc):
+            return False
+        # a preemption just freed capacity the dispatcher has not seen yet:
+        # don't preempt a second victim for the same waiter (gauges refresh
+        # every worker loop, so this window is one iteration wide). The test
+        # is PLACEABILITY -- a free slot alone is not enough when saturation
+        # is page-bound (a slot-free core whose pager cannot admit `sc` must
+        # not suppress the preemption that would release pages too).
+        rd = sc.request_data or {}
+        need = len(rd.get("prompt", ())) + rd.get("max_new_tokens", 32)
+        for g in self.bus.gauges():
+            ps = g.get("page_size") or 1
+            if (g["free_slots"] >= 1 and
+                    g["free_pages"] >= -(-need // ps)):
+                return False
+        rank = self.policy.rank(sc)
+        with self._lock:
+            best, best_victims = None, 0
+            for core, running in self._running.items():
+                if self._preempt[core] is not None:
+                    continue               # one in flight per core
+                victims = sum(1 for r in running.values() if r > rank)
+                if victims > best_victims:
+                    best, best_victims = core, victims
+            if best is None:
+                return False
+            self._preempt[best] = rank
+        self.stats["preempt_requests"] += 1
+        self.bus.bump("preempt_requests")
+        return True
+
+    def take_preempt(self, core_idx: int) -> Optional[int]:
+        """Worker side: consume an outstanding preemption request; returns
+        the requester's class rank (preempt one running slot with rank
+        strictly greater) or None."""
+        with self._lock:
+            rank = self._preempt[core_idx]
+            self._preempt[core_idx] = None
+            return rank
+
+    def note_preempted(self, core_idx: int, sc) -> None:
+        self.stats["preemptions"] += 1
+        self.bus.bump("preemptions")
+
+    # -- migration ---------------------------------------------------------------
+    def request_migration(self, hot: int, cold: int, count: int) -> None:
+        with self._lock:
+            if self._migrate[hot] is None:
+                self._migrate[hot] = (cold, count)
+
+    def take_migration(self, core_idx: int) -> Optional[Tuple[int, int]]:
+        with self._lock:
+            req = self._migrate[core_idx]
+            self._migrate[core_idx] = None
+            return req
+
+    def note_migrated(self, src: int, dst: int, sc) -> None:
+        self.stats["migrations"] += 1
+        self.bus.bump("migrations")
+        self.bus.record("migration_rank", float(self.policy.rank(sc)))
+
+    def migratable_rank(self, core_idx: int) -> Optional[int]:
+        """Least-sensitive class rank currently running on a core (victims
+        for rebalancing are chosen from the back of the SLO ladder)."""
+        with self._lock:
+            ranks = self._running[core_idx].values()
+            return max(ranks) if ranks else None
+
+    # -- plane loop (rebalancer ticks) -------------------------------------------
+    def run_loop(self, stop: threading.Event, central_backlog) -> None:
+        """Body of the plane thread started by the scheduler:
+        ``central_backlog`` is a callable so the plane never imports the
+        scheduler."""
+        if self.rebalancer is None:
+            return
+        while not stop.is_set():
+            decision = self.rebalancer.plan(central_backlog())
+            if decision is not None:
+                hot, cold, n = decision
+                self.request_migration(hot, cold, n)
+            time.sleep(self.rebalancer.interval_s)
+
+    # -- metrics -----------------------------------------------------------------
+    def metrics(self) -> Dict[str, object]:
+        m: Dict[str, object] = dict(self.stats)
+        for cls in ("interactive", "batch", "best_effort"):
+            s = self.bus.series("wait", cls)
+            if s:
+                m[f"p50_wait_{cls}"] = self.bus.p50("wait", cls)
+                m[f"p90_wait_{cls}"] = self.bus.p90("wait", cls)
+        if self.rebalancer is not None:
+            m["rebalancer"] = dict(self.rebalancer.stats)
+        if self.affinity is not None:
+            m["affinity"] = dict(self.affinity.stats,
+                                 hit_rate=round(self.affinity.hit_rate(), 3))
+        return m

@@ -1,0 +1,87 @@
+"""Proactive rebalancer: migrate work off hot cores instead of waiting for
+quantum boundaries.
+
+The dispatcher places work well at admission time, but placement is
+irrevocable today: once a skewed arrival pattern lands several long
+generations on one core, that core stays hot while its neighbours drain and
+idle. The rebalancer watches the telemetry gauges and, when an imbalance
+persists (hysteresis: the gap must hold for N consecutive ticks, and a
+cooldown follows every move so a migration's own transient cannot trigger the
+next), asks the hot core's worker to suspend its least latency-sensitive
+running sequences (snapshot), hand the contexts to the target core (transfer
+through the shared ContextManager, pinned in host RAM so the spill tier
+cannot add a disk round-trip mid-flight) and resume them there (restore).
+
+Snapshot -> transfer -> restore is the paper's context-switch machinery, which
+is bit-exact by construction (per-sequence PRNG streams, slot-independent
+sampling), so a migrated sequence produces exactly the tokens it would have
+produced had it stayed put -- the rebalancer changes WHERE tokens are
+computed, never WHICH tokens.
+
+The decision loop only reads the bus (never engines directly); the actual
+suspend/restore runs on the owning core's worker thread, which is the only
+thread allowed to touch an engine.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.control.telemetry import TelemetryBus
+
+
+class Rebalancer:
+    def __init__(self, bus: TelemetryBus, *, min_gap: int = 2,
+                 hysteresis_ticks: int = 3, cooldown_ticks: int = 8,
+                 interval_s: float = 0.005):
+        self.bus = bus
+        self.min_gap = min_gap                  # load gap that counts as skew
+        self.hysteresis_ticks = hysteresis_ticks
+        self.cooldown_ticks = cooldown_ticks
+        self.interval_s = interval_s            # plane loop sleep between ticks
+        self._skew_ticks = 0                    # consecutive ticks over gap
+        self._cooldown = 0
+        self.stats = {"ticks": 0, "migrations_requested": 0}
+
+    @staticmethod
+    def _load(g) -> float:
+        """A core's load = sequences it is responsible for: running in slots
+        plus dispatched-but-unadmitted backlog plus outstanding prefill debt
+        (tokens still to consume, in slot-equivalents via a coarse weight)."""
+        return g["running"] + g["backlog"] + 0.25 * (g["prefill_debt"] > 0)
+
+    def plan(self, central_backlog: int) -> Optional[Tuple[int, int, int]]:
+        """One decision tick: returns (hot_core, cold_core, n_to_move) or
+        None. Requires the central queue to be empty -- while it is not, an
+        idle core will pull central work anyway and migration would only
+        fight the dispatcher."""
+        self.stats["ticks"] += 1
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return None
+        if central_backlog > 0 or self.bus.num_cores < 2:
+            self._skew_ticks = 0
+            return None
+        gauges = self.bus.gauges()
+        loads = [self._load(g) for g in gauges]
+        hot = max(range(len(loads)), key=lambda i: loads[i])
+        cold = min(range(len(loads)), key=lambda i: loads[i])
+        gap = loads[hot] - loads[cold]
+        # the cold core must have real room (slots AND pages) and a live
+        # worker publishing fresh gauges
+        receivable = (gauges[cold]["free_slots"] >= 1 and
+                      gauges[cold]["free_pages"] >= 1 and
+                      self.bus.staleness(cold) < 1.0)
+        if gap < self.min_gap or not receivable:
+            self._skew_ticks = 0
+            return None
+        self._skew_ticks += 1
+        if self._skew_ticks < self.hysteresis_ticks:
+            return None
+        # move half the gap, bounded by the cold core's free slots: the move
+        # that equalizes load without overshooting into reverse skew
+        n = max(1, int(gap) // 2)
+        n = min(n, int(gauges[cold]["free_slots"]))
+        self._skew_ticks = 0
+        self._cooldown = self.cooldown_ticks
+        self.stats["migrations_requested"] += n
+        return hot, cold, n

@@ -1,0 +1,130 @@
+"""SLO policy: latency classes for LLM syscalls and the admission queue
+ordered by them.
+
+Every LLM syscall gets a class -- ``interactive`` / ``batch`` /
+``best_effort`` -- either explicitly (``LLMQuery(slo_class=...)``) or derived
+from its priority. Each class carries a target p90 queue wait; the policy
+decides admission order (class rank, then arrival) and when an interactive
+syscall is *about to miss* its target, which licenses the scheduler to
+preempt best-effort work mid-quantum instead of waiting for the quantum
+boundary.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import queue
+import threading
+import time
+from typing import Dict, List, Optional
+
+# class -> (rank, default target p90 wait seconds). Lower rank = more
+# latency-sensitive = admitted first. best_effort has no target: it only
+# ever yields, it never preempts.
+DEFAULT_TARGETS: Dict[str, float] = {
+    "interactive": 0.25,
+    "batch": 2.0,
+    "best_effort": float("inf"),
+}
+CLASS_RANK: Dict[str, int] = {"interactive": 0, "batch": 1, "best_effort": 2}
+
+
+class SLOPolicy:
+    """Classification + targets + the about-to-miss test."""
+
+    def __init__(self, targets: Optional[Dict[str, float]] = None,
+                 preempt_at_frac: float = 0.5):
+        self.targets = dict(DEFAULT_TARGETS)
+        if targets:
+            self.targets.update(targets)
+        # fraction of the wait target after which a still-queued syscall is
+        # "about to miss" and may trigger a mid-quantum preemption
+        self.preempt_at_frac = preempt_at_frac
+
+    @staticmethod
+    def classify(sc) -> str:
+        """Explicit request_data class wins; otherwise priority > 0 maps to
+        interactive (the pre-SLO escalation knob), else batch."""
+        cls = (sc.request_data or {}).get("slo_class")
+        if cls in CLASS_RANK:
+            return cls
+        return "interactive" if sc.priority > 0 else "batch"
+
+    def tag(self, sc) -> str:
+        """Stamp the class on the syscall (idempotent; survives requeues)."""
+        cls = getattr(sc, "slo_class", None)
+        if cls is None:
+            cls = self.classify(sc)
+            sc.slo_class = cls
+        return cls
+
+    @staticmethod
+    def rank(sc) -> int:
+        return CLASS_RANK.get(getattr(sc, "slo_class", "batch"), 1)
+
+    def target(self, sc) -> float:
+        return self.targets.get(getattr(sc, "slo_class", "batch"),
+                                self.targets["batch"])
+
+    def waited(self, sc, now: Optional[float] = None) -> float:
+        q = sc.queued_time or sc.created_time
+        return (now or time.monotonic()) - q
+
+    def about_to_miss(self, sc, now: Optional[float] = None) -> bool:
+        """True when the syscall has burned preempt_at_frac of its wait
+        target while still queued -- acting now still leaves slack; acting
+        at the deadline is already a miss."""
+        t = self.target(sc)
+        if t == float("inf"):
+            return False
+        return self.waited(sc, now) >= self.preempt_at_frac * t
+
+
+class SLOQueue:
+    """Central LLM queue ordered by (class rank, arrival): drop-in for the
+    queue.Queue subset BatchedScheduler uses (put / get / get_nowait /
+    qsize). Within a class it is FIFO, so batch traffic cannot starve --
+    only be overtaken by more latency-sensitive classes.
+
+    Arrival order is stamped ONCE (``sc._slo_seq``) and survives the
+    dispatcher's backpressure requeue (pop head -> cannot place -> re-put):
+    without that, every saturated cycle would send the oldest same-class
+    waiter to the back of its class. A syscall that actually RAN and
+    yielded (quantum expiry / preemption) is re-stamped by the scheduler
+    (``_undispatch`` clears the seq), so within-class cycling stays fair."""
+
+    def __init__(self, policy: SLOPolicy):
+        self.policy = policy
+        self._h: List = []
+        self._cv = threading.Condition()
+        self._seq = itertools.count()
+
+    def put(self, sc) -> None:
+        self.policy.tag(sc)
+        with self._cv:
+            seq = getattr(sc, "_slo_seq", None)
+            if seq is None:
+                seq = sc._slo_seq = next(self._seq)
+            heapq.heappush(self._h, (self.policy.rank(sc), seq, sc))
+            self._cv.notify()
+
+    def get(self, timeout: Optional[float] = None):
+        with self._cv:
+            if not self._h and not self._cv.wait_for(lambda: bool(self._h),
+                                                     timeout):
+                raise queue.Empty
+            return heapq.heappop(self._h)[2]
+
+    def get_nowait(self):
+        with self._cv:
+            if not self._h:
+                raise queue.Empty
+            return heapq.heappop(self._h)[2]
+
+    def peek_rank(self) -> Optional[int]:
+        with self._cv:
+            return self._h[0][0] if self._h else None
+
+    def qsize(self) -> int:
+        with self._cv:
+            return len(self._h)

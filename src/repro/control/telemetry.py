@@ -1,0 +1,109 @@
+"""Telemetry bus: the control plane's sensory input.
+
+Every core worker publishes one gauge sample per loop iteration (free decode
+slots, free HBM pages, backlog depth, prefill debt, running-sequence count)
+and the scheduler records per-syscall latency events (queue wait to
+admission, execution time) tagged with their SLO class. The bus keeps a
+bounded rolling window per series and serves p50/p90 aggregates -- the
+numbers the SLO policy and the rebalancer act on.
+
+Lock scope is one deque append / one sorted copy; publishing from the decode
+loop costs microseconds, far below a decode step.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+
+def percentile(values: List[float], p: float) -> float:
+    """Nearest-rank percentile on a sorted copy (matches the scheduler's
+    p90_wait convention: index int(p * (n - 1)))."""
+    if not values:
+        return 0.0
+    vs = sorted(values)
+    return vs[int(p * (len(vs) - 1))]
+
+
+class TelemetryBus:
+    """Per-core gauge snapshots + rolling event series with p50/p90."""
+
+    GAUGES = ("free_slots", "free_pages", "backlog", "prefill_debt",
+              "running")
+
+    def __init__(self, num_cores: int, window: int = 512):
+        self.num_cores = num_cores
+        self.window = window
+        self._lock = threading.Lock()
+        # latest gauge sample per core (what the rebalancer reads)
+        self._gauges: List[Dict[str, float]] = [
+            {g: 0.0 for g in self.GAUGES} for _ in range(num_cores)]
+        self._gauge_times = [0.0] * num_cores
+        # rolling event series: (kind, slo_class) -> deque of values
+        self._events: Dict[Tuple[str, str], deque] = {}
+        self.counters: Dict[str, int] = {}
+
+    # -- gauges (published by core workers every loop) --------------------------
+    def publish(self, core_id: int, **gauges: float) -> None:
+        with self._lock:
+            g = self._gauges[core_id]
+            for k, v in gauges.items():
+                g[k] = float(v)
+            self._gauge_times[core_id] = time.monotonic()
+
+    def gauges(self, core_id: Optional[int] = None):
+        """Latest gauge sample for one core, or the whole pool."""
+        with self._lock:
+            if core_id is not None:
+                return dict(self._gauges[core_id])
+            return [dict(g) for g in self._gauges]
+
+    def staleness(self, core_id: int) -> float:
+        """Seconds since the core last published (large = worker stalled or
+        never started; the rebalancer skips stale cores)."""
+        with self._lock:
+            t = self._gauge_times[core_id]
+        return float("inf") if t == 0.0 else time.monotonic() - t
+
+    # -- events (per-syscall wait/exec samples) ---------------------------------
+    def record(self, kind: str, value: float, slo_class: str = "_") -> None:
+        key = (kind, slo_class)
+        with self._lock:
+            d = self._events.get(key)
+            if d is None:
+                d = self._events[key] = deque(maxlen=self.window)
+            d.append(float(value))
+
+    def bump(self, counter: str, n: int = 1) -> None:
+        with self._lock:
+            self.counters[counter] = self.counters.get(counter, 0) + n
+
+    def series(self, kind: str, slo_class: str = "_") -> List[float]:
+        with self._lock:
+            d = self._events.get((kind, slo_class))
+            return list(d) if d else []
+
+    def p50(self, kind: str, slo_class: str = "_") -> float:
+        return percentile(self.series(kind, slo_class), 0.5)
+
+    def p90(self, kind: str, slo_class: str = "_") -> float:
+        return percentile(self.series(kind, slo_class), 0.9)
+
+    # -- snapshot for metrics/dashboards ---------------------------------------
+    def summary(self) -> Dict[str, object]:
+        with self._lock:
+            kinds = sorted({k for k, _ in self._events})
+            classes = sorted({c for _, c in self._events})
+            counters = dict(self.counters)
+        out: Dict[str, object] = {"counters": counters,
+                                  "gauges": self.gauges()}
+        for kind in kinds:
+            for cls in classes:
+                s = self.series(kind, cls)
+                if s:
+                    out[f"{kind}.{cls}.p50"] = percentile(s, 0.5)
+                    out[f"{kind}.{cls}.p90"] = percentile(s, 0.9)
+                    out[f"{kind}.{cls}.n"] = len(s)
+        return out

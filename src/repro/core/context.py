@@ -90,14 +90,24 @@ class ContextManager:
         # core is a hit on all of them (prefix_budget_bytes=0 disables)
         self.prefix_cache = (PrefixCache(budget_bytes=prefix_budget_bytes)
                              if prefix_budget_bytes > 0 else None)
-        self.stats = {"saves": 0, "loads": 0, "spills": 0, "disk_loads": 0}
+        self.stats = {"saves": 0, "loads": 0, "spills": 0, "disk_loads": 0,
+                      "handoffs": 0}
         self._lock = threading.Lock()
+        # snapshots mid-hand-off between cores (control-plane migration):
+        # exempt from spill until the receiving core restores them, so a
+        # migration is bounded by one host-RAM round-trip, never disk
+        self._pinned: set = set()
 
     # -- paper API: generate_response_with_interruption lives in LLMCore;
     # -- these are load_context / clear_context / (save).
-    def save(self, ctx_id: str, snap: ContextSnapshot):
+    def save(self, ctx_id: str, snap: ContextSnapshot,
+             *, pinned: bool = False):
         self.pool.put(ctx_id, snap, snap.nbytes())
         self.stats["saves"] += 1
+        if pinned:
+            with self._lock:
+                self._pinned.add(ctx_id)
+            self.stats["handoffs"] += 1
         self._maybe_spill()
 
     def load(self, ctx_id: str) -> ContextSnapshot:
@@ -110,17 +120,25 @@ class ContextManager:
             self.stats["disk_loads"] += 1
             self.pool.put(ctx_id, snap, snap.nbytes())
             self._maybe_spill()
+        # the pin only needs to cover the save -> load hand-off window; unpin
+        # here (not just in clear) so a restore fault after load can never
+        # leak a permanently spill-exempt snapshot
+        with self._lock:
+            self._pinned.discard(ctx_id)
         self.stats["loads"] += 1
         return snap
 
     def clear(self, ctx_id: str):
         self.pool.pop(ctx_id)
+        with self._lock:
+            self._pinned.discard(ctx_id)
         self.storage.delete_blob("contexts", ctx_id)
 
     def _maybe_spill(self):
         with self._lock:
             while self.pool.over_watermark():
-                order = self.pool.eviction_order()
+                order = [k for k in self.pool.eviction_order()
+                         if k not in self._pinned]
                 if not order:
                     return
                 victim = order[0]

@@ -43,6 +43,7 @@ def useToolManager() -> ToolManager:
 
 
 def useLLM(cfg, context_manager, core_id: int = 0, **engine_kw) -> LLMCore:
+    engine_kw.setdefault("engine_id", core_id)
     return LLMCore(ServingEngine(cfg, **engine_kw), context_manager, core_id)
 
 
@@ -57,6 +58,8 @@ class AIOSKernel:
                  intervention_cb: Optional[Callable[[str, str], bool]] = None,
                  engine_kw: Optional[Dict[str, Any]] = None,
                  memory_kw: Optional[Dict[str, Any]] = None,
+                 control: bool = False,
+                 control_kw: Optional[Dict[str, Any]] = None,
                  shared_params=None):
         self.root_dir = root_dir or tempfile.mkdtemp(prefix="aios-")
         self.storage = useStorageManager(self.root_dir)
@@ -74,10 +77,22 @@ class AIOSKernel:
         cores = [useLLM(cfg, self.context, core_id=i, **ekw)
                  for i in range(num_cores)]
         self.pool = LLMCorePool(cores)
+        # pool control plane (repro.control): SLO classes + mid-quantum
+        # preemption, proactive rebalancing, prefix-affinity routing.
+        # batched-scheduler only -- the other strategies have no dispatcher
+        # for it to steer.
+        self.control = None
+        if control and scheduler == "batched":
+            from repro.control import ControlPlane
+            self.control = ControlPlane(num_cores,
+                                        self.context.prefix_cache,
+                                        **(control_kw or {}))
         sched_cls = SCHEDULERS[scheduler]
-        skw = {}
+        skw: Dict[str, Any] = {}
         if scheduler in ("rr", "batched"):
             skw["quantum"] = quantum
+        if self.control is not None:
+            skw["control"] = self.control
         self.scheduler: BaseScheduler = sched_cls(
             self.pool, self.memory, self.storage, self.tools, **skw)
         self._started = False
@@ -132,4 +147,6 @@ class AIOSKernel:
         m["memory"] = dict(self.memory.stats)
         m["tools"] = dict(self.tools.stats)
         m["engine"] = [dict(c.engine.stats) for c in self.pool.cores]
+        if self.control is not None:
+            m["control"] = self.control.metrics()
         return m

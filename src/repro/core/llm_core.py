@@ -28,12 +28,31 @@ class LLMCore:
         self._lock = threading.Lock()   # exclusive-mode serialization
         self.busy_time = 0.0
         self.executed = 0
+        self.migrations_out = 0          # contexts handed to another core
+        self.migrations_in = 0           # contexts restored from another core
 
     # -- occupancy ------------------------------------------------------------------
     def free_capacity(self) -> Tuple[int, int]:
         """Real occupancy for pool routing: (free decode slots, free HBM
         pages). Bigger is less loaded."""
         return (self.engine.free_slot_count(), self.engine.pager.free_pages)
+
+    # -- telemetry (published to the control plane's bus) -----------------------------
+    def telemetry(self) -> Dict[str, float]:
+        """One gauge sample of this core's instantaneous state -- the ONLY
+        gauge source (ControlPlane.publish consumes it verbatim): what the
+        rebalancer and the SLO policy act on."""
+        eng = self.engine
+        free = eng.free_slot_count()
+        return {
+            "free_slots": free,
+            "free_pages": eng.pager.free_pages,
+            "page_size": eng.pager.page_size,
+            "prefill_debt": eng.prefill_debt(),
+            "running": eng.max_slots - free,
+            "migrations_out": self.migrations_out,
+            "migrations_in": self.migrations_in,
+        }
 
     # -- admission ------------------------------------------------------------------
     def admit(self, sc: LLMSyscall, eager: bool = True) -> int:
@@ -48,6 +67,10 @@ class LLMCore:
             slot = self.engine.restore(snap, seq_id=sc.pid, eager=eager)
             self.ctx.clear(sc.context_id)
             sc.context_id = None
+            if getattr(sc, "_migrated_from", None) is not None:
+                if sc._migrated_from != self.core_id:
+                    self.migrations_in += 1   # restore-on-arrival completed
+                sc._migrated_from = None
         else:
             slot = self.engine.add_sequence(
                 np.asarray(rd["prompt"], np.int32), seq_id=sc.pid,
@@ -64,10 +87,18 @@ class LLMCore:
         return {"tokens": tokens, "finished": True,
                 "usage": {"new_tokens": len(tokens)}}
 
-    def _suspend(self, sc: LLMSyscall, slot: int) -> str:
+    def _suspend(self, sc: LLMSyscall, slot: int, *,
+                 pinned: bool = False) -> str:
+        """Snapshot `slot` into the shared ContextManager. ``pinned`` is the
+        migration hand-off path: the snapshot is kept in host RAM (never
+        spilled to disk) until the receiving core restores it, so a
+        cross-core migration costs one host round-trip, not two plus disk."""
         snap = self.engine.snapshot(slot, kind=self.ctx.mode)
         ctx_id = f"ctx-{sc.pid}"
-        self.ctx.save(ctx_id, snap)
+        self.ctx.save(ctx_id, snap, pinned=pinned)
+        if pinned:
+            self.migrations_out += 1
+            sc._migrated_from = self.core_id
         return ctx_id
 
     # -- exclusive (paper-faithful: one prompt at a time) -----------------------------

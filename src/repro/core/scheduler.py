@@ -192,6 +192,7 @@ class BaseScheduler:
         return {
             "completed": n,
             "avg_wait": sum(waits) / n if n else 0.0,
+            "p50_wait": waits[int(0.5 * (n - 1))] if n else 0.0,
             "p90_wait": waits[int(0.9 * (n - 1))] if n else 0.0,
         }
 
@@ -240,10 +241,24 @@ class BatchedScheduler(BaseScheduler):
     capacity (context snapshots are host-side and core-agnostic). The same
     path gives fault tolerance: a core fault requeues its in-flight syscalls
     centrally (up to ``llm_retries`` each) so healthy cores absorb them, and
-    no core idles while another has a backlog."""
+    no core idles while another has a backlog.
+
+    With a ``ControlPlane`` attached (repro.control), four more behaviours
+    switch on -- all bit-exact (the plane moves work, never changes tokens):
+      * the central queue orders by SLO class (interactive > batch >
+        best_effort), FIFO within a class;
+      * the dispatcher adds prefix-affinity to placement (prefer the core
+        whose engine already holds the prompt's prefix pages);
+      * an about-to-miss interactive syscall may preempt a best-effort slot
+        MID-quantum (today's boundary preemption stays as the fairness
+        backstop);
+      * a plane thread ticks the rebalancer, which migrates running contexts
+        from hot cores to idle ones (snapshot -> pinned hand-off ->
+        restore)."""
     name = "batched"
 
-    def __init__(self, *args, quantum: Optional[int] = 64, **kw):
+    def __init__(self, *args, quantum: Optional[int] = 64, control=None, **kw):
+        self.control = control     # before super(): _make_queue consults it
         super().__init__(*args, **kw)
         self.llm_quantum = quantum
         self._core_queues: List["queue.Queue"] = []
@@ -251,6 +266,11 @@ class BatchedScheduler(BaseScheduler):
         self._inflight_lock = threading.Lock()
         self._dispatcher_held = 0             # 1 while the dispatcher holds a
                                               # syscall it cannot yet place
+
+    def _make_queue(self):
+        if self.control is not None:
+            return self.control.make_queue()     # SLO-class-ordered
+        return queue.Queue()
 
     # -- lifecycle ------------------------------------------------------------------
     def start(self):
@@ -263,6 +283,13 @@ class BatchedScheduler(BaseScheduler):
                              name=f"aios-{self.name}-dispatch", daemon=True)
         t.start()
         self._threads.append(t)
+        if self.control is not None and self.control.rebalancer is not None:
+            tp = threading.Thread(
+                target=self.control.run_loop,
+                args=(self._stop, self._backlog),
+                name=f"aios-{self.name}-plane", daemon=True)
+            tp.start()
+            self._threads.append(tp)
 
     # -- central dispatcher (control plane) -------------------------------------------
     def _required_tokens(self, sc: Syscall) -> int:
@@ -277,9 +304,19 @@ class BatchedScheduler(BaseScheduler):
         tie-break. None when the whole pool is saturated. Cores `sc` already
         faulted on are avoided (a dead core has zero inflight and free pages,
         so it would otherwise look least-loaded and attract its own retries);
-        they become candidates again only when every core has faulted."""
+        they become candidates again only when every core has faulted.
+
+        With the control plane's affinity router, a fresh prompt whose prefix
+        is already resident on some core's engine prefers that core (affinity
+        pages lead the key) -- re-prefill saved outweighs a small occupancy
+        gap, and the bound is one admission burst: a core with no free slot
+        is never picked on affinity alone."""
         need = self._required_tokens(sc)
-        best, best_key = None, None
+        best, best_key, best_res = None, None, None
+        residency = None
+        router = self.control.affinity if self.control is not None else None
+        if router is not None and sc.context_id is None:
+            residency = router.probe(sc.request_data.get("prompt"))
         with self._inflight_lock:
             inflight = list(self._inflight)
         avoid = getattr(sc, "_faulted_cores", None)
@@ -294,21 +331,33 @@ class BatchedScheduler(BaseScheduler):
                 continue
             if not engine.pager.can_admit(need):
                 continue
-            key = (free_slots, engine.pager.free_pages)
+            aff = 0
+            if router is not None:
+                aff = router.affinity_pages(idx, residency,
+                                            engine.pager.page_size)
+            key = (aff, free_slots, engine.pager.free_pages)
             if best_key is None or key > best_key:
-                best, best_key = idx, key
+                best, best_key, best_res = idx, key, residency
+        if best is not None and router is not None:
+            router.note_routed(best, best_res)
         return best
 
     def _dispatch(self, core_idx: int, sc: Syscall):
         with self._inflight_lock:
             self._inflight[core_idx] += 1
+        sc._core_idx = core_idx      # placement trace (benchmarks/telemetry)
         self._core_queues[core_idx].put(sc)
 
     def _undispatch(self, core_idx: int, sc: Syscall):
         """Hand a syscall back to the central queue (capacity race or
-        cross-core preemption): any core may pick it up next."""
+        cross-core preemption): any core may pick it up next. The SLO-queue
+        arrival stamp is cleared -- a syscall coming back through here goes
+        to the TAIL of its class (fair cycling among peers), unlike the
+        dispatcher's backpressure requeue which keeps its place."""
         with self._inflight_lock:
             self._inflight[core_idx] -= 1
+        if getattr(sc, "_slo_seq", None) is not None:
+            sc._slo_seq = None
         self.llm_queue.put(sc)
 
     def _backlog(self) -> int:
@@ -370,7 +419,17 @@ class BatchedScheduler(BaseScheduler):
                     time.sleep(0.001)
             idx = self._pick_core(pending)
             if idx is None:
-                time.sleep(0.001)     # admission backpressure: pool saturated
+                # admission backpressure: pool saturated. With the control
+                # plane: escalate an about-to-miss syscall into a mid-quantum
+                # preemption request, and hand the held syscall back to the
+                # SLO queue so a more urgent later arrival can take the head
+                # (a plain FIFO held slot would pin the dispatcher to it).
+                if self.control is not None:
+                    self.control.consider_preempt(pending)
+                    self.llm_queue.put(pending)
+                    pending = None
+                    self._dispatcher_held = 0
+                time.sleep(0.001)
                 continue
             self._dispatch(idx, pending)
             pending = None
@@ -409,13 +468,68 @@ class BatchedScheduler(BaseScheduler):
         sc._faulted_cores = faulted
         super()._retry_or_fail(sc, err, core_idx)
 
+    # -- control-plane actions executed on the worker thread ----------------------------
+    def _preempt_victim(self, running: Dict[int, Syscall], engine,
+                        below_rank: int) -> Optional[int]:
+        """Slot of the least latency-sensitive running sequence with class
+        rank strictly greater than ``below_rank`` (ties: most remaining
+        tokens -- the longest tail benefits most from yielding). None when
+        nothing is eligible (mid-prefill and finishing slots are not)."""
+        best, best_key = None, None
+        for slot, sc in running.items():
+            if engine.is_prefilling(slot) or engine.is_done(slot):
+                continue
+            rank = self.control.policy.rank(sc)
+            if rank <= below_rank:
+                continue
+            s = engine.slots[slot]
+            key = (rank, s.max_new - len(s.generated))
+            if best_key is None or key > best_key:
+                best, best_key = slot, key
+        return best
+
+    def _run_migrations(self, core_idx: int, core, engine,
+                        running: Dict[int, Syscall], used: Dict[int, int]):
+        """Execute a rebalancer request: suspend up to ``count`` running
+        sequences (least latency-sensitive first) and hand their contexts to
+        the target core -- snapshot on this thread, pinned in the shared
+        ContextManager, restored by the target's worker on arrival."""
+        req = self.control.take_migration(core_idx)
+        if req is None:
+            return
+        dst, count = req
+        teng = self.pool.cores[dst].engine
+        for _ in range(count):
+            victim = self._preempt_victim(running, engine, below_rank=-1)
+            if victim is None:
+                return
+            sc = running[victim]
+            with self._inflight_lock:
+                room = teng.max_slots - self._inflight[dst]
+            if room <= 0 or not teng.pager.can_admit(
+                    self._required_tokens(sc)):
+                return               # target filled up since the plan tick
+            ctx_id = core._suspend(sc, victim, pinned=True)
+            sc.suspend(ctx_id)
+            self.control.on_exit(core_idx, sc, "migrated")
+            with self._inflight_lock:
+                self._inflight[core_idx] -= 1
+            self._dispatch(dst, sc)
+            self.control.note_migrated(core_idx, dst, sc)
+            del running[victim], used[victim]
+
     # -- per-core worker (data plane) ----------------------------------------------------
     def _llm_worker(self, core_idx: int):
         """Keeps the decode batch full AND interleaves chunked prefill with
         decode: each loop iteration consumes at most one prompt chunk for the
         whole admission burst (`prefill_step`), then runs one decode step for
         every active slot -- so a burst of long prompts admits as one batched
-        chunked prefill and never stalls running generations."""
+        chunked prefill and never stalls running generations.
+
+        With the control plane attached the loop additionally publishes
+        telemetry each iteration and executes the plane's preemption /
+        migration requests -- always on this thread, the engine's only
+        owner."""
         core = self.pool.cores[core_idx]
         engine = core.engine
         myq = self._core_queues[core_idx]
@@ -444,6 +558,30 @@ class BatchedScheduler(BaseScheduler):
                     continue
                 running[slot] = sc
                 used[slot] = 0
+                if self.control is not None:
+                    self.control.on_admit(core_idx, sc)
+            if self.control is not None:
+                self.control.publish(core_idx, core, myq.qsize())
+                # always consume the flag (a core that drained naturally must
+                # not preempt its NEXT occupant on a stale request), but only
+                # act while something preemptible is running
+                rank = self.control.take_preempt(core_idx)
+                if rank is not None and running:
+                    # mid-quantum preemption: an about-to-miss interactive
+                    # syscall asked for a slot; yield the least-sensitive
+                    # running sequence NOW, not at the quantum boundary
+                    victim = self._preempt_victim(running, engine, rank)
+                    if victim is not None:
+                        vsc = running[victim]
+                        ctx_id = core._suspend(vsc, victim)
+                        vsc.suspend(ctx_id)
+                        self.control.note_preempted(core_idx, vsc)
+                        self.control.on_exit(core_idx, vsc, "suspended")
+                        self._undispatch(core_idx, vsc)
+                        del running[victim], used[victim]
+                if running:
+                    self._run_migrations(core_idx, core, engine, running,
+                                         used)
             if not running:
                 time.sleep(0.001)
                 continue
@@ -459,6 +597,8 @@ class BatchedScheduler(BaseScheduler):
                         engine.free(slot)
                     except Exception:  # noqa: BLE001
                         pass
+                    if self.control is not None:
+                        self.control.on_exit(core_idx, sc, "fault")
                     self._retry_or_fail(sc, e, core_idx)
                 running.clear()
                 used.clear()
@@ -471,6 +611,8 @@ class BatchedScheduler(BaseScheduler):
                     resp = core._finish(sc, slot)
                     sc.complete(resp)
                     self._record(sc)
+                    if self.control is not None:
+                        self.control.on_exit(core_idx, sc, "finished")
                     with self._inflight_lock:
                         self._inflight[core_idx] -= 1
                     del running[slot], used[slot]
@@ -482,6 +624,8 @@ class BatchedScheduler(BaseScheduler):
                     # generation on a different core
                     ctx_id = core._suspend(sc, slot)
                     sc.suspend(ctx_id)
+                    if self.control is not None:
+                        self.control.on_exit(core_idx, sc, "suspended")
                     self._undispatch(core_idx, sc)
                     del running[slot], used[slot]
         # drain on stop: finish whatever is still running (mid-prefill slots

@@ -112,7 +112,8 @@ class DenseTransformer:
         cfg = self.cfg
         h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
         q, k, v = L.attn_qkv(blk["attn"], h, cfg, positions)
-        o = L.causal_attention(q, k, v, q_offset=q_offset)
+        o = L.causal_attention(q, k, v, q_offset=q_offset,
+                                use_kernel=cfg.use_kernel)
         x = x + L.attn_out(blk["attn"], o)
         h = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
         x = x + L.mlp_apply(blk["mlp"], h, cfg.activation)
@@ -235,7 +236,8 @@ class DenseTransformer:
                     sblk, kcl, vcl = sub
                     h = L.rms_norm(x2, sblk["ln1"], cfg.norm_eps)
                     q, k, v = L.attn_qkv(sblk["attn"], h, cfg, positions)
-                    o = L.causal_attention(q, k, v)
+                    o = L.causal_attention(q, k, v,
+                                           use_kernel=cfg.use_kernel)
                     x2 = x2 + L.attn_out(sblk["attn"], o)
                     h = L.rms_norm(x2, sblk["ln2"], cfg.norm_eps)
                     x2 = x2 + L.mlp_apply(sblk["mlp"], h, cfg.activation)
@@ -304,7 +306,8 @@ class DenseTransformer:
             vw = vc[:, :kv_width] if narrow else vc
             kw = L.cache_write_chunk(kw, k, q_offset, lengths)
             vw = L.cache_write_chunk(vw, v, q_offset, lengths)
-            o = L.chunk_attention(q, kw, vw, q_offset)
+            o = L.chunk_attention(q, kw, vw, q_offset,
+                                  use_kernel=cfg.use_kernel)
             if narrow:
                 kc = jax.lax.dynamic_update_slice_in_dim(kc, kw, 0, axis=1)
                 vc = jax.lax.dynamic_update_slice_in_dim(vc, vw, 0, axis=1)
@@ -382,7 +385,8 @@ class DenseTransformer:
             q, k, v = L.attn_qkv(blk["attn"], h, cfg, positions)
             kc = L.cache_write_token(kc, k[:, 0], seq_lens)
             vc = L.cache_write_token(vc, v[:, 0], seq_lens)
-            o = L.decode_attention(q[:, 0], kc, vc, seq_lens + 1)
+            o = L.decode_attention(q[:, 0], kc, vc, seq_lens + 1,
+                                   use_kernel=cfg.use_kernel)
             x = x + L.attn_out(blk["attn"], o[:, None])
             h = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
             x = x + L.mlp_apply(blk["mlp"], h, cfg.activation)

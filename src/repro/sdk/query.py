@@ -19,13 +19,17 @@ class LLMQuery:
     temperature: float = 0.0
     eos_id: int = -1
     priority: int = 0
+    # SLO latency class consumed by the pool control plane (repro.control):
+    # interactive | batch | best_effort. None = derived from priority.
+    slo_class: Optional[str] = None
     query_class: str = "llm"
 
     def to_syscall(self, agent_name: str) -> LLMSyscall:
         return LLMSyscall(agent_name, {
             "prompt": self.prompt, "max_new_tokens": self.max_new_tokens,
             "temperature": self.temperature, "eos_id": self.eos_id,
-            "action_type": self.action_type}, priority=self.priority)
+            "action_type": self.action_type, "slo_class": self.slo_class},
+            priority=self.priority)
 
 
 @dataclasses.dataclass

@@ -58,6 +58,8 @@ class ContextSnapshot:
     state: Optional[List[np.ndarray]] = None
     pending_token: Optional[int] = None
     logits: Optional[np.ndarray] = None
+    origin: Optional[int] = None   # engine_id that produced the state (the
+                                   # control plane's prefix-affinity signal)
 
     def nbytes(self) -> int:
         n = self.prompt.nbytes + 8 * len(self.generated)
@@ -256,8 +258,10 @@ class ServingEngine:
                  temperature: float = 0.0, rng_seed: int = 0,
                  page_size: int = 16, hbm_pages: Optional[int] = None,
                  params=None, prefix_cache=None, serial_prefill: bool = False,
-                 prefill_chunk_cap: Optional[int] = None):
+                 prefill_chunk_cap: Optional[int] = None, engine_id: int = 0):
         self.cfg = cfg
+        self.engine_id = engine_id   # pool position; tags prefix-cache
+                                     # entries for affinity routing
         self.serial_prefill = serial_prefill   # True: legacy one-sequence-
                                                # per-XLA-call prefill (the
                                                # baseline bench_prefill beats)
@@ -343,6 +347,12 @@ class ServingEngine:
     def prefill_pending(self) -> int:
         """Sequences still consuming prompt chunks (queued prefill jobs)."""
         return len(self._prefill_queue)
+
+    def prefill_debt(self) -> int:
+        """Prompt tokens still to consume across all queued prefill jobs --
+        the control plane's measure of admission work this core owes."""
+        with self._lock:
+            return sum(len(j.tokens) - j.done for j in self._prefill_queue)
 
     def can_admit(self, prompt_len: int, max_new: int) -> bool:
         return (self._find_free_slot() is not None and
@@ -567,6 +577,83 @@ class ServingEngine:
                                    if j.slot not in done_set]
         return fin_slots
 
+    def warmup(self, buckets=None) -> int:
+        """Pre-compile the serving program set: every (batch-bucket, chunk,
+        kv-width) combo of the chunked-prefill grid plus the decode /
+        sampling / gather-scatter programs they feed -- the combos a bursty
+        agent workload hits mid-measurement otherwise. Programs land in the
+        process-wide ``_EngineJits`` cache, so every replica sharing this
+        engine's (config, temperature) key is warmed too; repeat calls only
+        pay the (small) warm-run compute.
+
+        ``buckets`` narrows the grid to the given chunk sizes (default: all
+        of ``self.prefill_chunks``). The prefix cache is detached while
+        warming so warm prompts never become cache entries. Returns the
+        number of warm admissions run."""
+        chunks = tuple(buckets) if buckets else self.prefill_chunks
+        lens = sorted({min(c - 8, self.max_len - 2) for c in chunks})
+        if buckets is None and self.max_len >= 72:
+            lens.append(self.max_len - 40)   # exercise the top kv bucket
+        lens = [L for L in lens if L >= 1 and L + 2 <= self.max_len]
+        pc, self.prefix_cache = self.prefix_cache, None
+        ran = 0
+
+        def _drain(slots):
+            while any(not self.is_done(s) for s in slots):
+                self.step()
+            for s in slots:
+                self.free(s)
+
+        try:
+            rng = np.random.default_rng(4242)
+
+            def prompt(L):
+                return rng.integers(1, self.cfg.vocab - 1, L).astype(np.int32)
+
+            # chunked-prefill grid: every (batch-bucket, chunk, kv) combo.
+            # eager=False even for n == 1 -- that is the scheduler-worker
+            # admission path (eager singles would take the serial program
+            # instead and leave the kb=1 chunk programs cold)
+            n = 1
+            while n <= self.max_slots:
+                for L in lens:
+                    slots = self.add_sequences(
+                        [dict(prompt=prompt(L), max_new=1)
+                         for _ in range(n)], eager=False)
+                    while self.prefill_pending():
+                        self.prefill_step()
+                    _drain(slots)
+                    ran += n
+                n *= 2
+            # finishing-size pass: a chunk's FINISHING row count is not
+            # bucketed (any 1..max_slots rows can complete together), and
+            # the activation ops specialize on it -- without this a size-5
+            # finish stalls the serving loop on a mid-run compile
+            for n in range(1, self.max_slots + 1):
+                if n & (n - 1) == 0:
+                    continue               # covered by the grid pass
+                slots = self.add_sequences(
+                    [dict(prompt=prompt(lens[0]), max_new=1)
+                     for _ in range(n)], eager=False)
+                while self.prefill_pending():
+                    self.prefill_step()
+                _drain(slots)
+                ran += n
+            # serial single-sequence prefill (eager singles, VLM prompts,
+            # text-mode restores), one program per prompt-length bucket
+            for L in lens:
+                _drain([self.add_sequence(prompt(L), max_new=1)])
+                ran += 1
+            # context-switch programs (extract / insert / set_len): one
+            # suspend-restore round trip
+            slot = self.add_sequence(prompt(lens[0]), max_new=2)
+            self.step()
+            _drain([self.restore(self.snapshot(slot))])
+            ran += 1
+        finally:
+            self.prefix_cache = pc
+        return ran
+
     def _prefill_into(self, slot: int, tokens: np.ndarray, *, image_embeds=None):
         """Prefill `tokens` into `slot`'s cache and sample the pending token
         with the slot's current counter (draw #counter)."""
@@ -613,7 +700,8 @@ class ServingEngine:
         snap = ContextSnapshot(
             kind="prefix", prompt=np.asarray(tokens, np.int32).copy(),
             generated=[], seq_len=len(tokens),
-            state=list(jax.tree.leaves(cache1)), logits=logits_vec)
+            state=list(jax.tree.leaves(cache1)), logits=logits_vec,
+            origin=self.engine_id)
         self.prefix_cache.insert(snap)
 
     def harvest_prefix(self, slot: int):

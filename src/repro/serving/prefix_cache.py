@@ -61,20 +61,26 @@ class PrefixCache:
         return self._used
 
     # -- lookup -----------------------------------------------------------------
+    def _longest_prefix(self, tok: np.ndarray):
+        """(key, snap) of the longest cached entry (>= min_tokens) whose
+        tokens are a prefix of `tok`, or (None, None). Caller holds _lock."""
+        best_key, best = None, None
+        for key, snap in self._entries.items():
+            n = snap.seq_len
+            if n < self.min_tokens or n > len(tok):
+                continue
+            if best is not None and n <= best.seq_len:
+                continue
+            if key == tok[:n].tobytes():
+                best_key, best = key, snap
+        return best_key, best
+
     def lookup(self, tokens) -> Optional[Any]:
         """Longest cached entry whose tokens are a prefix of `tokens`
         (at least ``min_tokens`` long). Touches the entry (LRU)."""
         tok = np.asarray(tokens, np.int32)
         with self._lock:
-            best_key, best = None, None
-            for key, snap in self._entries.items():
-                n = snap.seq_len
-                if n < self.min_tokens or n > len(tok):
-                    continue
-                if best is not None and n <= best.seq_len:
-                    continue
-                if key == tok[:n].tobytes():
-                    best_key, best = key, snap
+            best_key, best = self._longest_prefix(tok)
             if best is None:
                 self.stats["misses"] += 1
                 return None
@@ -83,6 +89,19 @@ class PrefixCache:
             self.stats["hits"] += 1
             self.stats["hit_tokens"] += best.seq_len
             return best
+
+    def residency(self, tokens) -> Optional[tuple]:
+        """Read-only probe for the control plane's affinity router:
+        ``(origin_engine_id, resident_tokens)`` of the longest cached entry
+        whose tokens are a prefix of ``tokens``, or None. Unlike lookup it
+        must NOT touch LRU order or hit accounting -- the dispatcher probes
+        every candidate placement, and a probe is not a use."""
+        tok = np.asarray(tokens, np.int32)
+        with self._lock:
+            _, best = self._longest_prefix(tok)
+        if best is None:
+            return None
+        return (getattr(best, "origin", None), best.seq_len)
 
     # -- insert -----------------------------------------------------------------
     def insert(self, snap) -> bool:

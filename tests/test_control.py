@@ -1,0 +1,326 @@
+"""Pool control plane (repro.control): telemetry aggregation, SLO-class
+queueing and mid-quantum preemption, proactive migration (bit-exactness
+guarantee), and prefix-affinity routing."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.control import (AffinityRouter, Rebalancer, SLOPolicy, SLOQueue,
+                           TelemetryBus)
+from repro.core import AIOSKernel, LLMSyscall
+from repro.sdk.query import LLMQuery
+from repro.serving import PrefixCache, ServingEngine
+
+
+def make_kernel(*, cores=2, control=False, quantum=64, max_slots=4,
+                max_len=192, control_kw=None):
+    return AIOSKernel(arch="tiny", scheduler="batched", quantum=quantum,
+                      num_cores=cores,
+                      engine_kw={"max_slots": max_slots, "max_len": max_len},
+                      control=control, control_kw=control_kw)
+
+
+def warm(kernel, buckets=(32,)):
+    for c in kernel.pool.cores:
+        c.engine.warmup(buckets=buckets)
+
+
+# -- telemetry bus -----------------------------------------------------------------
+class TestTelemetry:
+    def test_gauges_latest_sample_wins(self):
+        bus = TelemetryBus(2)
+        bus.publish(0, free_slots=4, backlog=1)
+        bus.publish(0, free_slots=2)
+        g = bus.gauges(0)
+        assert g["free_slots"] == 2 and g["backlog"] == 1
+        assert bus.gauges(1)["free_slots"] == 0      # never published
+
+    def test_rolling_percentiles(self):
+        bus = TelemetryBus(1, window=100)
+        for v in range(1, 101):
+            bus.record("wait", v / 100.0, "interactive")
+        assert bus.p50("wait", "interactive") == pytest.approx(0.50)
+        assert bus.p90("wait", "interactive") == pytest.approx(0.90)
+        # bounded window: old samples roll out
+        for _ in range(100):
+            bus.record("wait", 5.0, "interactive")
+        assert bus.p50("wait", "interactive") == 5.0
+
+    def test_staleness(self):
+        bus = TelemetryBus(2)
+        bus.publish(0, free_slots=1)
+        assert bus.staleness(0) < 1.0
+        assert bus.staleness(1) == float("inf")
+
+
+# -- SLO policy + queue ------------------------------------------------------------
+def _sc(cls=None, priority=0):
+    sc = LLMSyscall("t", {"prompt": [1, 2, 3], "max_new_tokens": 4,
+                          "slo_class": cls}, priority=priority)
+    sc.mark_queued()
+    return sc
+
+
+class TestSLO:
+    def test_classify_explicit_and_priority_fallback(self):
+        pol = SLOPolicy()
+        assert pol.classify(_sc("best_effort")) == "best_effort"
+        assert pol.classify(_sc("interactive")) == "interactive"
+        assert pol.classify(_sc(None)) == "batch"
+        assert pol.classify(_sc(None, priority=5)) == "interactive"
+
+    def test_queue_orders_by_class_then_arrival(self):
+        q = SLOQueue(SLOPolicy())
+        be1, be2 = _sc("best_effort"), _sc("best_effort")
+        inter, batch = _sc("interactive"), _sc(None)
+        for sc in (be1, be2, batch, inter):
+            q.put(sc)
+        assert [q.get() for _ in range(4)] == [inter, batch, be1, be2]
+
+    def test_queue_fifo_within_class(self):
+        q = SLOQueue(SLOPolicy())
+        scs = [_sc(None) for _ in range(5)]
+        for sc in scs:
+            q.put(sc)
+        assert [q.get_nowait() for _ in range(5)] == scs
+
+    def test_about_to_miss(self):
+        pol = SLOPolicy(targets={"interactive": 0.2}, preempt_at_frac=0.5)
+        sc = _sc("interactive")
+        pol.tag(sc)
+        assert not pol.about_to_miss(sc)
+        sc.queued_time = time.monotonic() - 0.15   # waited 0.15 > 0.5 * 0.2
+        assert pol.about_to_miss(sc)
+        be = _sc("best_effort")
+        pol.tag(be)
+        be.queued_time = time.monotonic() - 1e6
+        assert not pol.about_to_miss(be)           # no target, never misses
+
+
+# -- rebalancer decision logic -----------------------------------------------------
+class TestRebalancer:
+    def _bus(self, hot_running, cold_running, cold_free=4):
+        bus = TelemetryBus(2)
+        bus.publish(0, free_slots=0, free_pages=8, backlog=0,
+                    prefill_debt=0, running=hot_running)
+        bus.publish(1, free_slots=cold_free, free_pages=8, backlog=0,
+                    prefill_debt=0, running=cold_running)
+        return bus
+
+    def test_hysteresis_requires_persistent_skew(self):
+        rb = Rebalancer(self._bus(4, 0), min_gap=2, hysteresis_ticks=3)
+        assert rb.plan(0) is None
+        assert rb.plan(0) is None
+        hot, cold, n = rb.plan(0)
+        assert (hot, cold) == (0, 1) and n == 2    # half the gap
+
+    def test_no_move_while_central_backlog(self):
+        rb = Rebalancer(self._bus(4, 0), min_gap=2, hysteresis_ticks=1)
+        assert rb.plan(central_backlog=3) is None  # idle core pulls centrally
+
+    def test_no_move_below_gap_or_without_room(self):
+        rb = Rebalancer(self._bus(3, 2), min_gap=2, hysteresis_ticks=1)
+        assert rb.plan(0) is None                  # gap 1 < min_gap
+        rb2 = Rebalancer(self._bus(4, 0, cold_free=0), min_gap=2,
+                         hysteresis_ticks=1)
+        assert rb2.plan(0) is None                 # cold core has no room
+
+    def test_cooldown_after_move(self):
+        rb = Rebalancer(self._bus(4, 0), min_gap=2, hysteresis_ticks=1,
+                        cooldown_ticks=3)
+        assert rb.plan(0) is not None
+        for _ in range(3):
+            assert rb.plan(0) is None              # cooling down
+        assert rb.plan(0) is not None
+
+
+# -- affinity router ---------------------------------------------------------------
+class _Snap:
+    def __init__(self, prompt, origin):
+        self.prompt = np.asarray(prompt, np.int32)
+        self.seq_len = len(prompt)
+        self.origin = origin
+
+    def nbytes(self):
+        return self.prompt.nbytes
+
+
+class TestAffinity:
+    def test_probe_reads_origin_without_touching_lru(self):
+        pc = PrefixCache(min_tokens=4)
+        pc.insert(_Snap(range(1, 33), origin=1))
+        router = AffinityRouter(pc, min_tokens=16)
+        res = router.probe(list(range(1, 40)))
+        assert res == (1, 32)
+        assert pc.stats["hits"] == 0               # probe is not a use
+        assert router.affinity_pages(1, res, page_size=16) == 2
+        assert router.affinity_pages(0, res, page_size=16) == 0
+
+    def test_probe_respects_min_tokens(self):
+        pc = PrefixCache(min_tokens=4)
+        pc.insert(_Snap(range(1, 9), origin=0))    # 8 < router min 16
+        router = AffinityRouter(pc, min_tokens=16)
+        assert router.probe(list(range(1, 40))) is None
+
+    def test_kernel_routes_repeated_prefix_to_origin_core(self):
+        with make_kernel(cores=2, control=True) as k:
+            warm(k)
+            base = list(range(1, 81))
+            seed = LLMQuery(prompt=base, max_new_tokens=4).to_syscall("seed")
+            k.submit(seed)
+            seed.join(timeout=300)
+            origin = seed._core_idx
+            time.sleep(0.05)
+            for i in range(4):
+                sc = LLMQuery(prompt=base + [200 + i],
+                              max_new_tokens=4).to_syscall(f"c{i}")
+                k.submit(sc)
+                sc.join(timeout=300)
+                assert sc._core_idx == origin
+            aff = k.metrics()["control"]["affinity"]
+        assert aff["routed_affine"] >= 4 and aff["hit_rate"] == 1.0
+
+
+# -- mid-quantum preemption --------------------------------------------------------
+class TestPreemption:
+    def test_interactive_preempts_best_effort_mid_quantum(self):
+        # quantum so large that boundary preemption can never fire: only the
+        # control plane's mid-quantum path can free a slot
+        with make_kernel(cores=1, control=True, quantum=10**6, max_slots=2,
+                         max_len=384,
+                         control_kw={"policy": SLOPolicy(
+                             targets={"interactive": 0.1})}) as k:
+            warm(k)
+            longs = [LLMQuery(prompt=list(range(1, 9)), max_new_tokens=300,
+                              slo_class="best_effort").to_syscall(f"be{i}")
+                     for i in range(2)]
+            for sc in longs:
+                k.submit(sc)
+            time.sleep(0.2)                       # both admitted, decoding
+            inter = LLMQuery(prompt=[5, 6, 7], max_new_tokens=4,
+                             slo_class="interactive").to_syscall("ui")
+            k.submit(inter)
+            inter.join(timeout=300)
+            for sc in longs:
+                sc.join(timeout=300)
+            m = k.metrics()["control"]
+        assert m["preemptions"] >= 1
+        assert inter.end_time < min(sc.end_time for sc in longs)
+        # the preempted generation resumes exactly (suspend is bit-exact)
+        assert all(len(sc.response["tokens"]) == 300 for sc in longs)
+        assert all(sc.quanta_used >= 1 for sc in longs[:1]) or \
+            any(sc.quanta_used >= 1 for sc in longs)
+
+    def test_tokens_unchanged_by_preemption(self):
+        """Preemption moves work in time, never changes tokens: the same
+        workload with and without the control plane emits identical ids."""
+        prompts = [list(range(1, 9)), [7, 5, 3], list(range(2, 30, 3))]
+        outs = {}
+        for ctl in (False, True):
+            with make_kernel(cores=1, control=ctl, quantum=8,
+                             max_slots=2) as k:
+                warm(k)
+                scs = [LLMQuery(prompt=p, max_new_tokens=12,
+                                slo_class="best_effort" if i else
+                                "interactive").to_syscall(f"x{i}")
+                       for i, p in enumerate(prompts)]
+                for sc in scs:
+                    k.submit(sc)
+                outs[ctl] = [sc.join(timeout=300)["tokens"] for sc in scs]
+        assert outs[False] == outs[True]
+
+
+# -- proactive migration -----------------------------------------------------------
+def _skewed_workload():
+    """Long,short,long,short...: least-loaded alternation clusters the longs
+    on one core; after the shorts drain, one core is hot, one idle."""
+    qs = []
+    for i in range(4):
+        qs.append(LLMQuery(prompt=list(range(1 + i, 9 + i)),
+                           max_new_tokens=120))
+        qs.append(LLMQuery(prompt=list(range(40 + i, 46 + i)),
+                           max_new_tokens=4))
+    return [q.to_syscall(f"m{i}") for i, q in enumerate(qs)]
+
+
+class TestMigration:
+    def test_rebalancer_migrates_and_tokens_bit_exact(self):
+        """The acceptance property: identical tokens with the rebalancer on
+        or off, while the rebalancer actually moves running contexts."""
+        outs = {}
+        migrations = 0
+        for ctl in (False, True):
+            with make_kernel(cores=2, control=ctl, quantum=10**6) as k:
+                warm(k)
+                scs = _skewed_workload()
+                for sc in scs:
+                    k.submit(sc)
+                outs[ctl] = [sc.join(timeout=600)["tokens"] for sc in scs]
+                if ctl:
+                    migrations = k.metrics()["control"]["migrations"]
+                    ins = sum(c.migrations_in for c in k.pool.cores)
+                    assert k.context.stats["handoffs"] == migrations
+                    assert ins == migrations
+        assert migrations >= 1
+        assert outs[False] == outs[True]
+
+    @pytest.mark.parametrize("temperature", [0.7])
+    def test_mid_stream_migration_temperature_sampled(self, temperature):
+        """Engine-level migration: suspend a temperature-sampled sequence
+        mid-stream on one engine and restore it on a DIFFERENT engine
+        (identical replica) -- the continuation must be bit-exact."""
+        cfg = get_config("tiny")
+        src = ServingEngine(cfg, max_slots=2, max_len=128,
+                            temperature=temperature, rng_seed=1)
+        dst = ServingEngine(cfg, max_slots=2, max_len=128,
+                            temperature=temperature, rng_seed=2,
+                            params=src.params, engine_id=1)
+        prompt = np.arange(1, 9)
+        slot = src.add_sequence(prompt, max_new=16)
+        ref = []
+        while not src.is_done(slot):
+            ref.extend(src.step().values())
+        src.free(slot)
+
+        slot = src.add_sequence(prompt, max_new=16)
+        out = []
+        for _ in range(7):
+            out.extend(src.step().values())
+        snap = src.snapshot(slot)                  # suspend on src...
+        slot = dst.restore(snap)                   # ...restore on dst
+        while not dst.is_done(slot):
+            out.extend(dst.step().values())
+        assert out == ref
+
+    def test_pinned_handoff_never_spills(self):
+        """Snapshots mid-migration are exempt from the spill tier."""
+        import tempfile
+        from repro.core.context import ContextManager
+        from repro.core.storage import StorageManager
+        storage = StorageManager(tempfile.mkdtemp(prefix="ctl-"))
+        cm = ContextManager(storage, budget_bytes=1, watermark=0.0)
+        from repro.serving.engine import ContextSnapshot
+        snap = ContextSnapshot(kind="text", prompt=np.arange(64, dtype=np.int32),
+                               generated=[1, 2], seq_len=66)
+        cm.save("ctx-pin", snap, pinned=True)      # over budget, but pinned
+        assert cm.stats["spills"] == 0
+        assert cm.pool.get("ctx-pin") is not None
+        cm.clear("ctx-pin")
+        cm.save("ctx-plain", snap)                 # unpinned: spills
+        assert cm.stats["spills"] == 1
+
+
+# -- control plane metrics surface -------------------------------------------------
+def test_kernel_metrics_include_control_plane():
+    with make_kernel(cores=1, control=True, max_slots=2) as k:
+        warm(k)
+        sc = LLMQuery(prompt=[1, 2, 3, 4], max_new_tokens=4,
+                      slo_class="interactive").to_syscall("m")
+        k.submit(sc)
+        sc.join(timeout=300)
+        m = k.metrics()
+    assert "control" in m
+    assert m["control"]["completions"] == 1
+    assert "p90_wait_interactive" in m["control"]

@@ -481,3 +481,33 @@ class TestPrefixCache:
         assert m["prefix_cache"]["hits"] >= 2
         total_prefills = sum(e["prefills"] for e in m["engine"])
         assert total_prefills <= 1                  # only the first admission
+
+
+class TestWarmup:
+    def test_warmup_compiles_without_changing_tokens(self):
+        """warmup() pre-compiles the serving program grid; generation after a
+        warm pass is bit-identical to a cold engine with the same seed."""
+        cfg = get_config("tiny")
+        prompts = [np.arange(1, 9), np.arange(3, 40, 2)]
+        cold = ServingEngine(cfg, max_slots=4, max_len=128, rng_seed=0)
+        expect = [_drain(cold, cold.add_sequence(p, max_new=8))
+                  for p in prompts]
+
+        warm = ServingEngine(cfg, max_slots=4, max_len=128, rng_seed=0,
+                             params=cold.params)
+        ran = warm.warmup(buckets=(32, 64))
+        assert ran > 0
+        assert warm.free_slot_count() == warm.max_slots   # all drained
+        assert warm.pager.used_pages == 0
+        out = [_drain(warm, warm.add_sequence(p, max_new=8))
+               for p in prompts]
+        assert out == expect
+
+    def test_warmup_leaves_prefix_cache_empty(self):
+        from repro.serving import PrefixCache
+        pc = PrefixCache()
+        eng = ServingEngine(get_config("tiny"), max_slots=2, max_len=128,
+                            rng_seed=0, prefix_cache=pc)
+        eng.warmup(buckets=(32,))
+        assert len(pc) == 0                 # warm prompts never cached
+        assert eng.prefix_cache is pc       # reattached after warming

@@ -259,3 +259,37 @@ def test_wkv6_chunked_jnp_path_matches_sequential():
     out_ref, s_ref = ref.wkv6_ref(r, k, v, w, u, st0)
     np.testing.assert_allclose(out, out_ref, atol=2e-3, rtol=2e-3)
     np.testing.assert_allclose(s, s_ref, atol=2e-3, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# use_kernel config wiring (model -> kernels/ops dispatch)
+# ---------------------------------------------------------------------------
+def test_use_kernel_config_routes_serving_through_pallas_interpret():
+    """`ModelConfig.use_kernel=True` must route the serving engine's chunked
+    prefill + decode through the Pallas kernels (interpret mode on CPU) and
+    produce the same tokens as the jnp fallback path."""
+    from repro.configs import get_config
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config("tiny")
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, 500, n).astype(np.int32) for n in (8, 33, 70)]
+
+    def run(cfg):
+        eng = ServingEngine(cfg, max_slots=4, max_len=128, rng_seed=0)
+        slots = eng.add_sequences([dict(prompt=p, max_new=6)
+                                   for p in prompts], eager=False)
+        while eng.prefill_pending():
+            eng.prefill_step()
+        while any(not eng.is_done(s) for s in slots):
+            eng.step()
+        return [eng.result(s) for s in slots]
+
+    expect = run(cfg)
+    assert cfg.use_kernel is False
+    ops.set_backend("interpret")
+    try:
+        out = run(cfg.replace(use_kernel=True))
+    finally:
+        ops.set_backend(None)
+    assert out == expect

@@ -1,0 +1,222 @@
+"""Memory-hierarchy benchmark: what the unified paged KV store buys.
+
+Three parts, all bit-exactness-gated (the page store moves and shares bytes;
+it must never change tokens):
+
+  dedup      -- multi-turn conversations sharing a long base prefix, served
+                through one pool: bytes the page table deduplicates (a cached
+                prefix and the conversations extending it share pages
+                copy-on-write) vs the bytes the legacy blob path would hold;
+                tokens compared against a paged_kv=False run of the same
+                workload (exact_match).
+  rehydrate  -- the same prompt set served by TWO AIOSKernel instances
+                (process-equivalent: fresh stores, same storage root): the
+                second kernel's prefix hits come back from the disk-tier
+                manifests the first one persisted. Reports the hit-rate and
+                exact_match=1.0 against the first kernel's tokens.
+  affinity   -- routing quality of fractional per-page residency scoring vs
+                the binary origin tag, on conversations whose pages span two
+                cores (the grown-resubmission-migrates pattern): fraction of
+                placements that land on the true max-residency core.
+
+  PYTHONPATH=src python -m benchmarks.bench_memory [--smoke] [--out DIR]
+"""
+from __future__ import annotations
+
+import tempfile
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import make_aios_kernel, warm_cores
+from repro.control.affinity import AffinityRouter
+from repro.memory import KVPageStore
+from repro.sdk.query import LLMQuery
+from repro.serving.prefix_cache import PrefixCache
+
+
+def _serve(k, prompts: List[List[int]], max_new: int) -> List[List[int]]:
+    outs = []
+    for i, p in enumerate(prompts):
+        sc = LLMQuery(prompt=p, max_new_tokens=max_new).to_syscall(f"a{i}")
+        k.submit(sc)
+        outs.append(sc.join(timeout=600)["tokens"])
+    return outs
+
+
+def _conversations(base_len: int, agents: int, turns: int
+                   ) -> List[List[int]]:
+    """Agents sharing one long base prefix, each growing over ``turns``
+    resubmissions (suffix tokens are deterministic)."""
+    base = list(range(1, base_len + 1))
+    prompts = [base]
+    for a in range(agents):
+        conv = base + [300 + 13 * a + j for j in range(4)]
+        for t in range(turns):
+            prompts.append(list(conv))
+            conv = conv + [350 + 7 * a + 3 * t + j for j in range(3)]
+    return prompts
+
+
+# -- part 1: prefix dedup -----------------------------------------------------------
+def _dedup_part(*, base_len: int, agents: int, turns: int,
+                max_new: int) -> Dict:
+    prompts = _conversations(base_len, agents, turns)
+    k = make_aios_kernel(scheduler="batched", quantum=32, num_cores=2,
+                         paged_kv=True)
+    warm_cores(k)
+    with k:
+        outs_on = _serve(k, prompts, max_new)
+        m = k.metrics()["kv_store"]
+        hits = k.metrics()["prefix_cache"]["hits"]
+    k_off = make_aios_kernel(scheduler="batched", quantum=32, num_cores=2,
+                             paged_kv=False)
+    with k_off:
+        outs_off = _serve(k_off, prompts, max_new)
+    # logical bytes = every page occurrence ever put (what the legacy blob
+    # path would have copied); dedup_ratio = the fraction of those the page
+    # table served by bumping a refcount instead of storing. Both terms are
+    # cumulative counters, so re-puts/releases cannot skew the ratio.
+    return {"mode": "dedup", "prompts": len(prompts),
+            "prefix_hits": hits,
+            "page_bytes": m["page_bytes"],
+            "put_bytes": m["put_bytes"],
+            "dedup_saved_bytes": m["dedup_saved_bytes"],
+            "dedup_ratio": round(
+                m["dedup_saved_bytes"] / max(m["put_bytes"], 1), 3),
+            "exact_match": float(outs_on == outs_off)}
+
+
+# -- part 2: cross-process re-hydration ---------------------------------------------
+def _rehydrate_part(*, base_len: int, agents: int, max_new: int) -> Dict:
+    root = tempfile.mkdtemp(prefix="bench-kv-")
+    prompts = _conversations(base_len, agents, turns=1)
+
+    def one_kernel():
+        k = make_aios_kernel(scheduler="batched", quantum=32, num_cores=2,
+                             paged_kv=True, root_dir=root)
+        warm_cores(k)
+        with k:
+            outs = _serve(k, prompts, max_new)
+            pc = k.metrics()["prefix_cache"]
+            kv = k.metrics()["kv_store"]
+        return outs, pc, kv
+
+    outs1, pc1, kv1 = one_kernel()     # persists manifests as it serves
+    outs2, pc2, kv2 = one_kernel()     # fresh store, same root: re-hydrates
+    lookups = pc2["hits"] + pc2["misses"]
+    return {"mode": "rehydrate", "prompts": len(prompts),
+            "persisted_entries_k1": kv1["persisted_entries"],
+            "rehydrates_k2": pc2["rehydrates"],
+            "hits_k2": pc2["hits"],
+            "hit_rate_k2": round(pc2["hits"] / max(lookups, 1), 3),
+            "exact_match": float(outs1 == outs2)}
+
+
+# -- part 3: fractional vs binary affinity scoring ----------------------------------
+def _affinity_part(*, conversations: int, pages_per_conv: int) -> Dict:
+    """Routing-rule quality, isolated from scheduler noise: entries whose
+    pages split between two cores (a conversation extended on a different
+    core than the one that prefilled its base -- exactly what migration and
+    cross-core resumption produce). The entry's binary ``origin`` tag is the
+    core that HARVESTED it, which holds only the boundary pages; fractional
+    scoring reads per-page residency from the table. Hit = router places on
+    the core holding the majority of the prefix's pages."""
+    ps = 16
+    store = KVPageStore(page_size=ps)
+    layout = f"bench-aff|len{(pages_per_conv + 1) * ps}"
+    width = (pages_per_conv + 1) * ps
+    store.register_layout(layout, [1], [(1, width, 2)], [np.float32])
+    pc = PrefixCache(page_store=store, max_entries=conversations + 1)
+    rng = np.random.default_rng(7)
+    truth = {}
+    for c in range(conversations):
+        # base pages computed on core 0, extension harvested on core 1
+        k0 = int(rng.integers(1, pages_per_conv))      # pages on core 0
+        kv = np.zeros((1, width, 2), np.float32)
+        kv[0, :width - ps] = rng.normal(size=(width - ps, 2))
+        h0 = store.put(layout, [kv], seq_len=k0 * ps, origin=0)
+        kv2 = kv.copy()
+        kv2[0, k0 * ps:] = rng.normal(size=(width - k0 * ps, 2))
+        h1 = store.put(layout, [kv2], seq_len=pages_per_conv * ps, origin=1)
+        h0.release()
+        prompt = np.asarray(rng.integers(1, 400, pages_per_conv * ps),
+                            np.int32)
+        entry = type("E", (), {})()
+        entry.prompt, entry.seq_len, entry.pages = prompt, len(prompt), h1
+        entry.origin, entry.generated, entry.state = 1, [], None
+        entry.logits = None
+        entry.nbytes = lambda h=h1: h.nbytes
+        entry.release = h1.release
+        pc.insert(entry)
+        truth[prompt.tobytes()] = 0 if k0 > pages_per_conv - k0 else 1
+
+    def hit_rate(fractional: bool) -> float:
+        router = AffinityRouter(pc, min_tokens=ps, fractional=fractional)
+        hits = 0
+        for key, best_core in truth.items():
+            prompt = np.frombuffer(key, np.int32)
+            query = np.concatenate([prompt, np.array([7, 8], np.int32)])
+            res = router.probe(query)
+            scores = [router.affinity_pages(c, res, ps) for c in (0, 1)]
+            chosen = int(np.argmax(scores))
+            hits += int(chosen == best_core)
+        return hits / max(len(truth), 1)
+
+    return {"mode": "affinity", "conversations": conversations,
+            "hit_rate_binary": round(hit_rate(False), 3),
+            "hit_rate_fractional": round(hit_rate(True), 3)}
+
+
+def run(smoke: bool = False, quiet: bool = False) -> Dict:
+    dd_kw = (dict(base_len=96, agents=2, turns=2, max_new=6) if smoke else
+             dict(base_len=120, agents=3, turns=3, max_new=8))
+    rh_kw = (dict(base_len=96, agents=2, max_new=6) if smoke else
+             dict(base_len=120, agents=3, max_new=8))
+    # odd pages_per_conv: no majority ties, so max-residency is well-defined
+    aff_kw = (dict(conversations=12, pages_per_conv=7) if smoke else
+              dict(conversations=24, pages_per_conv=9))
+
+    dedup = _dedup_part(**dd_kw)
+    rehyd = _rehydrate_part(**rh_kw)
+    aff = _affinity_part(**aff_kw)
+
+    out = {
+        "rows": [dedup, rehyd, aff],
+        "dedup_ratio": dedup["dedup_ratio"],
+        "dedup_exact_match": dedup["exact_match"],
+        "rehydrate_hit_rate": rehyd["hit_rate_k2"],
+        "rehydrates": rehyd["rehydrates_k2"],
+        "exact_match": min(dedup["exact_match"], rehyd["exact_match"]),
+        "affinity_hit_rate_binary": aff["hit_rate_binary"],
+        "affinity_hit_rate_fractional": aff["hit_rate_fractional"],
+    }
+    if not quiet:
+        print(f"[memory/dedup]     {dedup['dedup_saved_bytes']} of "
+              f"{dedup['put_bytes']} logical bytes shared "
+              f"(ratio {dedup['dedup_ratio']}), "
+              f"exact_match={dedup['exact_match']}")
+        print(f"[memory/rehydrate] fresh kernel: {rehyd['rehydrates_k2']} "
+              f"rehydrates, hit rate {rehyd['hit_rate_k2']}, "
+              f"exact_match={rehyd['exact_match']}")
+        print(f"[memory/affinity]  max-residency routing "
+              f"{aff['hit_rate_binary']} (binary) -> "
+              f"{aff['hit_rate_fractional']} (fractional)")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="directory for BENCH_memory.json")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke)
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        with open(os.path.join(args.out, "BENCH_memory.json"), "w") as f:
+            json.dump(res, f, indent=1)

@@ -127,14 +127,16 @@ class DirectRuntime:
 
 def make_aios_kernel(scheduler="rr", quantum=16, max_slots=8, max_len=256,
                      num_cores=1, prefix_cache=True, control=False,
-                     control_kw=None) -> AIOSKernel:
+                     control_kw=None, paged_kv=True, root_dir=None,
+                     kv_kw=None) -> AIOSKernel:
     ekw = {"max_slots": max_slots, "max_len": max_len}
     if not prefix_cache:
         ekw["prefix_cache"] = None   # explicit None survives the kernel's
                                      # setdefault -> engines run uncached
     k = AIOSKernel(arch="tiny", scheduler=scheduler, quantum=quantum,
                    num_cores=num_cores, shared_params=shared_params(),
-                   engine_kw=ekw, control=control, control_kw=control_kw)
+                   engine_kw=ekw, control=control, control_kw=control_kw,
+                   paged_kv=paged_kv, root_dir=root_dir, kv_kw=kv_kw)
     register_builtin_tools(k.tools)
     return k
 

@@ -28,9 +28,10 @@ def main(argv=None) -> None:
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks import (bench_agent_success, bench_context_switch,
-                            bench_control, bench_kernels, bench_prefill,
-                            bench_prefix_cache, bench_scalability,
-                            bench_scheduling, bench_throughput)
+                            bench_control, bench_kernels, bench_memory,
+                            bench_prefill, bench_prefix_cache,
+                            bench_scalability, bench_scheduling,
+                            bench_throughput)
 
     suite = [
         ("kernels(us/call)", bench_kernels.run, {}),
@@ -45,6 +46,7 @@ def main(argv=None) -> None:
         ("scheduling(T6)", bench_scheduling.run,
          {"n_agents": 8 if quick else 16}),
         ("control", bench_control.run, {"smoke": quick}),
+        ("memory", bench_memory.run, {"smoke": quick}),
         ("throughput(F6/7)", bench_throughput.run,
          {"agents_per_framework": 4 if quick else 6,
           "frameworks": ["react", "reflexion"] if quick else None}),
@@ -53,7 +55,8 @@ def main(argv=None) -> None:
         ("agent_success(T1)", bench_agent_success.run, {}),
     ]
     if args.smoke:
-        keep = ("kernels", "prefill", "prefix_cache", "scheduling", "control")
+        keep = ("kernels", "prefill", "prefix_cache", "scheduling", "control",
+                "memory")
         suite = [s for s in suite if s[0].split("(")[0] in keep]
 
     csv_lines = ["name,us_per_call,derived"]
@@ -103,6 +106,12 @@ def _derive(name: str, out: dict) -> str:
                 f"mig_exact={out['migration_exact_match']};"
                 f"affinity={out['affinity_hit_rate_off']}->"
                 f"{out['affinity_hit_rate_on']}")
+    if name.startswith("memory"):
+        return (f"exact={out['exact_match']};"
+                f"dedup={out['dedup_ratio']};"
+                f"rehydrate_hits={out['rehydrate_hit_rate']};"
+                f"affinity={out['affinity_hit_rate_binary']}->"
+                f"{out['affinity_hit_rate_fractional']}")
     if name.startswith("throughput"):
         sp = [r["speedup_batched_vs_none"] for r in rows]
         sp_rr = [r["speedup_rr_vs_none"] for r in rows]

@@ -1,13 +1,16 @@
 """Prefix-affinity routing: prefer the core whose HBM already holds the
-prompt's prefix.
+prompt's prefix pages.
 
-The pool shares one ``PrefixCache``, but every entry is produced by (and, on
-real hardware, device-resident with) exactly one engine -- entries are tagged
-with their ``origin`` engine id at insert time. The router probes the cache
-for the longest resident prefix of an incoming prompt (a read-only probe: no
-LRU touch, no hit accounting) and scores candidate cores by how many pages of
-prompt prefix would NOT need re-prefilling there, trading that saved prefill
-against plain occupancy.
+The pool shares one ``PrefixCache``; with the paged KV hierarchy an entry is
+a page list into the shared ``KVPageStore`` and every page is tagged with the
+engine that computed it -- a multi-turn conversation extended across cores
+carries pages of MIXED origin. The router probes the cache for the longest
+resident prefix of an incoming prompt (a read-only probe: no LRU touch, no
+hit accounting) and scores candidate cores by how many of the prefix's pages
+each core actually holds (fractional residency), trading that saved prefill
+against plain occupancy. Legacy blob entries fall back to the pre-page binary
+origin test (all pages credited to the one origin core), which is also what
+``fractional=False`` forces -- the baseline bench_memory compares against.
 """
 from __future__ import annotations
 
@@ -15,37 +18,55 @@ from typing import Optional, Tuple
 
 
 class AffinityRouter:
-    def __init__(self, prefix_cache, *, min_tokens: int = 16):
+    def __init__(self, prefix_cache, *, min_tokens: int = 16,
+                 fractional: bool = True):
         self.prefix_cache = prefix_cache
         # prefixes shorter than this are cheaper to re-prefill than the
         # imbalance an affinity override can cause
         self.min_tokens = min_tokens
-        self.stats = {"probes": 0, "resident": 0, "routed_affine": 0}
+        self.fractional = fractional
+        self.stats = {"probes": 0, "resident": 0, "routed_affine": 0,
+                      "fractional_probes": 0}
 
-    def probe(self, prompt) -> Optional[Tuple[int, int]]:
-        """(origin_engine_id, resident_tokens) of the longest cached prefix
-        of ``prompt``, or None when nothing useful is resident."""
+    def probe(self, prompt) -> Optional[Tuple]:
+        """Residency of the longest cached prefix of ``prompt``:
+        ``(dominant_origin, resident_tokens)`` or, with per-page origins
+        available, ``(dominant_origin, resident_tokens, page_origins)``.
+        None when nothing useful is resident."""
         if self.prefix_cache is None or prompt is None:
             return None
         self.stats["probes"] += 1
-        res = self.prefix_cache.residency(prompt)
+        if self.fractional and hasattr(self.prefix_cache, "page_residency"):
+            res = self.prefix_cache.page_residency(prompt)
+        else:
+            res = self.prefix_cache.residency(prompt)
         if res is None:
             return None
-        origin, n = res
+        origin, n = res[0], res[1]
         if origin is None or n < self.min_tokens:
             return None
         self.stats["resident"] += 1
-        return origin, n
+        if len(res) > 2 and res[2] is not None:
+            self.stats["fractional_probes"] += 1
+            return res
+        return (origin, n)   # legacy binary residency (no page identity)
 
     def affinity_pages(self, core_idx: int, residency, page_size: int) -> int:
         """Pages of the prompt's prefix already held by ``core_idx``'s
-        engine -- the quantity the dispatcher trades against occupancy."""
+        engine -- the quantity the dispatcher trades against occupancy.
+        Fractional when per-page origins are known (count of this core's
+        pages); binary otherwise (all pages or none)."""
         if residency is None:
             return 0
-        origin, n = residency
+        origin, n = residency[0], residency[1]
+        origins = residency[2] if len(residency) > 2 else None
+        if origins is not None:
+            return sum(1 for o in origins if o == core_idx)
         return n // max(page_size, 1) if origin == core_idx else 0
 
     def note_routed(self, core_idx: int, residency) -> None:
+        """Placement outcome accounting: routed_affine counts placements on
+        the max-residency core (the dominant page holder)."""
         if residency is not None and residency[0] == core_idx:
             self.stats["routed_affine"] += 1
 

@@ -36,9 +36,10 @@ class ControlPlane:
     def __init__(self, num_cores: int, prefix_cache=None, *,
                  policy: Optional[SLOPolicy] = None,
                  rebalance: bool = True, affinity: bool = True,
-                 preemption: bool = True,
+                 preemption: bool = True, admission: bool = True,
                  rebalancer_kw: Optional[dict] = None,
-                 affinity_kw: Optional[dict] = None):
+                 affinity_kw: Optional[dict] = None,
+                 admission_kw: Optional[dict] = None):
         self.num_cores = num_cores
         self.bus = TelemetryBus(num_cores)
         self.policy = policy or SLOPolicy()
@@ -47,6 +48,23 @@ class ControlPlane:
         self.affinity = (AffinityRouter(prefix_cache, **(affinity_kw or {}))
                          if affinity else None)
         self.preemption = preemption
+        # SLO admission controller (ROADMAP follow-on (e)): when the recent
+        # interactive miss RATE climbs past the threshold, incoming
+        # best_effort syscalls are shed at submission (fail fast with the
+        # reason) instead of joining a queue they would only congest
+        self.admission = admission
+        akw = admission_kw or {}
+        self.admission_window = int(akw.get("window", 32))
+        self.admission_miss_rate = float(akw.get("miss_rate", 0.5))
+        self.admission_min_samples = int(akw.get("min_samples", 8))
+        # staleness bound: the miss window only ages out through NEW
+        # interactive samples, so without a TTL a transient overload would
+        # shed best_effort forever once interactive traffic stops. Activity
+        # = completions OR queue arrivals/requeues -- completions alone
+        # would switch shedding OFF during total interactive starvation,
+        # the exact overload the controller exists for
+        self.admission_ttl_s = float(akw.get("ttl_s", 10.0))
+        self._last_interactive_activity: Optional[float] = None
         self._lock = threading.Lock()
         # pid -> class rank of every syscall currently admitted, per core
         self._running: Dict[int, Dict[int, int]] = {
@@ -59,11 +77,19 @@ class ControlPlane:
         self._migrate: Dict[int, Optional[Tuple[int, int]]] = {
             i: None for i in range(num_cores)}
         self.stats = {"preempt_requests": 0, "preemptions": 0,
-                      "migrations": 0, "slo_misses": 0, "completions": 0}
+                      "migrations": 0, "slo_misses": 0, "completions": 0,
+                      "admission_shed": 0, "last_migration_cost": 0.0}
 
     # -- queue construction ------------------------------------------------------
     def make_queue(self) -> SLOQueue:
-        return SLOQueue(self.policy)
+        return SLOQueue(self.policy, observer=self._on_queue_put)
+
+    def _on_queue_put(self, sc) -> None:
+        """Arrival signal: a queued (or backpressure-requeued) interactive
+        syscall proves interactive pressure is live even while none can
+        complete -- it keeps the admission controller's window fresh."""
+        if getattr(sc, "slo_class", None) == "interactive":
+            self._last_interactive_activity = time.monotonic()
 
     # -- worker-side lifecycle hooks --------------------------------------------
     def on_admit(self, core_idx: int, sc) -> None:
@@ -82,13 +108,56 @@ class ControlPlane:
             self.stats["completions"] += 1
             total = sc.waiting_time
             self.bus.record("wait", total, cls)
-            if total > self.policy.targets.get(cls, float("inf")):
+            miss = total > self.policy.targets.get(cls, float("inf"))
+            if miss:
                 self.stats["slo_misses"] += 1
+            # per-class 0/1 miss series: the admission controller acts on
+            # the rolling interactive miss rate, not the lifetime counter
+            self.bus.record("slo_miss", 1.0 if miss else 0.0, cls)
+            if cls == "interactive":
+                self._last_interactive_activity = time.monotonic()
 
     def publish(self, core_idx: int, core, backlog: int) -> None:
         """Push one gauge sample for a core: ``LLMCore.telemetry()`` plus the
-        scheduler-side backlog (queued-on-core count the core cannot see)."""
+        scheduler-side backlog (queued-on-core count the core cannot see).
+        The backlog also lands on a per-core rolling series -- what the
+        rebalancer's p90 planning reads."""
         self.bus.publish(core_idx, backlog=backlog, **core.telemetry())
+        self.bus.record("backlog", backlog, f"core{core_idx}")
+
+    # -- SLO admission controller --------------------------------------------------
+    def interactive_miss_rate(self) -> float:
+        """Fraction of the last ``admission_window`` interactive completions
+        that missed their wait target (0.0 until min_samples accumulate).
+        The window decays by TIME too: once no interactive ACTIVITY
+        (completion or queue arrival) has been seen for ``admission_ttl_s``,
+        the stale samples stop counting -- otherwise a burst of misses
+        would latch shedding on forever. Queued-but-starved interactive
+        work counts as activity, so shedding stays on through a pileup."""
+        if (self._last_interactive_activity is not None and
+                time.monotonic() - self._last_interactive_activity >
+                self.admission_ttl_s):
+            return 0.0
+        s = self.bus.series("slo_miss", "interactive")[-self.admission_window:]
+        if len(s) < self.admission_min_samples:
+            return 0.0
+        return sum(s) / len(s)
+
+    def should_shed(self, sc) -> bool:
+        """True when `sc` is best_effort work arriving while interactive
+        traffic is missing its SLO -- the scheduler fails it fast instead of
+        queueing it. Interactive and batch syscalls are never shed."""
+        if not self.admission:
+            return False
+        if self.policy.tag(sc) != "best_effort":
+            return False
+        rate = self.interactive_miss_rate()
+        if rate < self.admission_miss_rate:
+            return False
+        sc._shed_rate = rate    # the deciding value, for the error message
+        self.stats["admission_shed"] += 1
+        self.bus.bump("admission_shed")
+        return True
 
     # -- mid-quantum preemption --------------------------------------------------
     def consider_preempt(self, sc) -> bool:
@@ -155,10 +224,16 @@ class ControlPlane:
             self._migrate[core_idx] = None
             return req
 
-    def note_migrated(self, src: int, dst: int, sc) -> None:
+    def note_migrated(self, src: int, dst: int, sc,
+                      cost: Optional[float] = None) -> None:
         self.stats["migrations"] += 1
         self.bus.bump("migrations")
         self.bus.record("migration_rank", float(self.policy.rank(sc)))
+        if cost is not None:
+            # the victim cost model's chosen score (resident page bytes per
+            # expected remaining token), exposed for dashboards/benchmarks
+            self.stats["last_migration_cost"] = float(cost)
+            self.bus.record("migration_cost", float(cost))
 
     def migratable_rank(self, core_idx: int) -> Optional[int]:
         """Least-sensitive class rank currently running on a core (victims
@@ -189,6 +264,10 @@ class ControlPlane:
             if s:
                 m[f"p50_wait_{cls}"] = self.bus.p50("wait", cls)
                 m[f"p90_wait_{cls}"] = self.bus.p90("wait", cls)
+        m["interactive_miss_rate"] = round(self.interactive_miss_rate(), 3)
+        costs = self.bus.series("migration_cost")
+        if costs:
+            m["migration_cost_p50"] = self.bus.p50("migration_cost")
         if self.rebalancer is not None:
             m["rebalancer"] = dict(self.rebalancer.stats)
         if self.affinity is not None:

@@ -24,9 +24,35 @@ thread allowed to touch an engine.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Iterable, Optional, Tuple
 
 from repro.control.telemetry import TelemetryBus
+
+
+def migration_cost(resident_bytes: int, remaining_tokens: int) -> float:
+    """Cost model for picking migration victims (ROADMAP follow-on (a)):
+    bytes that must cross the host for each token of work the move offloads.
+    Low = cheap context with a long tail ahead -- migrate it first. Resident
+    bytes come from the page table (pages the slot holds x bytes/token), so
+    the model is exact for token-indexed state and degrades to remaining-
+    tokens ordering for recurrent models (resident_bytes == 0 everywhere)."""
+    return resident_bytes / max(1, remaining_tokens)
+
+
+def pick_migration_victim(candidates: Iterable[Tuple[int, int, int, int]]
+                          ) -> Tuple[Optional[int], Optional[float]]:
+    """``candidates``: (slot, slo_rank, resident_bytes, remaining_tokens) of
+    every migratable running sequence. Returns (slot, cost) of the chosen
+    victim: least latency-sensitive class first (SLO order still leads),
+    then the CHEAPEST bytes-per-remaining-token, ties broken toward the
+    longest tail (the pre-cost-model behaviour). (None, None) when empty."""
+    best_key, best_slot, best_cost = None, None, None
+    for slot, rank, resident_bytes, remaining in candidates:
+        cost = migration_cost(resident_bytes, remaining)
+        key = (rank, -cost, remaining)
+        if best_key is None or key > best_key:
+            best_key, best_slot, best_cost = key, slot, cost
+    return best_slot, best_cost
 
 
 class Rebalancer:
@@ -40,14 +66,20 @@ class Rebalancer:
         self.interval_s = interval_s            # plane loop sleep between ticks
         self._skew_ticks = 0                    # consecutive ticks over gap
         self._cooldown = 0
-        self.stats = {"ticks": 0, "migrations_requested": 0}
+        self.stats = {"ticks": 0, "migrations_requested": 0,
+                      "p90_influenced_ticks": 0}
 
     @staticmethod
-    def _load(g) -> float:
+    def _load(g, p90_backlog: float = 0.0) -> float:
         """A core's load = sequences it is responsible for: running in slots
         plus dispatched-but-unadmitted backlog plus outstanding prefill debt
-        (tokens still to consume, in slot-equivalents via a coarse weight)."""
-        return g["running"] + g["backlog"] + 0.25 * (g["prefill_debt"] > 0)
+        (tokens still to consume, in slot-equivalents via a coarse weight).
+        ``p90_backlog`` is the rolling p90 of the core's backlog series
+        (ROADMAP follow-on (c)): a core whose queue SPIKES repeatedly plans
+        as hot even when the instantaneous gauge catches it momentarily
+        drained, so work moves before the next spike instead of after."""
+        return (g["running"] + max(g["backlog"], p90_backlog)
+                + 0.25 * (g["prefill_debt"] > 0))
 
     def plan(self, central_backlog: int) -> Optional[Tuple[int, int, int]]:
         """One decision tick: returns (hot_core, cold_core, n_to_move) or
@@ -62,7 +94,11 @@ class Rebalancer:
             self._skew_ticks = 0
             return None
         gauges = self.bus.gauges()
-        loads = [self._load(g) for g in gauges]
+        p90s = [self.bus.p90("backlog", f"core{i}")
+                for i in range(len(gauges))]
+        loads = [self._load(g, p) for g, p in zip(gauges, p90s)]
+        if any(p > g["backlog"] for g, p in zip(gauges, p90s)):
+            self.stats["p90_influenced_ticks"] += 1
         hot = max(range(len(loads)), key=lambda i: loads[i])
         cold = min(range(len(loads)), key=lambda i: loads[i])
         gap = loads[hot] - loads[cold]

@@ -93,14 +93,19 @@ class SLOQueue:
     yielded (quantum expiry / preemption) is re-stamped by the scheduler
     (``_undispatch`` clears the seq), so within-class cycling stays fair."""
 
-    def __init__(self, policy: SLOPolicy):
+    def __init__(self, policy: SLOPolicy, observer=None):
         self.policy = policy
+        self.observer = observer    # called with every queued syscall (the
+                                    # control plane's arrival signal -- e.g.
+                                    # interactive pressure for admission)
         self._h: List = []
         self._cv = threading.Condition()
         self._seq = itertools.count()
 
     def put(self, sc) -> None:
         self.policy.tag(sc)
+        if self.observer is not None:
+            self.observer(sc)
         with self._cv:
             seq = getattr(sc, "_slo_seq", None)
             if seq is None:

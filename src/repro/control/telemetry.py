@@ -31,7 +31,7 @@ class TelemetryBus:
     """Per-core gauge snapshots + rolling event series with p50/p90."""
 
     GAUGES = ("free_slots", "free_pages", "backlog", "prefill_debt",
-              "running")
+              "running", "resident_kv_bytes")
 
     def __init__(self, num_cores: int, window: int = 512):
         self.num_cores = num_cores

@@ -81,14 +81,21 @@ class ContextManager:
     def __init__(self, storage, *, mode: str = "logits",
                  budget_bytes: int = 256 << 20, k: int = 2,
                  watermark: float = 0.8,
-                 prefix_budget_bytes: int = 32 << 20):
+                 prefix_budget_bytes: int = 32 << 20,
+                 page_store=None):
         assert mode in ("logits", "text")
         self.mode = mode
         self.storage = storage
+        # unified paged KV hierarchy: when a KVPageStore is attached, a
+        # snapshot's bytes live as refcounted pages in the shared table
+        # (deduplicated against prefix-cache entries), and the spill tier
+        # demotes pages through the store instead of pickling whole blobs
+        self.page_store = page_store
         self.pool = LRUKPool(budget_bytes, k=k, watermark=watermark)
         # shared across every core in the pool: a prefix prefilled on one
         # core is a hit on all of them (prefix_budget_bytes=0 disables)
-        self.prefix_cache = (PrefixCache(budget_bytes=prefix_budget_bytes)
+        self.prefix_cache = (PrefixCache(budget_bytes=prefix_budget_bytes,
+                                         page_store=page_store)
                              if prefix_budget_bytes > 0 else None)
         self.stats = {"saves": 0, "loads": 0, "spills": 0, "disk_loads": 0,
                       "handoffs": 0}
@@ -97,6 +104,10 @@ class ContextManager:
         # exempt from spill until the receiving core restores them, so a
         # migration is bounded by one host-RAM round-trip, never disk
         self._pinned: set = set()
+        # paged snapshots whose pages were demoted to the disk tier: the
+        # (small) metadata object stays here; load() re-admits it and the
+        # pages promote lazily on restore
+        self._demoted: Dict[str, ContextSnapshot] = {}
 
     # -- paper API: generate_response_with_interruption lives in LLMCore;
     # -- these are load_context / clear_context / (save).
@@ -112,6 +123,15 @@ class ContextManager:
 
     def load(self, ctx_id: str) -> ContextSnapshot:
         snap = self.pool.get(ctx_id)
+        if snap is None:
+            with self._lock:
+                snap = self._demoted.pop(ctx_id, None)
+            if snap is not None:
+                # paged spill: pages promote from the disk tier lazily when
+                # the engine materializes the restore
+                self.stats["disk_loads"] += 1
+                self.pool.put(ctx_id, snap, snap.nbytes())
+                self._maybe_spill()
         if snap is None:
             blob = self.storage.load_blob("contexts", ctx_id)
             if blob is None:
@@ -129,21 +149,42 @@ class ContextManager:
         return snap
 
     def clear(self, ctx_id: str):
-        self.pool.pop(ctx_id)
+        snap = self.pool.pop(ctx_id)
         with self._lock:
+            demoted = self._demoted.pop(ctx_id, None)
             self._pinned.discard(ctx_id)
+        for s in (snap, demoted):
+            if s is not None and getattr(s, "pages", None) is not None:
+                s.release()   # refcount-0 pages leave the table (or demote,
+                              # if a persisted prefix still shares them)
         self.storage.delete_blob("contexts", ctx_id)
 
     def _maybe_spill(self):
         with self._lock:
+            undemotable: set = set()
             while self.pool.over_watermark():
                 order = [k for k in self.pool.eviction_order()
-                         if k not in self._pinned]
+                         if k not in self._pinned and k not in undemotable]
                 if not order:
                     return
                 victim = order[0]
                 snap = self.pool.pop(victim)
                 if snap is None:
+                    continue
+                if getattr(snap, "pages", None) is not None:
+                    # paged spill: exclusive bytes demote through the
+                    # store's disk tier (pages shared with other holders
+                    # stay resident for them); only the page-list metadata
+                    # stays in RAM. A store with no disk tier cannot spill
+                    # paged snapshots -- keep THIS victim resident (never
+                    # pickle a live page handle) but keep scanning: later
+                    # victims may be legacy blobs that can still spill
+                    if snap.pages._store.demote_handle(snap.pages):
+                        self._demoted[victim] = snap
+                        self.stats["spills"] += 1
+                        continue
+                    self.pool.put(victim, snap, snap.nbytes())
+                    undemotable.add(victim)
                     continue
                 self.storage.save_blob("contexts", victim, pickle.dumps(snap))
                 self.stats["spills"] += 1

@@ -19,6 +19,7 @@ from repro.core.storage import StorageManager
 from repro.core.syscall import (AccessSyscall, LLMSyscall, MemorySyscall,
                                 StorageSyscall, Syscall, ToolSyscall)
 from repro.core.tools import ToolManager
+from repro.memory import KVPageStore
 from repro.serving.engine import ServingEngine
 
 SCHEDULERS = {"fifo": FIFOScheduler, "rr": RRScheduler,
@@ -36,6 +37,10 @@ def useMemoryManager(storage: StorageManager, **kw) -> MemoryManager:
 
 def useContextManager(storage: StorageManager, **kw) -> ContextManager:
     return ContextManager(storage, **kw)
+
+
+def useKVPageStore(storage: Optional[StorageManager] = None, **kw) -> KVPageStore:
+    return KVPageStore(storage=storage, **kw)
 
 
 def useToolManager() -> ToolManager:
@@ -60,11 +65,26 @@ class AIOSKernel:
                  memory_kw: Optional[Dict[str, Any]] = None,
                  control: bool = False,
                  control_kw: Optional[Dict[str, Any]] = None,
+                 paged_kv: bool = True,
+                 kv_kw: Optional[Dict[str, Any]] = None,
                  shared_params=None):
         self.root_dir = root_dir or tempfile.mkdtemp(prefix="aios-")
         self.storage = useStorageManager(self.root_dir)
         self.memory = useMemoryManager(self.storage, **(memory_kw or {}))
-        self.context = useContextManager(self.storage, mode=context_mode)
+        # unified paged KV hierarchy: ONE page-granular store behind live
+        # contexts, the prefix cache and the storage tier -- snapshots become
+        # refcounted page lists (copy-on-write prefix sharing), device bytes
+        # charge a PageAllocator budget, and hot prefixes persist to this
+        # kernel's storage root so a fresh process re-hydrates them.
+        # paged_kv=False keeps the legacy whole-blob snapshot path (bit-exact
+        # either way; asserted by tests/test_memory_hierarchy.py).
+        self.kv_store = None
+        if paged_kv:
+            kvkw = dict(kv_kw or {})
+            kvkw.setdefault("page_size", (engine_kw or {}).get("page_size", 16))
+            self.kv_store = useKVPageStore(storage=self.storage, **kvkw)
+        self.context = useContextManager(self.storage, mode=context_mode,
+                                         page_store=self.kv_store)
         self.tools = useToolManager()
         self.access = AccessManager(intervention_cb)
         cfg = get_config(arch) if isinstance(arch, str) else arch
@@ -74,6 +94,7 @@ class AIOSKernel:
         # one prefix cache for the whole pool: replicas are identical, so a
         # prefill snapshot from any core restores on every core
         ekw.setdefault("prefix_cache", self.context.prefix_cache)
+        ekw.setdefault("page_store", self.kv_store)
         cores = [useLLM(cfg, self.context, core_id=i, **ekw)
                  for i in range(num_cores)]
         self.pool = LLMCorePool(cores)
@@ -147,6 +168,8 @@ class AIOSKernel:
         m["memory"] = dict(self.memory.stats)
         m["tools"] = dict(self.tools.stats)
         m["engine"] = [dict(c.engine.stats) for c in self.pool.cores]
+        if self.kv_store is not None:
+            m["kv_store"] = self.kv_store.metrics()
         if self.control is not None:
             m["control"] = self.control.metrics()
         return m

@@ -50,6 +50,10 @@ class LLMCore:
             "page_size": eng.pager.page_size,
             "prefill_debt": eng.prefill_debt(),
             "running": eng.max_slots - free,
+            # page-table byte view of this core's live contexts (every
+            # pager reservation is slot-owned): what the rebalancer's
+            # victim cost model totals slot-by-slot
+            "resident_kv_bytes": eng.pager.used_bytes(),
             "migrations_out": self.migrations_out,
             "migrations_in": self.migrations_in,
         }

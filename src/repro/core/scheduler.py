@@ -272,6 +272,22 @@ class BatchedScheduler(BaseScheduler):
             return self.control.make_queue()     # SLO-class-ordered
         return queue.Queue()
 
+    def submit(self, syscall: Syscall):
+        """Central-queue submission behind the SLO admission controller:
+        while interactive traffic is missing its wait target, incoming
+        best_effort LLM syscalls are shed at the door (fail fast, naming the
+        reason) instead of deepening a queue the misses prove is saturated."""
+        if (self.control is not None and syscall.category == "llm"
+                and self.control.should_shed(syscall)):
+            syscall.mark_queued()
+            rate = getattr(syscall, "_shed_rate", 1.0)   # the deciding value
+            syscall.fail("admission controller: best_effort load shed "
+                         f"(interactive SLO miss rate {rate:.2f} >= "
+                         f"{self.control.admission_miss_rate:.2f})")
+            self._record(syscall)
+            return
+        super().submit(syscall)
+
     # -- lifecycle ------------------------------------------------------------------
     def start(self):
         n = self.pool.num_cores
@@ -488,10 +504,27 @@ class BatchedScheduler(BaseScheduler):
                 best, best_key = slot, key
         return best
 
+    def _migration_victim(self, running: Dict[int, Syscall], engine):
+        """Victim choice for rebalancing: least latency-sensitive SLO class
+        first, then the page table's cost model -- resident KV page bytes
+        per expected remaining token (``repro.control.rebalancer.
+        migration_cost``) -- so the cheapest context with the longest tail
+        moves first. Returns (slot, cost) or (None, None)."""
+        from repro.control.rebalancer import pick_migration_victim
+        candidates = []
+        for slot, sc in running.items():
+            if engine.is_prefilling(slot) or engine.is_done(slot):
+                continue
+            s = engine.slots[slot]
+            candidates.append((slot, self.control.policy.rank(sc),
+                               engine.resident_bytes(slot),
+                               s.max_new - len(s.generated)))
+        return pick_migration_victim(candidates)
+
     def _run_migrations(self, core_idx: int, core, engine,
                         running: Dict[int, Syscall], used: Dict[int, int]):
         """Execute a rebalancer request: suspend up to ``count`` running
-        sequences (least latency-sensitive first) and hand their contexts to
+        sequences (cost-model victim order) and hand their contexts to
         the target core -- snapshot on this thread, pinned in the shared
         ContextManager, restored by the target's worker on arrival."""
         req = self.control.take_migration(core_idx)
@@ -500,7 +533,7 @@ class BatchedScheduler(BaseScheduler):
         dst, count = req
         teng = self.pool.cores[dst].engine
         for _ in range(count):
-            victim = self._preempt_victim(running, engine, below_rank=-1)
+            victim, cost = self._migration_victim(running, engine)
             if victim is None:
                 return
             sc = running[victim]
@@ -515,7 +548,7 @@ class BatchedScheduler(BaseScheduler):
             with self._inflight_lock:
                 self._inflight[core_idx] -= 1
             self._dispatch(dst, sc)
-            self.control.note_migrated(core_idx, dst, sc)
+            self.control.note_migrated(core_idx, dst, sc, cost=cost)
             del running[victim], used[victim]
 
     # -- per-core worker (data plane) ----------------------------------------------------

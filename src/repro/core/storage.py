@@ -6,13 +6,20 @@ index -- deterministic and offline).
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import os
+import pickle
 import re
 import shutil
 import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
+
+try:
+    import fcntl
+except ImportError:          # non-POSIX: in-process lock only
+    fcntl = None
 
 import numpy as np
 
@@ -79,6 +86,7 @@ class StorageManager:
         self._locks: Dict[str, threading.Lock] = {}
         self._locks_guard = threading.Lock()
         self._stores: Dict[str, VectorStore] = {}
+        self._kv_lock = threading.Lock()   # manifest-index read-modify-write
         self.stats = {"writes": 0, "reads": 0, "rollbacks": 0, "shares": 0}
 
     # -- path / lock helpers -----------------------------------------------------------
@@ -296,3 +304,78 @@ class StorageManager:
         p = self._blob_path(namespace, key)
         if os.path.exists(p):
             os.remove(p)
+
+    # -- KV namespace (the paged KV hierarchy's disk tier) -------------------------
+    # Page blobs are content-addressed (key = page digest) so two processes
+    # sharing one storage root converge on the same blob set; manifests map a
+    # prefix's token key to its page list, with a small index blob enabling
+    # longest-prefix search (the blob store hashes keys, so listing needs it).
+    KV_PAGES_NS = "kvpages"
+    KV_MANIFEST_NS = "kvprefix"
+    _KV_INDEX_KEY = "_index"
+
+    def kv_page_save(self, pid: str, data: bytes) -> None:
+        self.save_blob(self.KV_PAGES_NS, pid, data)
+
+    def kv_page_load(self, pid: str) -> Optional[bytes]:
+        return self.load_blob(self.KV_PAGES_NS, pid)
+
+    def kv_page_delete(self, pid: str) -> None:
+        self.delete_blob(self.KV_PAGES_NS, pid)
+
+    @contextlib.contextmanager
+    def _kv_flock(self):
+        """Cross-PROCESS exclusivity for the index read-modify-write: two
+        kernels sharing one storage root must not lose each other's index
+        entries. Best-effort: POSIX flock on a sidecar lock file (no-op
+        where fcntl is unavailable; the in-process _kv_lock still holds)."""
+        if fcntl is None:
+            yield
+            return
+        path = self._abs(os.path.join(".blobs", "kvprefix.lock"))
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            fcntl.flock(f, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(f, fcntl.LOCK_UN)
+
+    def kv_manifest_save(self, key_hex: str, blob: bytes, seq_len: int,
+                         max_entries: int = 0) -> Dict[str, int]:
+        """Write a manifest and register it in the index. With
+        ``max_entries`` > 0 the OLDEST index entries (insertion order ==
+        write order) prune FIFO once the cap is exceeded -- their manifest
+        blobs are deleted; page blobs stay (they may be shared with live
+        manifests; blob GC is a recorded follow-on). Returns the updated
+        index so callers can mirror it without a re-read."""
+        with self._kv_lock, self._kv_flock():
+            self.save_blob(self.KV_MANIFEST_NS, key_hex, blob)
+            idx = self._kv_index()
+            idx.pop(key_hex, None)     # re-insert at the back (freshest)
+            idx[key_hex] = int(seq_len)
+            while max_entries > 0 and len(idx) > max_entries:
+                victim = next(iter(idx))
+                idx.pop(victim)
+                self.delete_blob(self.KV_MANIFEST_NS, victim)
+            self.save_blob(self.KV_MANIFEST_NS, self._KV_INDEX_KEY,
+                           pickle.dumps(idx))
+            return idx
+
+    def kv_manifest_load(self, key_hex: str) -> Optional[bytes]:
+        return self.load_blob(self.KV_MANIFEST_NS, key_hex)
+
+    def _kv_index(self) -> Dict[str, int]:
+        blob = self.load_blob(self.KV_MANIFEST_NS, self._KV_INDEX_KEY)
+        if blob is None:
+            return {}
+        try:
+            return pickle.loads(blob)
+        except Exception:  # noqa: BLE001 -- a torn index is an empty index
+            return {}
+
+    def kv_manifest_index(self) -> Dict[str, int]:
+        """token-key-hex -> seq_len of every persisted prefix manifest (read
+        fresh from disk: another process may have written since)."""
+        with self._kv_lock:
+            return self._kv_index()

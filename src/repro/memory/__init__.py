@@ -1,0 +1,6 @@
+"""Unified paged KV memory hierarchy (AIOS §3.5): one page-granular store --
+KVPageStore + PageTable -- behind live contexts, the prefix cache, and the
+storage tier. See pagestore.py for the design."""
+from repro.memory.pagestore import (KVPageStore, PagedKV,  # noqa: F401
+                                    PagedPrefixEntry, PageLayout)
+from repro.memory.pagetable import KVPage, PageTable  # noqa: F401

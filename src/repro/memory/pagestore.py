@@ -1,0 +1,597 @@
+"""KVPageStore: the single page-granular owner of every KV byte outside a
+live decode slot (AIOS §3.5 -- the kernel, not the callers, owns LLM memory).
+
+Before this store, KV lived in three disconnected holders: `serving/paging.py`
+counted pages with no identity, `core/context.py` snapshotted whole contexts
+as opaque host blobs, and `serving/prefix_cache.py` kept its own byte-budgeted
+LRU of full snapshots. Now a context snapshot, a prefix-cache entry and a
+migration hand-off are all *page lists* (``PagedKV`` handles) into one table:
+
+  * identical token prefixes dedupe to the same pages (content-addressed ids),
+    so a cached prefix and the conversations extending it share bytes
+    copy-on-write instead of duplicating snapshots;
+  * device-resident pages are charged against a ``PageAllocator`` budget (the
+    serving layer's existing accounting mechanism) and demote to host RAM
+    under pressure; host bytes run under a separate watermark and demote to
+    the storage manager's blob tier;
+  * prefix pages are write-through persisted (page blobs + a token-key
+    manifest), so a fresh process -- a second ``AIOSKernel`` on the same
+    storage root -- re-hydrates hot prefixes from disk instead of
+    re-prefilling them.
+
+Paging is along the token axis: an engine registers a *layout* describing
+which flat cache leaves carry a full-context time axis (the transformer K/V
+leaves); those are sliced into ``page_size``-token pages. Everything else
+(rolling attention buffers, seq_lens, VLM frontend K/V) travels un-paged in
+the handle's ``residual`` -- tracked in ``residual_bytes``, but only paged
+bytes can demote under the watermark; models with NO token-indexed state at
+all (pure-recurrent) skip the store entirely at the engine and keep the
+legacy blob path. Restores rebuild full-width leaves with zeros
+beyond ``seq_len``; attention masks those positions, so generated tokens are
+bit-identical to the legacy whole-blob path (asserted by tests and
+bench_memory on every run).
+"""
+from __future__ import annotations
+
+import hashlib
+import pickle
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.memory.pagetable import KVPage, PageTable
+from repro.serving.paging import PageAllocator
+
+
+class PageLayout:
+    """Which flat leaves of a cache tree are pageable, and how to rebuild
+    them. ``time_axes[i]`` is the token-axis index of leaf i (None = travels
+    in the residual); shapes/dtypes describe the full batch-1 leaves."""
+
+    __slots__ = ("key", "time_axes", "shapes", "dtypes", "paged_idx",
+                 "residual_idx", "bytes_per_token")
+
+    def __init__(self, key: str, time_axes: Sequence[Optional[int]],
+                 shapes: Sequence[Tuple[int, ...]], dtypes: Sequence[Any]):
+        self.key = key
+        self.time_axes = list(time_axes)
+        self.shapes = [tuple(s) for s in shapes]
+        self.dtypes = list(dtypes)
+        self.paged_idx = [i for i, a in enumerate(self.time_axes)
+                          if a is not None]
+        self.residual_idx = [i for i, a in enumerate(self.time_axes)
+                             if a is None]
+        bpt = 0
+        for i in self.paged_idx:
+            n = int(np.prod(self.shapes[i])) * np.dtype(self.dtypes[i]).itemsize
+            bpt += n // self.shapes[i][self.time_axes[i]]
+        self.bytes_per_token = bpt
+
+
+class PagedKV:
+    """Handle to one snapshot's pages: what a context, a prefix entry or a
+    migration hand-off holds instead of raw bytes. ``nbytes`` is the
+    handle's *attributed* size (all pages counted fully -- deterministic for
+    LRU accounting; the dedup saving shows up in the store's stats, and the
+    real RAM budgets are enforced store-side where shared pages count once).
+    Release is idempotent."""
+
+    __slots__ = ("layout_key", "page_ids", "residual", "seq_len", "nbytes",
+                 "_store", "_released")
+
+    def __init__(self, store: "KVPageStore", layout_key: str,
+                 page_ids: List[str], residual: List[np.ndarray],
+                 seq_len: int, nbytes: int):
+        self._store = store
+        self.layout_key = layout_key
+        self.page_ids = page_ids
+        self.residual = residual
+        self.seq_len = seq_len
+        self.nbytes = nbytes
+        self._released = False
+
+    def leaves(self) -> List[np.ndarray]:
+        """Rebuild the full flat leaf list (promoting disk pages)."""
+        return self._store.leaves(self)
+
+    def release(self) -> None:
+        self._store.release(self)
+
+
+class PagedPrefixEntry:
+    """A prefix-cache entry re-hydrated from the disk manifest of another
+    process (or an earlier life of this one). Duck-types the slice of
+    ``ContextSnapshot`` the engine and cache touch (kept un-imported to stay
+    free of a serving dependency)."""
+
+    kind = "prefix"
+
+    def __init__(self, prompt: np.ndarray, seq_len: int, pages: PagedKV,
+                 logits: np.ndarray, origin: Optional[int]):
+        self.prompt = prompt
+        self.generated: List[int] = []
+        self.seq_len = seq_len
+        self.pages = pages
+        self.logits = logits
+        self.origin = origin
+        self.state = None
+
+    def nbytes(self) -> int:
+        n = self.prompt.nbytes + self.pages.nbytes
+        if self.logits is not None:
+            n += self.logits.nbytes
+        return n
+
+    def release(self) -> None:
+        self.pages.release()
+
+
+class KVPageStore:
+    """Facade over the page table + tier budgets + the storage KV namespace.
+
+    ``device_pages``/``page_size`` size the device budget (a PageAllocator --
+    the same reservation mechanism serving admission uses, so device-resident
+    prefix bytes are *accounted*, not hoped for); ``host_budget_bytes`` is
+    the host watermark; ``storage`` (a StorageManager) enables the disk tier
+    and cross-process prefix persistence."""
+
+    def __init__(self, *, page_size: int = 16, device_pages: int = 1024,
+                 host_budget_bytes: int = 256 << 20, storage=None,
+                 persist: bool = True, index_ttl_s: float = 1.0,
+                 max_manifests: int = 1024):
+        assert page_size > 0
+        self.page_size = page_size
+        self.max_manifests = max_manifests   # persisted-prefix cap: oldest
+                                             # manifests prune FIFO so a
+                                             # long-running kernel's disk
+                                             # index stays bounded
+        self.table = PageTable()
+        self.device_pager = PageAllocator(max(1, device_pages), page_size)
+        self.host_budget_bytes = host_budget_bytes
+        self.storage = storage
+        self.persist_enabled = persist and storage is not None
+        self.index_ttl_s = index_ttl_s   # manifest-index staleness bound:
+                                         # how quickly another process's
+                                         # inserts become visible here
+        self._index_cache: Optional[Dict[str, int]] = None
+        self._index_time = float("-inf")
+        self._layouts: Dict[str, PageLayout] = {}
+        self._host_used = 0
+        self._device_bytes = 0
+        self._residual_bytes = 0   # un-paged leaf bytes riding in handles
+                                   # (tracked for visibility; only paged
+                                   # bytes can demote under the watermark)
+        self._clock = 0
+        self.stats = {
+            "put_handles": 0, "put_pages": 0, "put_bytes": 0, "dedup_hits": 0,
+            "dedup_saved_bytes": 0, "released_handles": 0, "freed_pages": 0,
+            "retired_pages": 0, "demotions_host": 0, "demotions_disk": 0,
+            "promotions": 0, "persisted_entries": 0, "rehydrated_entries": 0,
+            "device_rejections": 0,
+        }
+
+    # -- layouts -----------------------------------------------------------------
+    def register_layout(self, key: str, time_axes: Sequence[Optional[int]],
+                        shapes: Sequence[Tuple[int, ...]],
+                        dtypes: Sequence[Any]) -> PageLayout:
+        with self.table.lock:
+            lay = self._layouts.get(key)
+            if lay is None:
+                lay = self._layouts[key] = PageLayout(key, time_axes, shapes,
+                                                     dtypes)
+            return lay
+
+    def layout(self, key: str) -> Optional[PageLayout]:
+        return self._layouts.get(key)
+
+    # -- internals (caller holds table.lock) -------------------------------------
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    @staticmethod
+    def _digest(layout_key: str, slices: List[np.ndarray]) -> str:
+        h = hashlib.sha1(layout_key.encode())
+        for a in slices:
+            h.update(str(a.shape).encode())
+            h.update(str(a.dtype).encode())
+            h.update(a.tobytes())
+        return h.hexdigest()
+
+    def _charge_device(self, pid: str, width: int) -> bool:
+        return self.device_pager.reserve(pid, width)
+
+    def _make_page(self, pid: str, slices: List[np.ndarray], width: int,
+                   origin: Optional[int], want_device: bool) -> KVPage:
+        nbytes = sum(a.nbytes for a in slices)
+        tier = "host"
+        if want_device:
+            if self._charge_device(pid, width):
+                tier = "device"
+            else:
+                # device budget full: demote the LRU device page to host and
+                # take its reservation; if nothing is demotable, fall through
+                # to the host tier (accounted there instead)
+                victims = self.table.by_lru("device")
+                if victims:
+                    self._demote_device_to_host(victims[0])
+                if self._charge_device(pid, width):
+                    tier = "device"
+                else:
+                    self.stats["device_rejections"] += 1
+        page = KVPage(pid, slices, nbytes, width, origin, tier)
+        page.last_use = self._tick()
+        if tier == "device":
+            self._device_bytes += nbytes
+        else:
+            self._host_used += nbytes
+        self.table.add(page)
+        self.stats["put_pages"] += 1
+        return page
+
+    def _demote_device_to_host(self, page: KVPage) -> None:
+        self.device_pager.release(page.pid)
+        page.tier = "host"
+        self._device_bytes -= page.nbytes
+        self._host_used += page.nbytes
+        self.stats["demotions_host"] += 1
+
+    def _flush(self, page: KVPage) -> bool:
+        if page.flushed:
+            return True
+        if self.storage is None or page.data is None:
+            return False
+        self.storage.kv_page_save(page.pid, pickle.dumps(page.data))
+        page.flushed = True
+        return True
+
+    def _demote_to_disk(self, page: KVPage) -> bool:
+        if not self._flush(page):
+            return False
+        if page.tier == "device":
+            self.device_pager.release(page.pid)
+            self._device_bytes -= page.nbytes
+        elif page.tier == "host":
+            self._host_used -= page.nbytes
+        page.data = None
+        page.tier = "disk"
+        self.stats["demotions_disk"] += 1
+        return True
+
+    def _free(self, page: KVPage) -> None:
+        # the disk BLOB (if any) is left in place even for non-durable
+        # pages: blobs are content-addressed and shared by identity, so a
+        # persisted manifest in another process (or a retired durable page
+        # re-put as non-durable) may still list this pid -- deleting here
+        # would poison its re-hydration. Orphan blob GC is ROADMAP
+        # follow-on (k) (mark-and-sweep over surviving manifests).
+        if page.tier == "device":
+            self.device_pager.release(page.pid)
+            self._device_bytes -= page.nbytes
+        elif page.tier == "host":
+            self._host_used -= page.nbytes
+        self.table.remove(page.pid)
+        self.stats["freed_pages"] += 1
+
+    def _retire(self, page: KVPage) -> None:
+        """Drop a refcount-0 DURABLE page from the in-RAM table, keeping its
+        disk blob (it is listed in a persisted manifest, so a later
+        rehydrate recreates the table entry from the manifest metadata).
+        Without this the table would accumulate one dead KVPage per evicted
+        prefix page forever."""
+        if not self._flush(page):
+            # disk tier guarantees the blob exists; host/device pages flush
+            # here. A durable page always has a storage to flush to.
+            if page.tier != "disk":
+                return
+        if page.tier == "device":
+            self.device_pager.release(page.pid)
+            self._device_bytes -= page.nbytes
+        elif page.tier == "host":
+            self._host_used -= page.nbytes
+        self.table.remove(page.pid)
+        self.stats["retired_pages"] += 1
+
+    def _drop_ref(self, pid: str) -> None:
+        """Decrement one reference; refcount-0 pages retire (durable: blob
+        stays, table entry goes) or free (everything else). Caller holds
+        table.lock."""
+        page = self.table.get(pid)
+        if page is None:
+            return
+        self.table.decref(pid)
+        if page.refs > 0:
+            return
+        if page.durable:
+            self._retire(page)
+        else:
+            self._free(page)
+
+    def _enforce_host_budget(self, pinned: set) -> None:
+        if self._host_used <= self.host_budget_bytes:
+            return
+        # demote LRU host pages to disk; refcount-0 persisted pages first
+        # (their blob already exists), then referenced ones (prefix entries /
+        # suspended contexts re-hydrate on next use)
+        victims = sorted(self.table.by_lru("host"),
+                         key=lambda p: (p.refs > 0, p.last_use))
+        for page in victims:
+            if self._host_used <= self.host_budget_bytes:
+                return
+            if page.pid in pinned:
+                continue
+            if page.refs == 0:
+                if page.durable:
+                    self._retire(page)
+                else:
+                    self._free(page)
+                continue
+            if not self._demote_to_disk(page):
+                continue   # no storage tier attached: page stays resident
+
+    # -- put / leaves / release ----------------------------------------------------
+    def put(self, layout_key: str, leaves: Sequence[Any], *, seq_len: int,
+            origin: Optional[int] = None, device: bool = False) -> PagedKV:
+        """Page a flat leaf list (a batch-1 cache slice) covering token
+        positions [0, seq_len). Identical content dedups against resident
+        pages; new pages enter at the device tier when ``device`` (prefix
+        entries -- device-resident on real hardware) else host (suspend
+        snapshots)."""
+        lay = self._layouts[layout_key]
+        ps = self.page_size
+        host = [np.asarray(x) for x in leaves]
+        # no pageable leaves -> no pages (an empty-slice page per range
+        # would alias to one degenerate pid); everything rides residual
+        npages = -(-max(0, int(seq_len)) // ps) if lay.paged_idx else 0
+        page_ids: List[str] = []
+        with self.table.lock:
+            for p in range(npages):
+                t0 = p * ps
+                width = min(ps, seq_len - t0)
+                slices = []
+                for i in lay.paged_idx:
+                    ax = lay.time_axes[i]
+                    leaf = host[i]
+                    sl = [slice(None)] * leaf.ndim
+                    sl[ax] = slice(t0, t0 + width)
+                    slices.append(np.ascontiguousarray(leaf[tuple(sl)]))
+                pid = self._digest(layout_key, slices)
+                page = self.table.get(pid)
+                if page is not None:
+                    page.last_use = self._tick()
+                    self.stats["dedup_hits"] += 1
+                    self.stats["dedup_saved_bytes"] += page.nbytes
+                else:
+                    page = self._make_page(pid, slices, width, origin, device)
+                self.stats["put_bytes"] += page.nbytes   # logical (pre-dedup)
+                self.table.incref(pid)
+                page_ids.append(pid)
+            residual = [host[i] for i in lay.residual_idx]
+            nbytes = sum(self.table.get(pid).nbytes for pid in set(page_ids))
+            nbytes += sum(a.nbytes for a in residual)
+            self._residual_bytes += sum(a.nbytes for a in residual)
+            # fully assembled: even the new pages are fair demotion victims
+            # under the watermark (a read re-hydrates them from disk)
+            self._enforce_host_budget(set())
+            self.stats["put_handles"] += 1
+            return PagedKV(self, layout_key, page_ids, residual, seq_len,
+                           nbytes)
+
+    def leaves(self, handle: PagedKV) -> List[np.ndarray]:
+        """Rebuild the full flat leaf list of a handle: paged leaves are
+        zero-initialized at full width and filled page by page (positions
+        beyond seq_len are masked by attention, so zeros there are
+        token-exact); disk pages promote to host on the way."""
+        lay = self._layouts[handle.layout_key]
+        out: List[Optional[np.ndarray]] = [None] * len(lay.time_axes)
+        full = [np.zeros(lay.shapes[i], lay.dtypes[i]) for i in lay.paged_idx]
+        with self.table.lock:
+            pinned = set(handle.page_ids)
+            promoted = False
+            for p, pid in enumerate(handle.page_ids):
+                page = self.table.get(pid)
+                if page is None:
+                    raise KeyError(f"kv page {pid} lost")
+                if page.data is None:
+                    self._promote(page)
+                    promoted = True
+                page.last_use = self._tick()
+                t0 = p * self.page_size
+                for j, i in enumerate(lay.paged_idx):
+                    ax = lay.time_axes[i]
+                    sl = [slice(None)] * full[j].ndim
+                    sl[ax] = slice(t0, t0 + page.width)
+                    full[j][tuple(sl)] = page.data[j]
+            if promoted:
+                self._enforce_host_budget(pinned)
+        for j, i in enumerate(lay.paged_idx):
+            out[i] = full[j]
+        for j, i in enumerate(lay.residual_idx):
+            out[i] = handle.residual[j]
+        return out  # type: ignore[return-value]
+
+    def _promote(self, page: KVPage) -> None:
+        blob = self.storage.kv_page_load(page.pid) if self.storage else None
+        if blob is None:
+            raise KeyError(f"kv page {page.pid} not on disk")
+        page.data = pickle.loads(blob)
+        page.tier = "host"
+        self._host_used += page.nbytes
+        self.stats["promotions"] += 1
+
+    def release(self, handle: PagedKV) -> None:
+        """Drop a holder's references (idempotent per handle). Refcount-0
+        pages retire to their disk blob when durable (a persisted prefix
+        stays re-hydratable) and are freed outright otherwise."""
+        with self.table.lock:
+            if handle._released:
+                return
+            handle._released = True
+            self.stats["released_handles"] += 1
+            self._residual_bytes -= sum(a.nbytes for a in handle.residual)
+            for pid in handle.page_ids:
+                self._drop_ref(pid)
+
+    def pin_pages(self, handle: PagedKV) -> None:
+        """Short-lived extra reference covering the window between a cache
+        lookup returning a paged entry and the engine materializing it --
+        without the pin, a concurrent insert/eviction on another core could
+        free the entry's non-durable pages mid-read. Balanced by
+        ``unpin_pages`` (independent of handle.release)."""
+        with self.table.lock:
+            for pid in handle.page_ids:
+                self.table.incref(pid)
+
+    def unpin_pages(self, handle: PagedKV) -> None:
+        with self.table.lock:
+            for pid in handle.page_ids:
+                self._drop_ref(pid)
+
+    def demote_handle(self, handle: PagedKV) -> bool:
+        """Push this handle's EXCLUSIVE RAM-resident pages to the disk tier
+        (the context spill path). Pages shared with other holders (refs > 1
+        -- e.g. a hot prefix-cache entry this context dedups against) stay
+        resident: spilling one cold context must not cost the other holders
+        their residency or device accounting. Returns False when no storage
+        tier is attached (caller keeps the snapshot resident)."""
+        if self.storage is None:
+            return False
+        with self.table.lock:
+            for pid in handle.page_ids:
+                page = self.table.get(pid)
+                if (page is not None and page.tier != "disk"
+                        and page.refs <= 1):
+                    self._demote_to_disk(page)
+        return True
+
+    # -- prefix persistence (cross-process sharing) --------------------------------
+    @staticmethod
+    def _prefix_key(tokens: np.ndarray) -> str:
+        return np.ascontiguousarray(
+            np.asarray(tokens, np.int32)).tobytes().hex()
+
+    def persist_prefix(self, snap) -> bool:
+        """Write-through persist a prefix entry: flush its pages (marked
+        durable) and store a manifest under the token key, so a fresh
+        process on the same storage root re-hydrates this prefix instead of
+        re-prefilling it."""
+        if not self.persist_enabled:
+            return False
+        handle: PagedKV = snap.pages
+        key = self._prefix_key(snap.prompt)
+        with self.table.lock:
+            meta_pages = []
+            for pid in handle.page_ids:
+                page = self.table.get(pid)
+                if page is None or not self._flush(page):
+                    return False
+                page.durable = True
+                meta_pages.append((pid, page.nbytes, page.width, page.origin))
+        logits = None if snap.logits is None else np.asarray(snap.logits)
+        manifest = {
+            "prompt": np.asarray(snap.prompt, np.int32),
+            "seq_len": int(snap.seq_len),
+            "layout_key": handle.layout_key,
+            "origin": getattr(snap, "origin", None),
+            "logits": logits,
+            "pages": meta_pages,
+            "residual": [np.asarray(a) for a in handle.residual],
+        }
+        idx = self.storage.kv_manifest_save(key, pickle.dumps(manifest),
+                                            int(snap.seq_len),
+                                            max_entries=self.max_manifests)
+        with self.table.lock:
+            # the save returns the post-prune index: mirror it so misses
+            # keep hitting the cache instead of re-reading the blob
+            self._index_cache = dict(idx)
+            self._index_time = time.monotonic()
+        self.stats["persisted_entries"] += 1
+        return True
+
+    def _manifest_index(self) -> Dict[str, int]:
+        """Manifest index with a small TTL cache: the disk read + unpickle
+        would otherwise run on EVERY prefix-cache miss (under the cache's
+        pool-wide lock). Own inserts update the cache in place; other
+        processes' inserts become visible within ``index_ttl_s``."""
+        now = time.monotonic()
+        if (self._index_cache is None
+                or now - self._index_time > self.index_ttl_s):
+            self._index_cache = self.storage.kv_manifest_index()
+            self._index_time = now
+        return self._index_cache
+
+    def rehydrate_prefix(self, tokens: np.ndarray, *, min_tokens: int = 4
+                         ) -> Optional[PagedPrefixEntry]:
+        """Longest persisted prefix of ``tokens`` (>= min_tokens), rebuilt
+        from the disk manifest: known pages are re-referenced in place,
+        unknown ones enter the table at the disk tier and load lazily on
+        first restore."""
+        if not self.persist_enabled:
+            return None
+        tok = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        with self.table.lock:     # snapshot: persist_prefix mutates in place
+            index = list(self._manifest_index().items())
+        best_key, best_n = None, 0
+        needles: Dict[int, str] = {}   # one hex conversion per distinct
+                                       # length, not per index entry
+        for key, n in index:
+            if n < min_tokens or n <= best_n or n > len(tok):
+                continue
+            needle = needles.get(n)
+            if needle is None:
+                needle = needles[n] = tok[:n].tobytes().hex()
+            if needle == key:
+                best_key, best_n = key, n
+        if best_key is None:
+            return None
+        blob = self.storage.kv_manifest_load(best_key)
+        if blob is None:
+            return None
+        man = pickle.loads(blob)
+        if man["layout_key"] not in self._layouts:
+            return None   # no engine with this layout in this process
+        with self.table.lock:
+            page_ids = []
+            nbytes = 0
+            for pid, pnb, width, origin in man["pages"]:
+                page = self.table.get(pid)
+                if page is None:
+                    page = KVPage(pid, None, pnb, width, origin, "disk")
+                    page.durable = page.flushed = True
+                    page.last_use = self._tick()
+                    self.table.add(page)
+                self.table.incref(pid)
+                page_ids.append(pid)
+                nbytes += pnb
+            handle = PagedKV(self, man["layout_key"], page_ids,
+                             list(man["residual"]), man["seq_len"],
+                             nbytes + sum(a.nbytes for a in man["residual"]))
+            self._residual_bytes += sum(a.nbytes for a in man["residual"])
+        self.stats["rehydrated_entries"] += 1
+        return PagedPrefixEntry(man["prompt"], man["seq_len"], handle,
+                                man["logits"], man["origin"])
+
+    # -- queries -------------------------------------------------------------------
+    def page_origins(self, handle: PagedKV) -> List[Optional[int]]:
+        with self.table.lock:
+            return self.table.origins(handle.page_ids)
+
+    def host_used(self) -> int:
+        return self._host_used
+
+    def device_used(self) -> int:
+        return self._device_bytes
+
+    def metrics(self) -> Dict[str, Any]:
+        with self.table.lock:
+            tiers = self.table.tier_counts()
+            page_bytes = sum(p.nbytes for p in self.table.pages())
+            return dict(self.stats, pages=len(self.table),
+                        page_bytes=page_bytes,
+                        host_bytes=self._host_used,
+                        residual_bytes=self._residual_bytes,
+                        device_bytes=self._device_bytes,
+                        device_pages_used=self.device_pager.used_pages,
+                        device_pages_free=self.device_pager.free_pages,
+                        **{f"{t}_pages": n for t, n in tiers.items()})

@@ -1,0 +1,111 @@
+"""Page table: identity, refcounts and tier placement for KV pages.
+
+This is the missing abstraction named by the ROADMAP's memory items: the
+serving layer accounted pages (`serving/paging.py`) but pages had no identity,
+so a live context, a prefix-cache entry and a migration snapshot each carried
+their own full byte blob. Here a page is a *content-addressed* unit -- its id
+is a digest of the bytes it holds -- with a refcount (how many holders
+reference it) and a tier:
+
+  device -> charged against a ``PageAllocator`` budget (HBM on real hardware);
+  host   -> host-RAM resident, charged against the store's host watermark;
+  disk   -> flushed to the storage manager's blob tier, no RAM copy.
+
+Content addressing is what makes copy-on-write sharing fall out for free: two
+snapshots whose token prefixes agree produce byte-identical page slices, which
+hash to the same id, so the second holder only bumps a refcount. Extending a
+prefix never mutates a shared page -- the boundary page is re-sliced under a
+new id -- hence "copy-on-write" without ever copying in place.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+TIERS = ("device", "host", "disk")
+
+
+class KVPage:
+    """One page of KV bytes. ``data`` is a list of per-leaf host arrays (the
+    time-axis slices of every pageable cache leaf, in layout order); it is
+    None while the page lives on the disk tier. ``durable`` marks pages that
+    belong to a persisted prefix manifest (their disk blob outlives every
+    in-RAM reference); ``flushed`` records that the blob exists on disk."""
+
+    __slots__ = ("pid", "data", "nbytes", "width", "refs", "tier", "origin",
+                 "durable", "flushed", "last_use")
+
+    def __init__(self, pid: str, data, nbytes: int, width: int,
+                 origin: Optional[int], tier: str):
+        self.pid = pid
+        self.data = data
+        self.nbytes = nbytes
+        self.width = width          # tokens covered (<= store page_size)
+        self.refs = 0
+        self.tier = tier
+        self.origin = origin        # engine id that computed these bytes
+        self.durable = False
+        self.flushed = False
+        self.last_use = 0
+
+
+class PageTable:
+    """pid -> KVPage with refcounting. All mutation happens under ``lock``
+    (shared with the owning KVPageStore, which composes multi-page
+    operations)."""
+
+    def __init__(self):
+        self.lock = threading.RLock()
+        self._pages: Dict[str, KVPage] = {}
+
+    def __len__(self) -> int:
+        with self.lock:
+            return len(self._pages)
+
+    def __contains__(self, pid: str) -> bool:
+        with self.lock:
+            return pid in self._pages
+
+    def get(self, pid: str) -> Optional[KVPage]:
+        return self._pages.get(pid)
+
+    def add(self, page: KVPage) -> KVPage:
+        self._pages[page.pid] = page
+        return page
+
+    def remove(self, pid: str) -> Optional[KVPage]:
+        return self._pages.pop(pid, None)
+
+    def incref(self, pid: str) -> KVPage:
+        p = self._pages[pid]
+        p.refs += 1
+        return p
+
+    def decref(self, pid: str) -> KVPage:
+        p = self._pages[pid]
+        p.refs -= 1
+        return p
+
+    def pages(self) -> List[KVPage]:
+        return list(self._pages.values())
+
+    def tier_counts(self) -> Dict[str, int]:
+        out = {t: 0 for t in TIERS}
+        for p in self._pages.values():
+            out[p.tier] += 1
+        return out
+
+    def by_lru(self, tier: str) -> List[KVPage]:
+        """Pages of one tier, least-recently-used first -- the demotion
+        victim order."""
+        return sorted((p for p in self._pages.values() if p.tier == tier),
+                      key=lambda p: p.last_use)
+
+    def origins(self, pids: List[str]) -> List[Optional[int]]:
+        """Per-page origin engine ids, in page order -- the control plane's
+        fractional-affinity signal (unknown pages score None)."""
+        out = []
+        for pid in pids:
+            p = self._pages.get(pid)
+            out.append(p.origin if p is not None else None)
+        return out

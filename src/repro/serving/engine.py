@@ -48,7 +48,12 @@ class ContextSnapshot:
     (exact because prefill<->decode are consistent and sampling is replayed
     from the same per-sequence stream). kind="prefix": a prefix-cache entry
     (post-prefill KV slice + last-position logits; no sampling state -- the
-    admitting sequence supplies its own key/counter)."""
+    admitting sequence supplies its own key/counter).
+
+    With a KVPageStore attached to the engine, the state travels as ``pages``
+    (a PagedKV handle into the shared page table -- bytes owned and
+    deduplicated by the store) instead of a private ``state`` blob; exactly
+    one of the two is set for logits/prefix kinds."""
     kind: str
     prompt: np.ndarray
     generated: List[int]
@@ -60,14 +65,23 @@ class ContextSnapshot:
     logits: Optional[np.ndarray] = None
     origin: Optional[int] = None   # engine_id that produced the state (the
                                    # control plane's prefix-affinity signal)
+    pages: Optional[Any] = None    # PagedKV handle (page-store path)
 
     def nbytes(self) -> int:
         n = self.prompt.nbytes + 8 * len(self.generated)
         if self.state is not None:
             n += sum(v.nbytes for v in self.state)
+        if self.pages is not None:
+            n += self.pages.nbytes
         if self.logits is not None:
             n += self.logits.nbytes
         return n
+
+    def release(self) -> None:
+        """Return this snapshot's pages to the store (idempotent; no-op for
+        legacy blob snapshots -- their bytes die with the object)."""
+        if self.pages is not None:
+            self.pages.release()
 
 
 class _Slot:
@@ -258,7 +272,8 @@ class ServingEngine:
                  temperature: float = 0.0, rng_seed: int = 0,
                  page_size: int = 16, hbm_pages: Optional[int] = None,
                  params=None, prefix_cache=None, serial_prefill: bool = False,
-                 prefill_chunk_cap: Optional[int] = None, engine_id: int = 0):
+                 prefill_chunk_cap: Optional[int] = None, engine_id: int = 0,
+                 page_store=None):
         self.cfg = cfg
         self.engine_id = engine_id   # pool position; tags prefix-cache
                                      # entries for affinity routing
@@ -288,6 +303,8 @@ class ServingEngine:
         self.pager = PageAllocator(pages, page_size)
         self._vlm = bool(getattr(self.model, "is_vlm", False))
         self.prefix_cache = prefix_cache   # shared PrefixCache or None
+        self.page_store = page_store       # shared KVPageStore or None (the
+                                           # legacy whole-blob snapshot path)
         self._last_logits = None           # device (max_slots, vocab), last step
         self._lock = threading.Lock()
         self._prefill_queue: List[_PendingPrefill] = []
@@ -308,6 +325,66 @@ class ServingEngine:
                       "prefill_chunks": 0, "prefill_bursts": 0,
                       "batched_prefill_tokens": 0}
         self._build_jits()
+        self._init_paging_layout()
+
+    def _init_paging_layout(self):
+        """Token-axis layout of the cache tree: leaves whose logical axes
+        include ``kv_seq`` spanning the full max_len (transformer K/V) are
+        pageable; rolling buffers (kv_seq shorter than max_len), recurrent
+        carries and seq_lens travel as un-paged residual. Also derives
+        ``kv_bytes_per_token`` -- the control plane's migration cost unit --
+        which is meaningful (non-zero) exactly when the model keeps
+        token-indexed state."""
+        def _is_label(x):
+            return isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x)
+        labels = jax.tree.leaves(self.cache_logical, is_leaf=_is_label)
+        leaves = jax.tree.leaves(self._cache_b1)
+        axes = []
+        for leaf, lab in zip(leaves, labels):
+            ax = lab.index("kv_seq") if "kv_seq" in lab else None
+            if ax is not None and leaf.shape[ax] != self.max_len:
+                ax = None
+            axes.append(ax)
+        self._time_axes = axes
+        self.kv_bytes_per_token = sum(
+            leaf.nbytes // leaf.shape[ax]
+            for leaf, ax in zip(leaves, axes) if ax is not None)
+        self.pager.bytes_per_token = self.kv_bytes_per_token
+        self._layout_key = f"{self.cfg!r}|len{self.max_len}"
+        if self.page_store is not None and self.kv_bytes_per_token == 0:
+            # no token-indexed state at all (pure-recurrent model): every
+            # byte would ride un-shared in the handle residual, pages would
+            # be empty, and the spill tier could never demote the real
+            # state. The legacy blob path (whole-snapshot pickle, bounded
+            # by the context pool budget) is strictly better here.
+            self.page_store = None
+        if self.page_store is not None:
+            self.page_store.register_layout(
+                self._layout_key, axes,
+                [tuple(leaf.shape) for leaf in leaves],
+                [leaf.dtype for leaf in leaves])
+
+    def resident_bytes(self, slot: int) -> int:
+        """KV bytes a slot's reserved pages pin in device memory -- the
+        numerator of the rebalancer's migration cost model."""
+        return (self.pager.held(f"slot{slot}") * self.pager.page_size *
+                self.kv_bytes_per_token)
+
+    @staticmethod
+    def _state_leaves(snap):
+        """Flat host leaves of a snapshot in either representation (legacy
+        blob or page-store handle)."""
+        return snap.state if snap.state is not None else snap.pages.leaves()
+
+    @staticmethod
+    def _unpin_hit(hit):
+        """Balance the reference ``PrefixCache.lookup`` pinned on a paged
+        entry (held across the lookup -> materialize window so a concurrent
+        eviction cannot free the pages mid-read)."""
+        pages = getattr(hit, "pages", None)
+        if pages is not None:
+            pages._store.unpin_pages(pages)
 
     # -- jit'd primitives -------------------------------------------------------
     def _build_jits(self):
@@ -436,9 +513,14 @@ class ServingEngine:
                 hit = self.prefix_cache.lookup(prompt)
             if hit is not None and hit.seq_len == P:
                 # exact hit: restore the cached cache slice + logits, no
-                # prompt tokens left to consume
-                cache1 = jax.tree.unflatten(
-                    self._piece_treedef, [jnp.asarray(x) for x in hit.state])
+                # prompt tokens left to consume. finally: a failed
+                # materialization must still drop the lookup's pin
+                try:
+                    cache1 = jax.tree.unflatten(
+                        self._piece_treedef,
+                        [jnp.asarray(x) for x in self._state_leaves(hit)])
+                finally:
+                    self._unpin_hit(hit)
                 self._activate_slot(slot, cache1, jnp.asarray(hit.logits))
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_saved_tokens"] += hit.seq_len
@@ -447,8 +529,12 @@ class ServingEngine:
                 # only prompt[hit.seq_len:] (ONE chunked-prefill job, not
                 # token-scan decode chunks). Safe for VLM rows too: the
                 # inserted piece carries the conversation's own image K/V.
-                cache1 = jax.tree.unflatten(
-                    self._piece_treedef, [jnp.asarray(x) for x in hit.state])
+                try:
+                    cache1 = jax.tree.unflatten(
+                        self._piece_treedef,
+                        [jnp.asarray(x) for x in self._state_leaves(hit)])
+                finally:
+                    self._unpin_hit(hit)
                 self.cache = self._insert_jit(self.cache, cache1, slot)
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_saved_tokens"] += hit.seq_len
@@ -457,6 +543,8 @@ class ServingEngine:
                                       fresh=False)
             elif (self.serial_prefill or image_embeds is not None or
                   self._vlm):
+                if hit is not None:     # looked up but not used: unpin
+                    self._unpin_hit(hit)
                 # legacy path: one full single-sequence prefill per XLA call
                 # (kept as the bench_prefill baseline). FRESH VLM prompts
                 # always land here: a fresh chunked prefill would read the
@@ -648,7 +736,10 @@ class ServingEngine:
             # suspend-restore round trip
             slot = self.add_sequence(prompt(lens[0]), max_new=2)
             self.step()
-            _drain([self.restore(self.snapshot(slot))])
+            snap = self.snapshot(slot)
+            slot = self.restore(snap)
+            snap.release()   # warm pages must not linger in the store
+            _drain([slot])
             ran += 1
         finally:
             self.prefix_cache = pc
@@ -695,10 +786,26 @@ class ServingEngine:
     # -- prefix cache (restore, then chunk-prefill the suffix) --------------------
     def _cache_prefix(self, tokens: np.ndarray, cache1, logits_vec):
         """Store a batch-1 cache tree + last-position logits under `tokens`.
-        Leaves stay on device: entries restore with zero host round-trips
-        (the prefix cache never spills to storage, unlike suspend contexts)."""
+        Legacy path: leaves stay on device as a private blob. Page-store
+        path: the state is paged into the shared table at the device tier
+        (charged against the store's PageAllocator budget), so prefixes that
+        agree share pages with each other and with the contexts extending
+        them, and the entry is write-through persisted for cross-process
+        re-hydration."""
+        tokens = np.asarray(tokens, np.int32)
+        if self.page_store is not None:
+            handle = self.page_store.put(
+                self._layout_key, jax.tree.leaves(cache1),
+                seq_len=len(tokens), origin=self.engine_id, device=True)
+            snap = ContextSnapshot(
+                kind="prefix", prompt=tokens.copy(), generated=[],
+                seq_len=len(tokens), pages=handle,
+                logits=np.asarray(logits_vec), origin=self.engine_id)
+            if not self.prefix_cache.insert(snap):
+                handle.release()
+            return
         snap = ContextSnapshot(
-            kind="prefix", prompt=np.asarray(tokens, np.int32).copy(),
+            kind="prefix", prompt=tokens.copy(),
             generated=[], seq_len=len(tokens),
             state=list(jax.tree.leaves(cache1)), logits=logits_vec,
             origin=self.engine_id)
@@ -790,16 +897,27 @@ class ServingEngine:
         """Suspend a sequence: capture its state and free the slot."""
         s = self.slots[slot]
         assert s.active and not s.prefilling
-        state = None
+        state = pages = None
+        seq_len = len(s.prompt) + len(s.generated)
         pending = int(self.next_tokens[slot])
         if kind == "logits":
             piece = self._extract_jit(self.cache, slot)
-            state = [np.asarray(x) for x in jax.tree.leaves(piece)]
+            leaves = [np.asarray(x) for x in jax.tree.leaves(piece)]
+            if self.page_store is not None:
+                # suspend state enters the page table at the host tier: the
+                # pages covering a cached prefix of this context dedupe
+                # against the prefix entry's pages (copy-on-write sharing)
+                pages = self.page_store.put(self._layout_key, leaves,
+                                            seq_len=seq_len,
+                                            origin=self.engine_id)
+            else:
+                state = leaves
         snap = ContextSnapshot(
             kind=kind, prompt=s.prompt.copy(), generated=list(s.generated),
-            seq_len=len(s.prompt) + len(s.generated),
+            seq_len=seq_len,
             seq_key_data=np.asarray(jax.random.key_data(self.seq_keys[slot])),
-            counter=s.counter, state=state, pending_token=pending)
+            counter=s.counter, state=state, pending_token=pending,
+            pages=pages, origin=self.engine_id)
         max_new, eos = s.max_new, s.eos_id
         snap.max_new, snap.eos_id = max_new, eos  # dynamic attrs for callers
         self.free(slot)
@@ -830,7 +948,8 @@ class ServingEngine:
         self.seq_keys = self.seq_keys.at[slot].set(key)
         if snap.kind == "logits":
             piece = jax.tree.unflatten(
-                self._piece_treedef, [jnp.asarray(x) for x in snap.state])
+                self._piece_treedef,
+                [jnp.asarray(x) for x in self._state_leaves(snap)])
             self.cache = self._insert_jit(self.cache, piece, slot)
             self.next_tokens = self.next_tokens.at[slot].set(snap.pending_token)
             s.counter = snap.counter

@@ -40,6 +40,13 @@ class PageAllocator:
     def utilization(self) -> float:
         return self.used_pages / self.num_pages
 
+    def used_bytes(self) -> int:
+        """Byte view of the reservation state -- the pool telemetry gauge
+        behind the rebalancer's cost model. ``bytes_per_token`` is set by
+        the owning ServingEngine once its cache leaf dtypes are known
+        (zero until then, and for pagers that track counts only)."""
+        return self.used_pages * self.page_size * self.bytes_per_token
+
     # -- reserve / grow / release -----------------------------------------------
     def can_admit(self, tokens: int) -> bool:
         return self.pages_for(tokens) <= self._free

@@ -1,0 +1,447 @@
+"""Unified paged KV memory hierarchy: copy-on-write page sharing, tier
+demotion (device -> host -> disk), cross-process prefix re-hydration,
+bit-exactness of the page-store path vs the legacy blob path, and the
+control-plane features built on page identity (fractional affinity, the
+migration victim cost model, the SLO admission controller, p90 planning)."""
+import tempfile
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.control.plane import ControlPlane
+from repro.control.rebalancer import (Rebalancer, migration_cost,
+                                      pick_migration_victim)
+from repro.control.telemetry import TelemetryBus
+from repro.core import AIOSKernel
+from repro.core.context import ContextManager
+from repro.core.storage import StorageManager
+from repro.core.syscall import LLMSyscall
+from repro.memory import KVPageStore
+from repro.sdk.query import LLMQuery
+from repro.serving import PrefixCache, ServingEngine
+
+TINY = get_config("tiny")
+
+
+def _drain(eng, slot):
+    while not eng.is_done(slot):
+        eng.step()
+    out = eng.result(slot)
+    eng.free(slot)
+    return out
+
+
+def _store(storage=None, **kw):
+    kw.setdefault("page_size", 16)
+    return KVPageStore(storage=storage, **kw)
+
+
+# ---------------------------------------------------------------------------
+# page store unit level (synthetic layout, no model)
+# ---------------------------------------------------------------------------
+class TestPageStore:
+    LAYOUT = "unit|len64"
+
+    def _mk(self, **kw):
+        st = _store(**kw)
+        st.register_layout(self.LAYOUT, [1, None], [(1, 64, 2), (1,)],
+                           [np.float32, np.int32])
+        return st
+
+    def test_roundtrip_and_cow_refcounts(self):
+        st = self._mk()
+        rng = np.random.default_rng(0)
+        kv = np.zeros((1, 64, 2), np.float32)
+        kv[0, :48] = rng.normal(size=(48, 2))
+        h1 = st.put(self.LAYOUT, [kv, np.array([48], np.int32)], seq_len=48,
+                    origin=0)
+        assert len(h1.page_ids) == 3
+        # extension: same first 48 positions, 16 more tokens -> the full
+        # pages dedupe (copy-on-write), only the new boundary page is fresh
+        kv2 = kv.copy()
+        kv2[0, 48:64] = rng.normal(size=(16, 2))
+        h2 = st.put(self.LAYOUT, [kv2, np.array([64], np.int32)], seq_len=64,
+                    origin=1)
+        assert st.stats["dedup_hits"] == 3
+        assert st.stats["dedup_saved_bytes"] > 0
+        shared = [st.table.get(p) for p in h1.page_ids]
+        assert all(p.refs == 2 for p in shared)
+        assert st.page_origins(h2) == [0, 0, 0, 1]   # boundary page only
+        # bit-exact reassembly (zeros beyond seq_len by construction here)
+        l1 = st.leaves(h1)
+        np.testing.assert_array_equal(l1[0], kv)
+        np.testing.assert_array_equal(st.leaves(h2)[0], kv2)
+        # release drops refcounts; refcount-0 unpersisted pages are freed
+        h1.release()
+        assert all(p.refs == 1 for p in shared)
+        h1.release()                                  # idempotent
+        assert all(p.refs == 1 for p in shared)
+        h2.release()
+        assert len(st.table) == 0
+
+    def test_device_budget_pressure_demotes(self):
+        st = self._mk(device_pages=2)
+        rng = np.random.default_rng(1)
+        kv = np.zeros((1, 64, 2), np.float32)
+        kv[0, :64] = rng.normal(size=(64, 2))
+        h = st.put(self.LAYOUT, [kv, np.array([64], np.int32)], seq_len=64,
+                   origin=0, device=True)
+        # 4 pages into a 2-page device budget: LRU pages demoted to host
+        assert st.device_pager.used_pages <= 2
+        assert st.stats["demotions_host"] >= 2
+        m = st.metrics()
+        assert m["device_pages"] <= 2 and m["host_pages"] >= 2
+        np.testing.assert_array_equal(st.leaves(h)[0], kv)   # still exact
+
+    def test_host_watermark_demotes_to_disk_and_promotes(self):
+        storage = StorageManager(tempfile.mkdtemp(prefix="kvst-"))
+        st = self._mk(storage=storage, host_budget_bytes=1)
+        rng = np.random.default_rng(2)
+        kv = np.zeros((1, 64, 2), np.float32)
+        kv[0, :32] = rng.normal(size=(32, 2))
+        h = st.put(self.LAYOUT, [kv, np.array([32], np.int32)], seq_len=32)
+        assert st.stats["demotions_disk"] >= 2        # over the 1-byte budget
+        assert st.host_used() <= 1
+        np.testing.assert_array_equal(st.leaves(h)[0], kv)   # disk promote
+        assert st.stats["promotions"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# engine level: paged snapshots, prefix CoW, bit-exactness vs legacy
+# ---------------------------------------------------------------------------
+class TestEnginePaged:
+    @pytest.mark.parametrize("temperature", [0.0, 0.7])
+    def test_snapshot_restore_bitexact_vs_legacy(self, temperature):
+        prompt = np.arange(1, 9)
+        ref_eng = ServingEngine(TINY, max_slots=4, max_len=128,
+                                temperature=temperature, rng_seed=1)
+        ref = _drain(ref_eng, ref_eng.add_sequence(prompt, max_new=12))
+        eng = ServingEngine(TINY, max_slots=4, max_len=128,
+                            temperature=temperature, rng_seed=1,
+                            page_store=_store())
+        slot = eng.add_sequence(prompt, max_new=12)
+        for _ in range(5):
+            eng.step()
+        snap = eng.snapshot(slot)
+        assert snap.state is None and snap.pages is not None
+        other = eng.add_sequence(np.arange(5, 50, 5), max_new=6)
+        _drain(eng, other)
+        slot = eng.restore(snap)
+        out = _drain(eng, slot)
+        snap.release()
+        assert out == ref, temperature
+
+    def test_prefix_cow_sharing_and_release(self):
+        st = _store()
+        pc = PrefixCache(page_store=st)
+        eng = ServingEngine(TINY, max_slots=4, max_len=128, rng_seed=0,
+                            prefix_cache=pc, page_store=st)
+        prompt = np.arange(1, 33)            # 32 tokens = 2 full pages
+        slot = eng.add_sequence(prompt, max_new=6)
+        while not eng.is_done(slot):
+            eng.step()
+        eng.harvest_prefix(slot)             # entry for prompt + generation
+        out = eng.result(slot)
+        eng.free(slot)
+        # the harvest's pages over [0, 32) dedupe against the post-prefill
+        # entry's pages: copy-on-write sharing, refcount 2
+        assert eng.stats["prefix_hits"] == 0
+        assert st.stats["dedup_hits"] >= 2
+        assert sum(1 for p in st.table.pages() if p.refs == 2) >= 2
+        # the grown resubmission is an exact hit on the harvested entry
+        grown = np.concatenate([prompt, np.asarray(out, np.int32)])
+        slot = eng.add_sequence(grown, max_new=4)
+        assert eng.stats["prefix_hits"] == 1
+        _drain(eng, slot)
+        # eviction releases pages; with no disk tier they are freed outright
+        pc.clear()
+        assert len(st.table) == 0
+        assert st.device_pager.used_pages == 0
+
+    def test_restore_then_extend_bitexact(self):
+        """Prefix-cache suffix extension through the page store matches the
+        uncached engine token-for-token."""
+        ref_eng = ServingEngine(TINY, max_slots=4, max_len=128, rng_seed=0)
+        st = _store()
+        eng = ServingEngine(TINY, max_slots=4, max_len=128, rng_seed=0,
+                            prefix_cache=PrefixCache(page_store=st),
+                            page_store=st)
+        p1 = np.arange(1, 25)
+        out1 = _drain(eng, eng.add_sequence(p1, max_new=6))
+        assert out1 == _drain(ref_eng, ref_eng.add_sequence(p1, max_new=6))
+        grown = np.concatenate([p1, np.asarray(out1, np.int32),
+                                np.array([7, 9, 11], np.int32)])
+        slot = eng.add_sequence(grown, max_new=6, eager=False)
+        while eng.prefill_pending():
+            eng.prefill_step()
+        out2 = _drain(eng, slot)
+        assert eng.stats["prefix_hits"] >= 1
+        assert out2 == _drain(ref_eng, ref_eng.add_sequence(grown, max_new=6))
+
+
+# ---------------------------------------------------------------------------
+# kernel level: pool bit-exactness, spill tier, cross-process re-hydration
+# ---------------------------------------------------------------------------
+def _run_kernel(prompts, *, paged, root_dir=None, max_new=8, **kkw):
+    k = AIOSKernel(arch="tiny", scheduler="batched", num_cores=2, quantum=4,
+                   paged_kv=paged, root_dir=root_dir,
+                   engine_kw={"max_slots": 4, "max_len": 128}, **kkw)
+    k.start()
+    outs = [k.send_request("t", LLMQuery(prompt=p, max_new_tokens=max_new))
+            ["tokens"] for p in prompts]
+    m = k.metrics()
+    k.stop()
+    return outs, m
+
+
+class TestKernelPaged:
+    PROMPTS = [list(range(5, 45)), list(range(5, 45)) + [7, 9, 2],
+               [3, 1, 4, 1, 5, 9, 2, 6] * 4, list(range(2, 30, 3))]
+
+    def test_pool_bitexact_paged_vs_legacy(self):
+        """Same tokens with the page store on vs the legacy snapshot path --
+        through the batched pool with quantum suspends, prefix hits and
+        restore-then-extend (sequential submission keeps it deterministic)."""
+        on, m_on = _run_kernel(self.PROMPTS, paged=True)
+        off, m_off = _run_kernel(self.PROMPTS, paged=False)
+        assert on == off
+        assert "kv_store" in m_on and "kv_store" not in m_off
+        assert m_on["kv_store"]["put_handles"] > 0
+
+    def test_fresh_kernel_rehydrates_from_storage_tier(self):
+        root = tempfile.mkdtemp(prefix="kv-shared-")
+        out1, m1 = _run_kernel(self.PROMPTS[:2], paged=True, root_dir=root)
+        assert m1["kv_store"]["persisted_entries"] > 0
+        # a process-equivalent fresh kernel on the same root: prefixes come
+        # back from the disk manifests, tokens identical
+        out2, m2 = _run_kernel(self.PROMPTS[:2], paged=True, root_dir=root)
+        assert out2 == out1
+        assert m2["prefix_cache"]["rehydrates"] >= 1
+        assert m2["kv_store"]["rehydrated_entries"] >= 1
+        assert m2["prefix_cache"]["hits"] >= 1
+
+    def test_rehydrate_respects_local_budget(self):
+        """An entry persisted under a bigger budget than this process runs
+        with is skipped (counted as a miss), not admitted destructively."""
+        storage = StorageManager(tempfile.mkdtemp(prefix="kvbud-"))
+        st = _store(storage=storage)
+        pc = PrefixCache(page_store=st)
+        eng = ServingEngine(TINY, max_slots=2, max_len=128, rng_seed=6,
+                            prefix_cache=pc, page_store=st)
+        prompt = np.arange(1, 40)
+        _drain(eng, eng.add_sequence(prompt, max_new=4))
+        assert st.stats["persisted_entries"] >= 1
+        # fresh tiny-budget cache on the same store: the persisted entry is
+        # bigger than the whole budget -- lookup must miss, not crash
+        small = PrefixCache(budget_bytes=16, page_store=st)
+        assert small.lookup(np.concatenate([prompt, [7]])) is None
+        assert small.stats["misses"] == 1
+
+    def test_free_never_deletes_blobs_shared_with_manifests(self):
+        """Content-addressed blobs are shared by identity: process B
+        freeing its non-durable copy of pages that process A's persisted
+        manifest lists must not delete A's blobs (pre-fix this poisoned
+        every later rehydrate with KeyError)."""
+        root = tempfile.mkdtemp(prefix="kv-poison-")
+        lay = "t|64"
+
+        def mk():
+            st = KVPageStore(page_size=16, storage=StorageManager(root))
+            st.register_layout(lay, [1], [(1, 64, 2)], [np.float32])
+            return st
+
+        kv = np.zeros((1, 64, 2), np.float32)
+        kv[0, :32] = np.random.default_rng(8).normal(size=(32, 2))
+        a = mk()
+        snap = SimpleNamespace(pages=a.put(lay, [kv], seq_len=32, origin=0),
+                               prompt=np.arange(32), seq_len=32,
+                               logits=np.zeros(8, np.float32), origin=0)
+        assert a.persist_prefix(snap)
+        b = mk()                       # "another process", same root
+        hb = b.put(lay, [kv], seq_len=32)
+        assert b.demote_handle(hb)     # flushes the same content pids
+        hb.release()                   # refcount 0, non-durable -> freed
+        c = mk()
+        entry = c.rehydrate_prefix(np.arange(32))
+        assert entry is not None
+        np.testing.assert_array_equal(entry.pages.leaves()[0], kv)
+
+    def test_context_spill_through_page_tier(self):
+        """A paged snapshot spilled by the ContextManager demotes its pages
+        to disk (no whole-blob pickle) and restores bit-exactly."""
+        storage = StorageManager(tempfile.mkdtemp(prefix="kvspill-"))
+        st = _store(storage=storage)
+        cm = ContextManager(storage, budget_bytes=1, watermark=0.0,
+                            page_store=st)
+        eng = ServingEngine(TINY, max_slots=2, max_len=128, rng_seed=4,
+                            page_store=st)
+        prompt = np.arange(1, 20)
+        ref = _drain(eng, eng.add_sequence(prompt, max_new=10))
+        slot = eng.add_sequence(prompt, max_new=10)
+        for _ in range(4):
+            eng.step()
+        cm.save("c1", eng.snapshot(slot))
+        assert cm.stats["spills"] >= 1
+        assert st.metrics()["disk_pages"] >= 1
+        snap = cm.load("c1")
+        out = _drain(eng, eng.restore(snap))
+        cm.clear("c1")
+        assert out == ref
+        assert len(st.table) == 0      # cleared context returned its pages
+
+
+# ---------------------------------------------------------------------------
+# control plane on page identity
+# ---------------------------------------------------------------------------
+class TestFractionalAffinity:
+    def _mixed_entry_cache(self):
+        """A prefix entry whose pages span two origins: 3 pages computed on
+        core 0, the extension's boundary page on core 1 (the harvesting
+        engine -- which binary affinity would credit with everything)."""
+        st = _store()
+        st.register_layout("aff|len64", [1], [(1, 64, 2)], [np.float32])
+        rng = np.random.default_rng(3)
+        kv = np.zeros((1, 64, 2), np.float32)
+        kv[0, :48] = rng.normal(size=(48, 2))
+        h0 = st.put("aff|len64", [kv], seq_len=48, origin=0)
+        kv2 = kv.copy()
+        kv2[0, 48:] = rng.normal(size=(16, 2))
+        h1 = st.put("aff|len64", [kv2], seq_len=64, origin=1)
+        pc = PrefixCache(page_store=st)
+        prompt = np.arange(100, 164)
+        snap = SimpleNamespace(prompt=prompt, seq_len=64, pages=h1, origin=1,
+                               generated=[], state=None, logits=None,
+                               nbytes=lambda: 1024, release=h1.release)
+        assert pc.insert(snap)
+        h0.release()
+        return pc, prompt
+
+    def test_fractional_routing_picks_max_residency_core(self):
+        from repro.control.affinity import AffinityRouter
+        pc, prompt = self._mixed_entry_cache()
+        query = np.concatenate([prompt, np.array([7, 8], np.int32)])
+        frac = AffinityRouter(pc, min_tokens=16)
+        res = frac.probe(query)
+        assert res is not None and res[2] == [0, 0, 0, 1]
+        assert res[0] == 0                                  # dominant origin
+        assert frac.affinity_pages(0, res, 16) == 3
+        assert frac.affinity_pages(1, res, 16) == 1
+        assert frac.stats["fractional_probes"] == 1
+        # binary router credits the harvesting core with ALL pages -- the
+        # misroute fractional scoring exists to fix
+        binary = AffinityRouter(pc, min_tokens=16, fractional=False)
+        bres = binary.probe(query)
+        assert binary.affinity_pages(0, bres, 16) == 0
+        assert binary.affinity_pages(1, bres, 16) == 4
+
+
+class TestMigrationCostModel:
+    def test_pick_cheapest_bytes_per_remaining_token(self):
+        # same SLO class: 2nd slot has fewer resident bytes per remaining
+        # token -> cheaper to move per unit of offloaded work
+        cands = [(0, 1, 4096, 4), (1, 1, 2048, 16), (2, 1, 8192, 32)]
+        slot, cost = pick_migration_victim(cands)
+        assert slot == 1 and cost == migration_cost(2048, 16)
+        # SLO class still leads: a best_effort victim beats a cheaper batch
+        cands = [(0, 1, 64, 64), (1, 2, 1 << 20, 1)]
+        slot, _ = pick_migration_victim(cands)
+        assert slot == 1
+        # degenerate (recurrent models: resident_bytes == 0) falls back to
+        # the longest tail, the pre-cost-model behaviour
+        cands = [(0, 1, 0, 4), (1, 1, 0, 40)]
+        assert pick_migration_victim(cands)[0] == 1
+        assert pick_migration_victim([]) == (None, None)
+
+    def test_engine_resident_bytes(self):
+        eng = ServingEngine(TINY, max_slots=2, max_len=128, rng_seed=5)
+        assert eng.kv_bytes_per_token > 0
+        slot = eng.add_sequence(np.arange(1, 40), max_new=8)
+        held = eng.pager.held(f"slot{slot}")
+        assert eng.resident_bytes(slot) == held * 16 * eng.kv_bytes_per_token
+        _drain(eng, slot)
+        assert eng.resident_bytes(slot) == 0
+
+
+class TestAdmissionController:
+    def _miss(self, plane, n):
+        for _ in range(n):
+            plane.bus.record("slo_miss", 1.0, "interactive")
+
+    def test_sheds_best_effort_under_interactive_misses(self):
+        plane = ControlPlane(2, admission_kw={"window": 16, "miss_rate": 0.5,
+                                              "min_samples": 4})
+        be = LLMSyscall("a", {"prompt": [1, 2], "slo_class": "best_effort"})
+        assert not plane.should_shed(be)       # no samples yet
+        self._miss(plane, 6)
+        assert plane.interactive_miss_rate() == 1.0
+        assert plane.should_shed(be)
+        ia = LLMSyscall("a", {"prompt": [1, 2], "slo_class": "interactive"})
+        ba = LLMSyscall("a", {"prompt": [1, 2], "slo_class": "batch"})
+        assert not plane.should_shed(ia)
+        assert not plane.should_shed(ba)       # only best_effort sheds
+        assert plane.metrics()["admission_shed"] == 1
+        off = ControlPlane(2, admission=False)
+        self._miss(off, 8)
+        be2 = LLMSyscall("a", {"prompt": [1], "slo_class": "best_effort"})
+        assert not off.should_shed(be2)
+
+    def test_miss_window_decays_by_time(self):
+        """A burst of misses must not latch shedding forever: once no
+        interactive syscall has completed for admission_ttl_s, the stale
+        samples stop counting."""
+        import time as _t
+        plane = ControlPlane(2, admission_kw={"min_samples": 4,
+                                              "ttl_s": 10.0})
+        self._miss(plane, 6)
+        plane._last_interactive_activity = _t.monotonic()
+        assert plane.interactive_miss_rate() == 1.0
+        plane._last_interactive_activity = _t.monotonic() - 60.0  # long idle
+        assert plane.interactive_miss_rate() == 0.0
+        be = LLMSyscall("a", {"prompt": [1], "slo_class": "best_effort"})
+        assert not plane.should_shed(be)
+        # starved-but-queued interactive work counts as activity: the
+        # controller must not switch off mid-pileup
+        q = plane.make_queue()
+        q.put(LLMSyscall("a", {"prompt": [1], "slo_class": "interactive"}))
+        assert plane.interactive_miss_rate() == 1.0
+
+    def test_scheduler_fails_shed_syscall_fast(self):
+        k = AIOSKernel(arch="tiny", scheduler="batched", num_cores=1,
+                       control=True,
+                       control_kw={"admission_kw": {"min_samples": 4}},
+                       engine_kw={"max_slots": 2, "max_len": 64})
+        k.start()
+        try:
+            for _ in range(8):
+                k.control.bus.record("slo_miss", 1.0, "interactive")
+            sc = LLMSyscall("a", {"prompt": [1, 2, 3], "max_new_tokens": 4,
+                                  "slo_class": "best_effort"})
+            k.submit(sc)
+            with pytest.raises(RuntimeError, match="admission controller"):
+                sc.join(timeout=5)
+            assert k.metrics()["control"]["admission_shed"] == 1
+        finally:
+            k.stop()
+
+
+class TestP90Planning:
+    def test_rolling_backlog_series_marks_spiky_core_hot(self):
+        bus = TelemetryBus(2)
+        reb = Rebalancer(bus, min_gap=2, hysteresis_ticks=1)
+        base = dict(free_pages=16, page_size=16, prefill_debt=0,
+                    resident_kv_bytes=0, migrations_out=0, migrations_in=0)
+        bus.publish(0, free_slots=3, running=1, backlog=0, **base)
+        bus.publish(1, free_slots=4, running=0, backlog=0, **base)
+        # instantaneous gauges say the gap is 1 < min_gap: no decision
+        assert reb.plan(central_backlog=0) is None
+        # core 0's backlog SPIKES repeatedly even though the tick catches it
+        # drained; the rolling p90 sees through the sampling luck
+        for v in (6, 6, 6, 0, 6, 6):
+            bus.record("backlog", v, "core0")
+        decision = reb.plan(central_backlog=0)
+        assert decision is not None
+        hot, cold, n = decision
+        assert (hot, cold) == (0, 1) and n >= 1
+        assert reb.stats["p90_influenced_ticks"] >= 1

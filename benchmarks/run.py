@@ -82,7 +82,9 @@ def _derive(name: str, out: dict) -> str:
                 f"engine_max={out['max_engine_speedup']}x;"
                 f"pool_burst4={out['speedup_burst4plus_pool']}x;"
                 f"dispatch={out['dispatch_reduction_burst4plus']}x;"
-                f"stall={out['decode_stall_reduction']}x")
+                f"stall={out['decode_stall_reduction']}x;"
+                f"tick_dispatch={out['step_dispatch_reduction']}x;"
+                f"guard={out['guard_overhead_recovered_pct']}%")
     if name.startswith("context_switch"):
         ok = all(r["exact_match"] == 1.0 for r in rows)
         return f"exact_match_all={'1.0' if ok else 'FAIL'}"

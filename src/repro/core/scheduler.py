@@ -232,9 +232,10 @@ class BatchedScheduler(BaseScheduler):
     admission burst is routed as a GROUP (up to the core's free slots and a
     fair share of the backlog), so the core's engine prefills the whole
     burst through shared chunked-prefill dispatches; each core's worker
-    keeps its decode batch full from its private run queue, interleaving one
-    prefill chunk with each decode step so long prompts never stall running
-    generations.
+    keeps its decode batch full from its private run queue, and each worker
+    tick is ONE unified engine dispatch (``serve_step``) carrying the
+    burst's prefill chunk rows and every running slot's decode token
+    together, so long prompts never stall running generations.
 
     Fairness is cross-core: a quantum-expired syscall is suspended and
     requeued on the CENTRAL queue, so it resumes on whichever core has
@@ -553,11 +554,13 @@ class BatchedScheduler(BaseScheduler):
 
     # -- per-core worker (data plane) ----------------------------------------------------
     def _llm_worker(self, core_idx: int):
-        """Keeps the decode batch full AND interleaves chunked prefill with
-        decode: each loop iteration consumes at most one prompt chunk for the
-        whole admission burst (`prefill_step`), then runs one decode step for
-        every active slot -- so a burst of long prompts admits as one batched
-        chunked prefill and never stalls running generations.
+        """Keeps the decode batch full AND advances prefill with decode in
+        ONE engine tick (`serve_step`): in the engine's default mixed mode a
+        tick is a SINGLE model dispatch that carries this burst's prompt
+        chunk rows and every active slot's decode token (a length-1 chunk
+        row) together -- so a burst of long prompts admits as batched
+        chunked prefill, never stalls running generations, and costs one
+        XLA dispatch per tick instead of the legacy chunk-then-decode pair.
 
         With the control plane attached the loop additionally publishes
         telemetry each iteration and executes the plane's preemption /
@@ -619,9 +622,9 @@ class BatchedScheduler(BaseScheduler):
                 time.sleep(0.001)
                 continue
             try:
-                if engine.prefill_pending():
-                    engine.prefill_step()     # one chunk for the whole burst
-                emitted = engine.step()       # {} when nothing decodes yet
+                # one tick: prefill chunks + decode tokens (ONE dispatch in
+                # mixed mode; the interleaved pair in legacy mode)
+                emitted = engine.serve_step()
             except Exception as e:  # noqa: BLE001
                 # core fault mid-decode: every in-flight syscall loses at most
                 # this quantum; requeue centrally so healthy cores absorb them

@@ -347,8 +347,9 @@ class StorageManager:
         ``max_entries`` > 0 the OLDEST index entries (insertion order ==
         write order) prune FIFO once the cap is exceeded -- their manifest
         blobs are deleted; page blobs stay (they may be shared with live
-        manifests; blob GC is a recorded follow-on). Returns the updated
-        index so callers can mirror it without a re-read."""
+        manifests; ``kv_orphan_sweep`` reclaims the unreferenced ones).
+        Returns the updated index so callers can mirror it without a
+        re-read."""
         with self._kv_lock, self._kv_flock():
             self.save_blob(self.KV_MANIFEST_NS, key_hex, blob)
             idx = self._kv_index()
@@ -364,6 +365,66 @@ class StorageManager:
 
     def kv_manifest_load(self, key_hex: str) -> Optional[bytes]:
         return self.load_blob(self.KV_MANIFEST_NS, key_hex)
+
+    def kv_orphan_sweep(self, live_pids=(), grace_s: float = 60.0
+                        ) -> Dict[str, int]:
+        """Mark-and-sweep over the kvpages blob namespace (ROADMAP follow-on
+        (k)): manifest pruning deletes manifest blobs but leaves their page
+        blobs, because pages are content-addressed and may be shared with
+        live manifests. The sweep MARKS every page listed by a surviving
+        manifest plus the caller's ``live_pids`` (an iterable, or a callable
+        evaluated under the manifest lock so the liveness snapshot is as
+        fresh as the index read -- the in-RAM page table covers spilled
+        contexts and resident prefixes whose pages were flushed but are in
+        no manifest), then deletes every other blob in the namespace.
+
+        The manifest lock alone is NOT enough against a concurrent
+        ``persist_prefix``: page blobs are flushed BEFORE the manifest write
+        takes the lock, so a just-flushed page can be in no manifest and no
+        table yet. ``grace_s`` NARROWS that window to pathological stalls
+        (unreferenced blobs younger than the grace period are skipped; blob
+        writes are tmp+rename, so mtime is trustworthy) -- a sibling
+        process paused for longer than the grace period between its flush
+        and its manifest write can still lose those pages, which is why the
+        store-level caller documents "sweep from the root-owning kernel or
+        with siblings quiesced". Blob filenames are derived through
+        ``_blob_path`` so mark and write share one naming scheme. Returns
+        {"swept", "kept", "recent", "live_pids"}."""
+        with self._kv_lock, self._kv_flock():
+            pids = live_pids() if callable(live_pids) else live_pids
+            live = {str(p) for p in pids}
+            for key in list(self._kv_index()):
+                blob = self.load_blob(self.KV_MANIFEST_NS, key)
+                if blob is None:
+                    continue
+                try:
+                    man = pickle.loads(blob)
+                except Exception:  # noqa: BLE001 -- a torn manifest marks nothing
+                    continue
+                live.update(pid for pid, *_ in man.get("pages", ()))
+            names = {os.path.basename(self._blob_path(self.KV_PAGES_NS, pid))
+                     for pid in live}
+            d = self._abs(os.path.join(".blobs", self.KV_PAGES_NS))
+            swept = kept = recent = 0
+            now = time.time()
+            if os.path.isdir(d):
+                for fn in os.listdir(d):
+                    if fn.endswith(".tmp"):
+                        continue
+                    if fn in names:
+                        kept += 1
+                        continue
+                    p = os.path.join(d, fn)
+                    try:
+                        if now - os.path.getmtime(p) < grace_s:
+                            recent += 1
+                            continue
+                        os.remove(p)
+                        swept += 1
+                    except OSError:
+                        continue   # raced with another sweep/writer
+            return {"swept": swept, "kept": kept, "recent": recent,
+                    "live_pids": len(live)}
 
     def _kv_index(self) -> Dict[str, int]:
         blob = self.load_blob(self.KV_MANIFEST_NS, self._KV_INDEX_KEY)

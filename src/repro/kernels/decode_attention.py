@@ -7,11 +7,21 @@
 * ``decode_attention`` -- the C == 1 specialization (the serve_step hot loop),
   expressed through the same kernel.
 
+Mixed prefill+decode batches: per-row ``q_lens`` makes one dispatch carry
+prefill rows (q_len == C), decode rows (q_len == 1 -- a degenerate chunk at
+the row's current position) and inactive rows (q_len == 0) together. Work is
+skipped per row: q blocks at or beyond a row's q_len are dead, and kv blocks
+are bounded by the row's own valid end (``q_offset + q_len``), so a decode
+row riding in a C=128 chunk dispatch costs one row's context, not the
+chunk's maximum.
+
 Grid: (batch, q_heads, num_q_blocks, num_kv_blocks); kv dimension sequential
 with online softmax carried in VMEM scratch. KV blocks entirely above the
 causal diagonal for a sequence -- and q blocks entirely beyond its valid
 chunk length -- are skipped, so FLOPs scale with the *actual* context length,
-not the cache allocation.
+not the cache allocation. Fully-skipped q blocks (rows >= q_len) finalize to
+zeros; rows beyond q_len inside a live block produce garbage (callers mask
+their K/V writes and ignore their logits either way).
 """
 from __future__ import annotations
 
@@ -44,7 +54,11 @@ def _chunk_kernel(off_ref, qlen_ref, q_ref, k_ref, v_ref, o_ref,
     q_len = qlen_ref[0]                     # valid rows in this chunk
     q_first = q_off + qi * bq               # absolute position of block row 0
     k_first = ki * bk
-    live = (k_first <= q_first + bq - 1) & (qi * bq < q_len)
+    # per-row block skip: the block's last VALID row position bounds the kv
+    # span, so a q_len==1 decode row in a wide chunk pays its own context,
+    # not the chunk's maximum; blocks wholly past q_len are dead
+    q_last_valid = q_off + jnp.minimum((qi + 1) * bq, q_len) - 1
+    live = (k_first <= q_last_valid) & (qi * bq < q_len)
     if window:
         live &= (k_first + bk - 1) > (q_first - window)
 
@@ -82,7 +96,10 @@ def chunk_attention(q, k_cache, v_cache, q_offsets, q_lens=None, *,
     """q: [B, C, H, hd]; caches [B, S, K, hd]; q_offsets [B] (absolute
     position of each sequence's chunk row 0; the chunk's own K/V must already
     be written into the cache). q_lens [B] optionally gives the valid rows
-    per chunk (block-skip hint; padded rows produce garbage either way).
+    per chunk: q blocks at or past a row's q_len are skipped (zeros) and kv
+    blocks are bounded by the row's valid end, so mixed batches of prefill
+    (q_len == C), decode (q_len == 1) and inactive (q_len == 0) rows each pay
+    their own cost. Rows past q_len inside a live q block are garbage.
     Returns [B, C, H, hd]."""
     B, C, H, hd = q.shape
     _, S, K, _ = k_cache.shape

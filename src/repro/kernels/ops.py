@@ -48,7 +48,10 @@ def flash_attention(q, k, v, *, q_offset=0, window=0, q_offsets=None,
 def chunk_attention(q, k_cache, v_cache, q_offsets, q_lens=None, *, window=0,
                     backend=None, **kw):
     """Chunked-prefill attention: q [B, C, H, hd] at per-sequence offsets
-    against a contiguous KV cache (prefix+chunk causal mask)."""
+    against a contiguous KV cache (prefix+chunk causal mask). Per-row
+    ``q_lens`` admits mixed batches -- prefill (q_len == C), decode
+    (q_len == 1) and inactive (q_len == 0) rows in ONE dispatch, each
+    paying only its own q/kv blocks."""
     b = backend or default_backend()
     if b == "jnp":
         return _ref.chunk_attention_ref(q, k_cache, v_cache, q_offsets,

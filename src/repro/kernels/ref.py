@@ -46,8 +46,11 @@ def chunk_attention_ref(q, k_cache, v_cache, q_offsets, q_lens=None, *,
                         window=0):
     """q: [B, C, H, hd] (chunk of new tokens, row i of sequence b at absolute
     position q_offsets[b] + i); caches [B, S, K, hd] with the chunk's K/V
-    already written. Prefix+chunk causal mask; q_lens is accepted for
-    signature parity with the kernel (padded rows are garbage either way)."""
+    already written. Prefix+chunk causal mask. q_lens [B] marks the valid
+    rows per chunk (mixed prefill/decode/inactive batches): rows at or past
+    a sequence's q_len are zeroed, mirroring the kernel's fully-skipped q
+    blocks (compare against the kernel with block_q=1 for bit-level
+    agreement on the dead rows)."""
     B, C, H, hd = q.shape
     S = k_cache.shape[1]
     k = _broadcast_kv(k_cache, H)
@@ -61,7 +64,12 @@ def chunk_attention_ref(q, k_cache, v_cache, q_offsets, q_lens=None, *,
         mask &= kpos > (qpos[:, :, None] - window)
     s = jnp.where(mask[:, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p,
+                     v.astype(jnp.float32)).astype(q.dtype)
+    if q_lens is not None:
+        valid = jnp.arange(C)[None, :] < q_lens[:, None]         # [B, C]
+        out = jnp.where(valid[:, :, None, None], out, 0)
+    return out
 
 
 def decode_attention_ref(q, k_cache, v_cache, seq_lens, *, window=0):

@@ -168,7 +168,7 @@ class KVPageStore:
             "dedup_saved_bytes": 0, "released_handles": 0, "freed_pages": 0,
             "retired_pages": 0, "demotions_host": 0, "demotions_disk": 0,
             "promotions": 0, "persisted_entries": 0, "rehydrated_entries": 0,
-            "device_rejections": 0,
+            "device_rejections": 0, "gc_swept_blobs": 0, "gc_runs": 0,
         }
 
     # -- layouts -----------------------------------------------------------------
@@ -264,8 +264,8 @@ class KVPageStore:
         # pages: blobs are content-addressed and shared by identity, so a
         # persisted manifest in another process (or a retired durable page
         # re-put as non-durable) may still list this pid -- deleting here
-        # would poison its re-hydration. Orphan blob GC is ROADMAP
-        # follow-on (k) (mark-and-sweep over surviving manifests).
+        # would poison its re-hydration. ``gc_orphan_blobs`` reclaims the
+        # unreferenced ones (mark-and-sweep over surviving manifests).
         if page.tier == "device":
             self.device_pager.release(page.pid)
             self._device_bytes -= page.nbytes
@@ -571,6 +571,37 @@ class KVPageStore:
         self.stats["rehydrated_entries"] += 1
         return PagedPrefixEntry(man["prompt"], man["seq_len"], handle,
                                 man["logits"], man["origin"])
+
+    def gc_orphan_blobs(self, grace_s: float = 60.0) -> Dict[str, int]:
+        """Reclaim orphan page blobs (ROADMAP follow-on (k)): manifest
+        pruning (FIFO past ``max_manifests``) deletes manifest blobs but
+        must leave their page blobs in place -- a page may be shared with a
+        live manifest. This mark-and-sweep walks the SURVIVING manifests
+        (under the cross-process manifest lock) plus this process's in-RAM
+        page table -- which keeps disk-tier pages of live handles (spilled
+        contexts, demoted prefix entries) out of the sweep even when no
+        manifest lists them. The table snapshot is taken by a callback
+        UNDER the manifest lock (no stale-snapshot window vs this process's
+        own writers), and unreferenced blobs younger than ``grace_s`` are
+        skipped -- a page mid-persist or mid-demote (flushed, not yet in a
+        manifest or re-listed) is by construction recent, so it survives.
+
+        Caveat: another process's un-persisted spilled contexts older than
+        the grace period are not visible here; run the sweep from the
+        kernel that owns the storage root, or only when sibling processes
+        are quiesced."""
+        if self.storage is None:
+            return {"swept": 0, "kept": 0, "recent": 0, "live_pids": 0}
+
+        def _live():
+            with self.table.lock:
+                return [p.pid for p in self.table.pages()]
+
+        res = self.storage.kv_orphan_sweep(_live, grace_s=grace_s)
+        with self.table.lock:
+            self.stats["gc_swept_blobs"] += res["swept"]
+            self.stats["gc_runs"] += 1
+        return res
 
     # -- queries -------------------------------------------------------------------
     def page_origins(self, handle: PagedKV) -> List[Optional[int]]:

@@ -157,23 +157,27 @@ def _attn_block(q, k, v, q_pos, kv_pos, scale, window):
     return out.reshape(B, sq, H, hd).astype(q.dtype)
 
 
-def chunk_attention(q, k_cache, v_cache, q_offsets, *, window: int = 0,
-                    use_kernel: bool = False):
+def chunk_attention(q, k_cache, v_cache, q_offsets, *, q_lens=None,
+                    window: int = 0, use_kernel: bool = False):
     """Prefix+chunk causal attention (chunked prefill): query row i of
     sequence b sits at absolute position ``q_offsets[b] + i`` and attends to
     cache positions ``0 .. q_offsets[b] + i`` (optionally sliding-window).
     The chunk's own K/V must already be written into the cache
     (cache_write_chunk), so the prefix and the chunk share one fused pass.
 
-    q: [B, C, H, hd]; caches: [B, S, K, hd]; q_offsets: [B] int32.
-    Returns [B, C, H, hd]. Rows whose chunk is shorter than C produce
-    garbage at the padded query positions (mask their K/V writes instead).
-    The Pallas kernel (kernels/decode_attention.chunk_attention) is the TPU
-    hot path; this is the jnp fallback with identical semantics.
+    q: [B, C, H, hd]; caches: [B, S, K, hd]; q_offsets, q_lens: [B] int32.
+    Returns [B, C, H, hd]. ``q_lens`` marks each row's valid chunk length,
+    which is what lets ONE dispatch mix prefill rows (q_len == C), decode
+    rows (q_len == 1 -- a degenerate chunk at the current position) and
+    inactive rows (q_len == 0): the kernel skips dead q/kv blocks per row.
+    Rows produce garbage at query positions past q_len (mask their K/V
+    writes instead). The Pallas kernel
+    (kernels/decode_attention.chunk_attention) is the TPU hot path; this is
+    the jnp fallback with identical semantics for the valid rows.
     """
     if use_kernel:
         from repro.kernels import ops as kops
-        return kops.chunk_attention(q, k_cache, v_cache, q_offsets,
+        return kops.chunk_attention(q, k_cache, v_cache, q_offsets, q_lens,
                                     window=window)
     B, C, H, hd = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
@@ -275,12 +279,20 @@ def cache_write_chunk(cache, new, offsets, lengths):
     """Write a chunk of tokens per sequence into a [B, S, K, hd] cache:
     ``new[b, :lengths[b]]`` lands at ``cache[b, offsets[b] : offsets[b] +
     lengths[b]]``. Rows with ``lengths[b] == 0`` are untouched bit-for-bit,
-    so chunked prefill can share a batch with decoding/idle slots. Expressed
+    so one chunk dispatch can mix prefill, decode (C == 1: the degenerate
+    chunk the unified serve path decodes through) and idle rows. Expressed
     as a masked gather, not a scatter, for the same GSPMD reason as
     cache_write_token. cache: [B, S, K, hd]; new: [B, C, K, hd];
     offsets, lengths: [B] int32."""
     S, C = cache.shape[1], new.shape[1]
     pos = jnp.arange(S)[None, :]                       # [1, S]
+    if C == 1:
+        # single-token chunk: the source row is new[:, 0] everywhere, so the
+        # full-width gather below would only materialize copies --
+        # cache_write_token's broadcast form with the length mask folded in
+        hit = (pos == offsets[:, None]) & (lengths[:, None] > 0)
+        return jnp.where(hit[:, :, None, None], new.astype(cache.dtype),
+                         cache)
     idx = pos - offsets[:, None]                       # chunk-relative index
     hit = (idx >= 0) & (idx < lengths[:, None])        # [B, S]
     src = jnp.take_along_axis(new, jnp.clip(idx, 0, C - 1)[:, :, None, None],

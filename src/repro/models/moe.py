@@ -124,7 +124,11 @@ class MoETransformer(DenseTransformer):
 
     def _ffn(self, blk, x, *, infer: bool = False):
         """Expert-MLP feed-forward half; lets DenseTransformer.prefill_chunk
-        drive MoE layers unchanged (aux loss is a training-only signal)."""
+        drive MoE layers unchanged (aux loss is a training-only signal) --
+        including mixed prefill+decode dispatches, where a decoding slot is a
+        length-1 chunk row: ``infer_dropless`` routing is per-token, so a
+        token's expert outputs are independent of the other rows' lengths
+        (what keeps mixed batches bit-identical to decode_step)."""
         x, _ = self._mlp_part(blk, x, infer=infer)
         return x
 

@@ -68,6 +68,7 @@ class RecurrentGemma:
     # chunked prefill resumes from carried RG-LRU/conv state and the rolling
     # buffer, so a fresh prompt's rows must be reset before its first chunk
     stateful_prefill = True
+    reset_fresh_rows = True
 
     def __init__(self, cfg):
         self.cfg = cfg
@@ -311,12 +312,16 @@ class RecurrentGemma:
 
     # -- chunked prefill ----------------------------------------------------------
     def prefill_chunk(self, params, tokens, cache, *, q_offset, lengths,
-                      image_embeds=None, kv_width=None):
+                      image_embeds=None, image_mask=None, kv_width=None):
         """Chunked prefill resuming from carried state: RG-LRU h / conv
         carries and the rolling attention buffer in ``cache`` hold everything
         before position ``q_offset[b]``; this call consumes ``lengths[b]``
-        more tokens. Rows with ``lengths[b] == 0`` keep all state untouched.
-        kv_width is accepted for interface parity; the rolling buffer is
+        more tokens. A decoding slot is a ``lengths[b] == 1`` row at its
+        current position (the rolling-buffer merge then writes exactly the
+        slot ``position % Wn`` a decode step would); rows with
+        ``lengths[b] == 0`` keep all state untouched -- the per-model-leaf
+        guard where rolling buffers and recurrent carries wrap. kv_width /
+        image_mask are accepted for interface parity; the rolling buffer is
         already bounded by the attention window, so there is nothing to
         narrow."""
         cfg = self.cfg

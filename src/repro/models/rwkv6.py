@@ -98,6 +98,7 @@ class RWKV6:
     # chunked prefill resumes from carried wkv/shift state, so a fresh
     # prompt's rows must be zeroed before its first chunk
     stateful_prefill = True
+    reset_fresh_rows = True
 
     def __init__(self, cfg):
         self.cfg = cfg
@@ -184,7 +185,8 @@ class RWKV6:
             outs.append(x + xx * mix)
         return outs
 
-    def _time_mix(self, tm, x, xx, wkv_state, *, decode: bool, mask=None):
+    def _time_mix(self, tm, x, xx, wkv_state, *, decode: bool, mask=None,
+                  wkv_chunk: int = CHUNK):
         cfg = self.cfg
         H, hd = self.H, self.hd
         B, T, d = x.shape
@@ -209,7 +211,8 @@ class RWKV6:
             out, wkv_state = wkv_step(r[:, 0], k[:, 0], v[:, 0], w[:, 0], u, wkv_state)
             out = out[:, None]
         else:
-            out, wkv_state = wkv_chunked(r, k, v, w, u, wkv_state)
+            out, wkv_state = wkv_chunked(r, k, v, w, u, wkv_state,
+                                         chunk=wkv_chunk)
         out = out.reshape(B, T, d)
         out = _group_norm(out, tm["gn_g"], tm["gn_b"], H)
         return (out.astype(x.dtype) * g) @ tm["wo"], wkv_state
@@ -228,12 +231,14 @@ class RWKV6:
              x[:, :-1]], axis=1)
         return prev - x
 
-    def _layer(self, blk, x, state, *, decode: bool, mask=None, lengths=None):
+    def _layer(self, blk, x, state, *, decode: bool, mask=None, lengths=None,
+               wkv_chunk: int = CHUNK):
         cfg = self.cfg
         h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
         xx = self._shift(h, state.get("shift_t"))
         tmo, wkv = self._time_mix(blk["tm"], h, xx, state["wkv"],
-                                  decode=decode, mask=mask)
+                                  decode=decode, mask=mask,
+                                  wkv_chunk=wkv_chunk)
         x = x + tmo
         h2 = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
         xx2 = self._shift(h2, state.get("shift_c"))
@@ -323,18 +328,26 @@ class RWKV6:
         return cache, last @ params["head"]
 
     def prefill_chunk(self, params, tokens, cache, *, q_offset, lengths,
-                      image_embeds=None, kv_width=None):
+                      image_embeds=None, image_mask=None, kv_width=None):
         """Chunked prefill resuming from carried state: the per-layer wkv
         state and token-shift carries in ``cache`` summarize everything before
         this chunk (RWKV has no positional encoding, so ``q_offset`` only
         participates in seq_lens bookkeeping; the O(1) state gives kv_width
-        nothing to narrow). Rows with ``lengths[b] == 0`` keep wkv/shift
-        state untouched bit-for-bit."""
+        nothing to narrow; image args are interface parity). A decoding slot
+        is a ``lengths[b] == 1`` row (single-element wkv chunk == wkv_step);
+        rows with ``lengths[b] == 0`` keep wkv/shift state untouched
+        bit-for-bit. Chunks narrower than the fp32-safe CHUNK window run
+        unpadded at their own width (same math, fewer wasted positions --
+        a C == 1 decode dispatch costs one token, not 32)."""
         cfg = self.cfg
         B, T = tokens.shape
-        pad = (-T) % CHUNK
-        if pad:
-            tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+        if T < CHUNK:
+            wkv_chunk = T        # single narrow chunk, no pad
+        else:
+            wkv_chunk = CHUNK
+            pad = (-T) % CHUNK
+            if pad:
+                tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
         x = params["embed"][tokens].astype(cfg.dtype)
         valid = jnp.arange(tokens.shape[1])[None] < lengths[:, None]
         upd = (lengths > 0)[:, None]
@@ -343,7 +356,7 @@ class RWKV6:
             blk, wkv, st, sc = xs
             state = {"wkv": wkv, "shift_t": st, "shift_c": sc}
             x, ns = self._layer(blk, x, state, decode=False, mask=valid,
-                                lengths=lengths)
+                                lengths=lengths, wkv_chunk=wkv_chunk)
             # lengths == 0 rows: the shift carry would read position 0 of a
             # fully-padded chunk -- keep the previous carry instead (wkv and
             # conv-free state are already no-ops under the all-pad mask)

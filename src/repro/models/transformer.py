@@ -57,6 +57,10 @@ class DenseTransformer:
     def __init__(self, cfg):
         self.cfg = cfg
         self.is_vlm = cfg.family == "vlm" and cfg.cross_attn_every > 0
+        # VLM rows carry per-conversation frontend K/V (xk/xv) across chunks,
+        # so a fresh prompt must start from a pristine row (zero image K/V =
+        # "no image") even though the self-attention cache needs no reset
+        self.reset_fresh_rows = self.is_vlm
         if self.is_vlm:
             # num_layers counts self + cross layers (llama-3.2-vision: 100 =
             # 80 self + 20 cross). Super-block = (every-1) self + 1 cross.
@@ -276,22 +280,30 @@ class DenseTransformer:
 
     # -- chunked prefill -------------------------------------------------------
     def prefill_chunk(self, params, tokens, cache, *, q_offset, lengths,
-                      image_embeds=None, kv_width=None):
-        """Batched chunked prefill: consume chunk ``tokens`` [B, C] with row b
-        at absolute positions ``q_offset[b] .. q_offset[b] + lengths[b] - 1``,
-        attending over the existing KV prefix (cache positions < q_offset[b])
-        plus the chunk itself. Rows with ``lengths[b] == 0`` are a strict
-        no-op (cache, seq_lens and K/V preserved bit-for-bit), so one chunk
-        dispatch can share the batch with slots that are idle or decoding.
+                      image_embeds=None, image_mask=None, kv_width=None):
+        """Batched chunked prefill AND decode in one dispatch: consume chunk
+        ``tokens`` [B, C] with row b at absolute positions
+        ``q_offset[b] .. q_offset[b] + lengths[b] - 1``, attending over the
+        existing KV prefix (cache positions < q_offset[b]) plus the chunk
+        itself. A decoding slot is simply a ``lengths[b] == 1`` row at its
+        current position (bit-identical to ``decode_step``), and rows with
+        ``lengths[b] == 0`` are a strict no-op (cache, seq_lens and K/V
+        preserved bit-for-bit) -- this per-row mask is what lets one
+        scheduler step run prefill chunks, decode tokens and idle slots as
+        ONE model dispatch, with no separate decode-step keep-guard.
 
         q_offset, lengths: [B] int32 (q_offset is only read where
         lengths > 0). kv_width (static) bounds every sequence's context after
         this chunk (max q_offset+lengths <= kv_width): K/V writes and
         attention run on a [.., :kv_width] view of the cache, so chunk cost
-        scales with the actual context, not the cache allocation. Returns
-        (cache, last_logits) where last_logits[b] is the logits at the
-        chunk's final valid position (garbage when lengths[b] == 0 --
-        callers keep the logits of the finishing chunk).
+        scales with the actual context, not the cache allocation.
+        image_mask [B] bool marks which rows' frontend (image) K/V to
+        recompute from ``image_embeds`` -- rows outside the mask (text
+        prompts, decoding slots) keep their cached xk/xv, so VLM prompts can
+        ride in mixed chunk batches. Returns (cache, last_logits) where
+        last_logits[b] is the logits at the chunk's final valid position
+        (garbage when lengths[b] == 0 -- callers keep the logits of the
+        finishing chunk).
         """
         cfg = self.cfg
         B, C = tokens.shape
@@ -306,7 +318,7 @@ class DenseTransformer:
             vw = vc[:, :kv_width] if narrow else vc
             kw = L.cache_write_chunk(kw, k, q_offset, lengths)
             vw = L.cache_write_chunk(vw, v, q_offset, lengths)
-            o = L.chunk_attention(q, kw, vw, q_offset,
+            o = L.chunk_attention(q, kw, vw, q_offset, q_lens=lengths,
                                   use_kernel=cfg.use_kernel)
             if narrow:
                 kc = jax.lax.dynamic_update_slice_in_dim(kc, kw, 0, axis=1)
@@ -317,7 +329,10 @@ class DenseTransformer:
             return self._ffn(blk, x, infer=True), kc, vc
 
         if self.is_vlm:
-            upd = (lengths > 0)[:, None, None, None]
+            has_img = lengths > 0
+            if image_mask is not None:
+                has_img &= image_mask
+            upd = has_img[:, None, None, None]
 
             def body(x, xs):
                 blk, kc, vc, xk, xv = xs

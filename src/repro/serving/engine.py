@@ -4,13 +4,17 @@ restore) -- the TPU data plane under the AIOS kernel's LLM core.
 Fixed decode-slot batch: ``max_slots`` sequences decode together in one jit'd
 step (shape-stable, no recompiles). Admission is *batched chunked prefill*:
 every newly admitted sequence (and every prefix-cache suffix extension) joins
-a per-engine prefill queue, and each ``prefill_step`` consumes one fixed-size
-token chunk for ALL queued sequences in a single XLA dispatch directly into
-the decode cache (per-slot position offsets; rows not being prefilled are
-preserved bit-for-bit). Prefill chunks interleave with decode steps, so a
-burst of long prompts never stalls running generations. Preemption extracts a
-slot's cache slice to host memory (a ContextSnapshot -- the paper's
-logits-based context) and frees the slot.
+a per-engine prefill queue. In the default UNIFIED mode (``serve_step``),
+every scheduler tick is ONE model dispatch: queued prefill jobs consume a
+token chunk, every decoding slot rides in the same batch as a length-1 chunk
+row at its current position (decode is the degenerate chunk), and untouched
+slots are length-0 rows that ``prefill_chunk``'s per-row mask preserves
+bit-for-bit -- so the separate decode dispatch AND its whole-tree
+inactive-row keep-guard are gone. The legacy interleaved pair (one chunk
+dispatch, then one guarded decode dispatch) remains as ``mixed_step=False``
+-- the differential baseline the equivalence harness compares against.
+Preemption extracts a slot's cache slice to host memory (a ContextSnapshot
+-- the paper's logits-based context) and frees the slot.
 
 Sampling invariants (what makes context switch bit-exact, paper Table 7):
   * every sequence has its own PRNG key; draw #n uses fold_in(key, n),
@@ -102,14 +106,18 @@ class _Slot:
 class _PendingPrefill:
     """One queued chunked-prefill job: feed tokens[done:] into `slot` (the
     cache already holds the first `done` positions -- 0 for a fresh prompt,
-    the restored prefix length for a prefix-cache suffix extension)."""
-    __slots__ = ("slot", "tokens", "done", "fresh")
+    the restored prefix length for a prefix-cache suffix extension).
+    ``image_embeds`` rides along for VLM prompts so image rows can join
+    mixed chunk batches (stacked per dispatch, masked per row)."""
+    __slots__ = ("slot", "tokens", "done", "fresh", "image_embeds")
 
-    def __init__(self, slot: int, tokens: np.ndarray, done: int, fresh: bool):
+    def __init__(self, slot: int, tokens: np.ndarray, done: int, fresh: bool,
+                 image_embeds=None):
         self.slot = slot
         self.tokens = tokens
         self.done = done
         self.fresh = fresh        # False: prefix-cache suffix extension
+        self.image_embeds = image_embeds
 
 
 class _EngineJits:
@@ -173,12 +181,39 @@ class _EngineJits:
         def prefill_chunk(params, tokens, cache, q_offset, lengths, kv):
             """Consume one token chunk for every queued sequence in a single
             dispatch, writing K/V (or recurrent state) straight into the
-            cache at per-row position offsets. Rows with lengths == 0 are
+            cache at per-row position offsets. Decoding slots are length-1
+            rows at their current position; rows with lengths == 0 are
             preserved bit-for-bit. `kv` (static) bounds the live context so
             attention/write cost tracks actual positions, not max_len."""
             return model.prefill_chunk(params, tokens, cache,
                                        q_offset=q_offset, lengths=lengths,
                                        kv_width=kv)
+
+        @functools.partial(jax.jit, static_argnames=("kv",))
+        def mixed_decode(params, tokens, cache, active_mask, kv):
+            """Pure-decode tick of the unified serve path: every active slot
+            is a length-1 chunk row at its own ``seq_lens`` position,
+            inactive slots are length-0 rows that prefill_chunk's per-row
+            mask preserves bit-for-bit -- the legacy decode program's
+            whole-tree keep-guard, for free. Shape-stable ([max_slots]
+            tokens, static kv bucket), so the host never syncs to build a
+            batch: token routing happens device-side."""
+            toks = jnp.where(active_mask, tokens, 0)[:, None]
+            return model.prefill_chunk(
+                params, toks, cache, q_offset=cache["seq_lens"],
+                lengths=active_mask.astype(jnp.int32), kv_width=kv)
+
+        @functools.partial(jax.jit, static_argnames=("kv",))
+        def prefill_chunk_img(params, tokens, cache, q_offset, lengths,
+                              image_embeds, image_mask, kv):
+            """Chunk dispatch with stacked frontend embeddings: rows flagged
+            in image_mask recompute their image K/V from their row of the
+            stack; text and decode rows keep their cached (or freshly
+            zeroed) xk/xv -- what folds VLM prompts into mixed batches."""
+            return model.prefill_chunk(params, tokens, cache,
+                                       q_offset=q_offset, lengths=lengths,
+                                       image_embeds=image_embeds,
+                                       image_mask=image_mask, kv_width=kv)
 
         def gather_rows(cache, idx):
             """Compact the rows being prefilled into a small batch: the chunk
@@ -216,6 +251,8 @@ class _EngineJits:
         self.insert = jax.jit(insert)
         self.extract = jax.jit(extract)
         self.prefill_chunk = prefill_chunk
+        self.prefill_chunk_img = prefill_chunk_img
+        self.mixed_decode = mixed_decode
         self.gather_rows = jax.jit(gather_rows)
         self.scatter_rows = jax.jit(scatter_rows)
         self.reset_rows = jax.jit(reset_rows)
@@ -273,13 +310,19 @@ class ServingEngine:
                  page_size: int = 16, hbm_pages: Optional[int] = None,
                  params=None, prefix_cache=None, serial_prefill: bool = False,
                  prefill_chunk_cap: Optional[int] = None, engine_id: int = 0,
-                 page_store=None):
+                 page_store=None, mixed_step: Optional[bool] = None):
         self.cfg = cfg
         self.engine_id = engine_id   # pool position; tags prefix-cache
                                      # entries for affinity routing
         self.serial_prefill = serial_prefill   # True: legacy one-sequence-
                                                # per-XLA-call prefill (the
                                                # baseline bench_prefill beats)
+        # unified mixed prefill+decode dispatch: ONE model call per scheduler
+        # tick (decode rows are length-1 chunks; no decode keep-guard).
+        # Default ON except for the serial baseline; mixed_step=False keeps
+        # the PR-2 interleaved chunk-then-decode pair for differential tests.
+        self.mixed = (not serial_prefill) if mixed_step is None \
+            else bool(mixed_step)
         self.prefill_chunk_cap = prefill_chunk_cap   # smaller cap = tighter
                                                # decode-stall bound while a
                                                # long prompt admits
@@ -323,7 +366,13 @@ class ServingEngine:
                       "prefix_hits": 0, "prefix_saved_tokens": 0,
                       "prefix_extend_tokens": 0,
                       "prefill_chunks": 0, "prefill_bursts": 0,
-                      "batched_prefill_tokens": 0}
+                      "batched_prefill_tokens": 0,
+                      # unified serve path: every model forward is counted in
+                      # model_dispatches (the 2 -> 1 per-tick signal);
+                      # mixed_steps counts unified dispatches, and
+                      # mixed_decode_rows the decode tokens they carried
+                      "model_dispatches": 0, "mixed_steps": 0,
+                      "mixed_decode_rows": 0}
         self._build_jits()
         self._init_paging_layout()
 
@@ -396,6 +445,8 @@ class ServingEngine:
         self._prefill_jit = js.prefill
         self._prefill_img_jit = js.prefill_img
         self._prefill_chunk_jit = js.prefill_chunk
+        self._prefill_chunk_img_jit = js.prefill_chunk_img
+        self._mixed_decode_jit = js.mixed_decode
         self._gather_jit = js.gather_rows
         self._scatter_jit = js.scatter_rows
         self._reset_jit = js.reset_rows
@@ -541,16 +592,11 @@ class ServingEngine:
                 self.stats["prefix_extend_tokens"] += P - hit.seq_len
                 self._enqueue_prefill(slot, prompt, done=hit.seq_len,
                                       fresh=False)
-            elif (self.serial_prefill or image_embeds is not None or
-                  self._vlm):
+            elif self.serial_prefill:
                 if hit is not None:     # looked up but not used: unpin
                     self._unpin_hit(hit)
                 # legacy path: one full single-sequence prefill per XLA call
-                # (kept as the bench_prefill baseline). FRESH VLM prompts
-                # always land here: a fresh chunked prefill would read the
-                # slot's PREVIOUS image K/V on a text-only admission -- and
-                # image embeds don't join mixed chunk batches anyway
-                # (ROADMAP follow-on)
+                # (kept as the bench_prefill baseline)
                 self._prefill_into(slot, prompt, image_embeds=image_embeds)
                 self.stats["prefills"] += 1
             elif eager and len(admitted) == 1 and not self._prefill_queue:
@@ -558,11 +604,17 @@ class ServingEngine:
                 # plain single-sequence prefill beats a padded chunk dispatch
                 # (non-eager singles still enqueue -- they can join chunks of
                 # work already in flight)
-                self._prefill_into(slot, prompt)
+                self._prefill_into(slot, prompt, image_embeds=image_embeds)
                 self.stats["prefills"] += 1
             else:
+                # fresh prompts -- VLM image prompts included -- join the
+                # chunked queue: image embeds are stacked per dispatch and
+                # masked per row, and fresh rows of models that carry state
+                # across chunks (recurrent carries, rolling buffers, image
+                # K/V) are reset batch-wise before their first chunk
                 self.stats["prefills"] += 1
-                self._enqueue_prefill(slot, prompt, done=0, fresh=True)
+                self._enqueue_prefill(slot, prompt, done=0, fresh=True,
+                                      image_embeds=image_embeds)
         if eager:
             while self._prefill_queue:
                 self.prefill_step()
@@ -571,99 +623,49 @@ class ServingEngine:
         return slots
 
     def _enqueue_prefill(self, slot: int, tokens: np.ndarray, *, done: int,
-                         fresh: bool):
-        # (fresh rows of stateful models are reset batch-wise inside
-        # prefill_step, right after the gather)
+                         fresh: bool, image_embeds=None):
+        # (fresh rows of stateful/VLM models are reset batch-wise inside the
+        # chunk dispatch, right after the gather)
         self.slots[slot].prefilling = True
         with self._lock:
             self._prefill_queue.append(
                 _PendingPrefill(slot, np.asarray(tokens, np.int32), done,
-                                fresh))
+                                fresh, image_embeds))
 
     def prefill_step(self) -> List[int]:
         """Consume ONE token chunk for every queued prefill job in a single
-        batched dispatch. The job rows are compacted (gather -> chunk ->
-        scatter) into a power-of-two batch bucket, the chunk size is the
-        smallest compiled bucket covering the longest remaining prompt (so a
-        short prompt rides along in the tail of a long one's chunk), and the
-        live-context width is bucketed statically -- dispatch cost scales
-        with the burst and its actual context, not max_slots x max_len.
-        Returns the slots whose prompt completed this call -- they are
-        activated (pending token sampled) and, when a prefix cache is
-        attached, their post-prefill state is cached for reuse."""
+        batched dispatch -- the decode-free case of ``_mixed_dispatch``
+        (small bursts are compacted gather -> chunk -> scatter into a
+        power-of-two batch bucket; the chunk size is the smallest compiled
+        bucket covering the longest remaining prompt; the live-context
+        width is bucketed statically). Returns the slots whose prompt
+        completed this call -- they are activated (pending token sampled)
+        and, when a prefix cache is attached, their post-prefill state is
+        cached for reuse."""
         with self._lock:
             jobs = list(self._prefill_queue)
         if not jobs:
             return []
-        rem = max(len(j.tokens) - j.done for j in jobs)
-        c = next((b for b in self.prefill_chunks if b >= rem),
-                 self.prefill_chunks[-1])
-        kb = 1
-        while kb < len(jobs):
-            kb *= 2
-        kb = min(kb, self.max_slots)
-        # pad the gathered batch with slots NOT being prefilled: their rows
-        # ride along as strict no-ops (lengths == 0) and scatter back
-        # bit-identical
-        idx = [j.slot for j in jobs]
-        if len(idx) < kb:
-            spare = [i for i in range(self.max_slots) if i not in set(idx)]
-            idx += spare[:kb - len(idx)]
-        buf = np.zeros((kb, c), np.int32)
-        lengths = np.zeros((kb,), np.int32)
-        offsets = np.zeros((kb,), np.int32)
-        for r, j in enumerate(jobs):
-            n = min(len(j.tokens) - j.done, c)
-            buf[r, :n] = j.tokens[j.done:j.done + n]
-            lengths[r] = n
-            offsets[r] = j.done
-        max_end = int((offsets + lengths).max())
-        kv = next(b for b in self.kv_buckets if b >= max_end)
-        idx_arr = jnp.asarray(np.asarray(idx, np.int32))
-        piece = self._gather_jit(self.cache, idx_arr)
-        if self.model.stateful_prefill:
-            fresh = np.zeros((kb,), bool)
-            for r, j in enumerate(jobs):
-                fresh[r] = j.fresh and j.done == 0
-            if fresh.any():
-                piece = self._reset_jit(piece, self._cache_b1,
-                                        jnp.asarray(fresh))
-        piece, logits = self._prefill_chunk_jit(
-            self.params, jnp.asarray(buf), piece,
-            jnp.asarray(offsets), jnp.asarray(lengths), kv=kv)
-        self.cache = self._scatter_jit(self.cache, piece, idx_arr)
-        self.stats["prefill_chunks"] += 1
-        self.stats["batched_prefill_tokens"] += int(lengths.sum())
-        fin_rows = [r for r, j in enumerate(jobs)
-                    if j.done + int(lengths[r]) >= len(j.tokens)]
-        for r, j in enumerate(jobs):
-            j.done += int(lengths[r])
-        if not fin_rows:
-            return []
-        # activate every finishing sequence with ONE batched sampling
-        # dispatch (identical per-row math to the single-sequence sampler)
-        fin_slots = [jobs[r].slot for r in fin_rows]
-        sl = jnp.asarray(fin_slots, jnp.int32)
-        pend = self._sample_all_jit(logits[jnp.asarray(fin_rows)],
-                                    self.seq_keys[sl], self.counters[sl])
-        self.next_tokens = self.next_tokens.at[sl].set(pend)
-        new_counters = []
-        for r in fin_rows:
-            s = self.slots[jobs[r].slot]
-            s.prefilling = False
-            s.counter += 1
-            new_counters.append(s.counter)
-        self.counters = self.counters.at[sl].set(
-            jnp.asarray(new_counters, jnp.int32))
-        if self.prefix_cache is not None:
-            for r in fin_rows:
-                piece1 = self._extract_jit(self.cache, jobs[r].slot)
-                self._cache_prefix(jobs[r].tokens, piece1, logits[r])
-        with self._lock:
-            done_set = set(fin_slots)
-            self._prefill_queue = [j for j in self._prefill_queue
-                                   if j.slot not in done_set]
-        return fin_slots
+        self._mixed_dispatch(jobs, decode=())
+        return [j.slot for j in jobs if j.done >= len(j.tokens)]
+
+    def _stack_images(self, rows_jobs, kb: int):
+        """Stack the image embeddings of a dispatch's jobs into one
+        [kb, T, d] buffer + per-row mask (rows without an image ride as
+        zeros and keep their cached xk/xv). Returns (None, None) when no
+        job carries an image -- the plain chunk program then leaves every
+        row's frontend K/V untouched."""
+        with_img = [(r, j) for r, j in rows_jobs if j.image_embeds is not None]
+        if not with_img:
+            return None, None
+        first = np.asarray(with_img[0][1].image_embeds)
+        T, d = first.shape[-2], first.shape[-1]
+        stack = np.zeros((kb, T, d), first.dtype)
+        mask = np.zeros((kb,), bool)
+        for r, j in with_img:
+            stack[r] = np.asarray(j.image_embeds).reshape(T, d)
+            mask[r] = True
+        return jnp.asarray(stack), jnp.asarray(mask)
 
     def warmup(self, buckets=None) -> int:
         """Pre-compile the serving program set: every (batch-bucket, chunk,
@@ -713,6 +715,26 @@ class ServingEngine:
                     _drain(slots)
                     ran += n
                 n *= 2
+            # mixed-dispatch pass (unified serve path): a runner decodes
+            # while a burst admits, so the chunk programs that carry BOTH
+            # prefill rows and length-1 decode rows compile here (the
+            # C == 1 pure-decode grid was already warmed by the drains
+            # above, which route through the mixed step)
+            if self.mixed and self.max_slots >= 2:
+                runner = self.add_sequence(prompt(lens[0]),
+                                           max_new=2 * len(lens) + 2)
+                self.step()
+                nb = min(2, self.max_slots - 1)
+                for L in lens:
+                    slots = self.add_sequences(
+                        [dict(prompt=prompt(L), max_new=1)
+                         for _ in range(nb)], eager=False)
+                    while self.prefill_pending():
+                        self.serve_step()
+                    _drain(slots)
+                    ran += nb
+                _drain([runner])
+                ran += 1
             # finishing-size pass: a chunk's FINISHING row count is not
             # bucketed (any 1..max_slots rows can complete together), and
             # the activation ops specialize on it -- without this a size-5
@@ -747,12 +769,20 @@ class ServingEngine:
 
     def _prefill_into(self, slot: int, tokens: np.ndarray, *, image_embeds=None):
         """Prefill `tokens` into `slot`'s cache and sample the pending token
-        with the slot's current counter (draw #counter)."""
+        with the slot's current counter (draw #counter). A text prompt on a
+        VLM model prefills against zero frontend embeddings: zero image K/V
+        is the "no image" context (cross-attention contributes exactly 0),
+        bit-identical to the chunked path's freshly reset xk/xv rows."""
         P = len(tokens)
         Spad = min(_bucket(P), self.max_len)
         buf = np.zeros((1, Spad), np.int32)
         buf[0, :P] = tokens
         lengths = jnp.array([P], jnp.int32)
+        cacheable = image_embeds is None
+        if image_embeds is None and self._vlm:
+            image_embeds = jnp.zeros(
+                (1, self.cfg.num_frontend_tokens, self.cfg.d_model),
+                self.cfg.dtype)
         if image_embeds is not None:
             cache1, logits = self._prefill_img_jit(
                 self.params, jnp.asarray(buf), self._cache_b1, lengths,
@@ -760,8 +790,9 @@ class ServingEngine:
         else:
             cache1, logits = self._prefill_jit(
                 self.params, jnp.asarray(buf), self._cache_b1, lengths)
-            if self.prefix_cache is not None:
-                self._cache_prefix(tokens, cache1, logits[0])
+        self.stats["model_dispatches"] += 1
+        if cacheable and self.prefix_cache is not None:
+            self._cache_prefix(tokens, cache1, logits[0])
         self._activate_slot(slot, cache1, logits[0])
 
     def _activate_slot(self, slot: int, cache1, logits_vec):
@@ -824,11 +855,13 @@ class ServingEngine:
         piece = self._extract_jit(self.cache, slot)
         self._cache_prefix(tokens, piece, jnp.asarray(self._last_logits[slot]))
 
-    # -- decode ---------------------------------------------------------------------
+    # -- decode / unified serve ------------------------------------------------------
     def step(self) -> Dict[int, int]:
         """One decode step for all active slots: feed each slot's pending
         token (appending it to `generated`) and sample the next pending.
-        Returns {slot: token appended this step}."""
+        Returns {slot: token appended this step}. In mixed mode this is the
+        degenerate C == 1 chunk dispatch -- no decode program, no whole-tree
+        keep-guard (inactive slots are length-0 rows of the per-row mask)."""
         active = self.active_slots()
         if not active:
             return {}
@@ -836,7 +869,22 @@ class ServingEngine:
         mask_np[active] = True
         mask = jnp.asarray(mask_np)
         tokens = self.next_tokens
-        self.cache, logits = self._decode_jit(self.params, tokens, self.cache, mask)
+        if self.mixed:
+            # min() with max_len: a slot decoding past the cache edge keeps
+            # stepping with its write dropped by the position mask, exactly
+            # like the legacy decode program's out-of-range token write
+            max_end = min(self.max_len,
+                          1 + max(len(self.slots[i].prompt) +
+                                  len(self.slots[i].generated)
+                                  for i in active))
+            kv = next(b for b in self.kv_buckets if b >= max_end)
+            self.cache, logits = self._mixed_decode_jit(
+                self.params, tokens, self.cache, mask, kv=kv)
+            self.stats["mixed_steps"] += 1
+            self.stats["mixed_decode_rows"] += len(active)
+        else:
+            self.cache, logits = self._decode_jit(self.params, tokens,
+                                                  self.cache, mask)
         self._last_logits = logits
         nxt = self._sample_all_jit(logits, self.seq_keys, self.counters)
         tok_host = np.asarray(tokens)
@@ -851,7 +899,176 @@ class ServingEngine:
         self.next_tokens = jnp.where(mask, nxt, self.next_tokens)
         self.counters = self.counters + mask.astype(jnp.int32)
         self.stats["decode_steps"] += 1
+        self.stats["model_dispatches"] += 1
         self.stats["tokens"] += len(active)
+        return emitted
+
+    def serve_step(self) -> Dict[int, int]:
+        """One scheduler tick. Mixed mode (the default): every queued
+        prefill job consumes a chunk AND every decoding slot advances one
+        token in a SINGLE model dispatch. Legacy mode: the PR-2 interleaved
+        pair (one chunk dispatch if work is queued, then one guarded decode
+        dispatch). Per-sequence token streams are identical either way --
+        rows are independent -- which is exactly what the serving-equivalence
+        harness asserts. Returns {slot: decode token appended this tick}."""
+        if not self.mixed:
+            if self.prefill_pending():
+                self.prefill_step()
+            return self.step()
+        with self._lock:
+            jobs = list(self._prefill_queue)
+        if not jobs:
+            return self.step()     # shape-stable device-routed decode tick
+        return self._mixed_dispatch(jobs)
+
+    def _mixed_dispatch(self, jobs: List[_PendingPrefill],
+                        decode=None) -> Dict[int, int]:
+        """The unified dispatch: prefill rows (one chunk each), decode rows
+        (length-1 chunks at their current position -- bit-identical to
+        decode_step) and untouched rows (length 0, preserved bit-for-bit by
+        prefill_chunk's per-row mask) in ONE model call. ``decode`` is the
+        set of slots that advance one token this call -- None means every
+        active slot (the serve tick); ``prefill_step`` passes () so BOTH
+        modes share this one batch-build/bookkeeping pipeline and cannot
+        drift apart.
+
+        When the participants fill most of the batch the dispatch runs on
+        the full cache -- the shape the legacy decode program also paid,
+        minus its whole-tree keep-guard; a small burst on a mostly-idle
+        engine is gathered into a power-of-two bucket so cost tracks the
+        work, not max_slots."""
+        active = self.active_slots() if decode is None else list(decode)
+        if not jobs and not active:
+            return {}
+        if jobs:
+            rem = max(len(j.tokens) - j.done for j in jobs)
+            C = next((b for b in self.prefill_chunks if b >= rem),
+                     self.prefill_chunks[-1])
+        else:
+            C = 1
+        part = [j.slot for j in jobs] + active
+        kb = 1
+        while kb < len(part):
+            kb *= 2
+        if kb >= self.max_slots:
+            kb = self.max_slots
+            idx = None                      # full batch: row == slot
+            row_of = {s: s for s in part}
+        else:
+            idx = list(part)
+            spare = [i for i in range(self.max_slots) if i not in set(idx)]
+            idx += spare[:kb - len(idx)]
+            row_of = {s: r for r, s in enumerate(part)}
+        buf = np.zeros((kb, C), np.int32)
+        lengths = np.zeros((kb,), np.int32)
+        offsets = np.zeros((kb,), np.int32)
+        fresh = np.zeros((kb,), bool)
+        job_rows = []
+        for j in jobs:
+            r = row_of[j.slot]
+            n = min(len(j.tokens) - j.done, C)
+            buf[r, :n] = j.tokens[j.done:j.done + n]
+            lengths[r] = n
+            offsets[r] = j.done
+            fresh[r] = j.fresh and j.done == 0
+            job_rows.append((r, j, n))
+        if active:          # pure-prefill dispatches never sync the device
+            pend_host = np.asarray(self.next_tokens)
+        for slot in active:
+            r = row_of[slot]
+            s = self.slots[slot]
+            buf[r, 0] = pend_host[slot]
+            lengths[r] = 1
+            offsets[r] = len(s.prompt) + len(s.generated)
+        max_end = min(self.max_len, int((offsets + lengths).max()))
+        kv = next(b for b in self.kv_buckets if b >= max_end)
+        if idx is None:
+            piece = self.cache
+        else:
+            idx_arr = jnp.asarray(np.asarray(idx, np.int32))
+            piece = self._gather_jit(self.cache, idx_arr)
+        if self.model.reset_fresh_rows and fresh.any():
+            piece = self._reset_jit(piece, self._cache_b1,
+                                    jnp.asarray(fresh))
+        img, imask = self._stack_images(
+            [(row_of[j.slot], j) for j in jobs], kb)
+        if img is not None:
+            piece, logits = self._prefill_chunk_img_jit(
+                self.params, jnp.asarray(buf), piece, jnp.asarray(offsets),
+                jnp.asarray(lengths), img, imask, kv=kv)
+        else:
+            piece, logits = self._prefill_chunk_jit(
+                self.params, jnp.asarray(buf), piece, jnp.asarray(offsets),
+                jnp.asarray(lengths), kv=kv)
+        if idx is None:
+            self.cache = piece
+        else:
+            self.cache = self._scatter_jit(self.cache, piece, idx_arr)
+        self.stats["model_dispatches"] += 1
+        if self.mixed:      # unified-path dispatch (legacy engines reuse
+            self.stats["mixed_steps"] += 1   # this pipeline for prefill only)
+        # prefill bookkeeping
+        fin = []
+        for r, j, n in job_rows:
+            j.done += n
+            if j.done >= len(j.tokens):
+                fin.append((r, j))
+        if jobs:
+            self.stats["prefill_chunks"] += 1
+            self.stats["batched_prefill_tokens"] += int(
+                sum(n for _, _, n in job_rows))
+        # one sampling dispatch for finishing-prefill rows AND decode rows:
+        # per-row key/counter math identical to the legacy samplers
+        sample_rows = [r for r, _ in fin] + [row_of[s] for s in active]
+        sample_slots = [j.slot for _, j in fin] + active
+        emitted: Dict[int, int] = {}
+        if sample_rows:
+            sl = jnp.asarray(sample_slots, jnp.int32)
+            rows_arr = jnp.asarray(sample_rows, jnp.int32)
+            picked = logits[rows_arr]
+            pend = self._sample_all_jit(picked, self.seq_keys[sl],
+                                        self.counters[sl])
+            self.next_tokens = self.next_tokens.at[sl].set(pend)
+            new_counters = []
+            for _, j in fin:
+                s = self.slots[j.slot]
+                s.prefilling = False
+                s.counter += 1
+                new_counters.append(s.counter)
+            for slot in active:
+                s = self.slots[slot]
+                t = int(pend_host[slot])
+                s.generated.append(t)
+                s.counter += 1
+                new_counters.append(s.counter)
+                emitted[slot] = t
+                self.pager.grow(f"slot{slot}",
+                                len(s.prompt) + len(s.generated) + 1)
+            self.counters = self.counters.at[sl].set(
+                jnp.asarray(new_counters, jnp.int32))
+            # keep per-slot last-position logits fresh (harvest_prefix reads
+            # them), mirroring what the legacy decode dispatch kept
+            if (self._last_logits is None or
+                    self._last_logits.shape != (self.max_slots,
+                                                logits.shape[-1])):
+                self._last_logits = jnp.zeros(
+                    (self.max_slots, logits.shape[-1]), logits.dtype)
+            self._last_logits = self._last_logits.at[sl].set(picked)
+        if active:
+            self.stats["decode_steps"] += 1
+            self.stats["tokens"] += len(active)
+            self.stats["mixed_decode_rows"] += len(active)
+        if self.prefix_cache is not None:
+            for r, j in fin:
+                if j.image_embeds is not None:
+                    continue   # token keys cannot name an image's K/V
+                piece1 = self._extract_jit(self.cache, j.slot)
+                self._cache_prefix(j.tokens, piece1, logits[r])
+        if fin:
+            with self._lock:
+                done_set = {j.slot for _, j in fin}
+                self._prefill_queue = [jj for jj in self._prefill_queue
+                                       if jj.slot not in done_set]
         return emitted
 
     def probe_failed_load(self, prompt) -> None:
@@ -867,6 +1084,7 @@ class ServingEngine:
                                       self._cache_b1,
                                       jnp.array([P], jnp.int32))
         jax.block_until_ready(logits)
+        self.stats["model_dispatches"] += 1
         self.stats.setdefault("failed_loads", 0)
         self.stats["failed_loads"] += 1
 
@@ -960,7 +1178,9 @@ class ServingEngine:
             ctx = np.concatenate([snap.prompt,
                                   np.asarray(snap.generated, np.int32)]) \
                 if snap.generated else snap.prompt
-            if self.serial_prefill or self._vlm:
+            # (VLM text-kind restores re-prefill against zero image K/V on
+            # both paths -- the snapshot kind does not carry embeddings)
+            if self.serial_prefill:
                 self._prefill_into(slot, ctx)
             else:
                 self._enqueue_prefill(slot, ctx, done=0, fresh=True)

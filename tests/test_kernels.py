@@ -145,6 +145,38 @@ def test_chunk_attention_one_token_equals_decode():
     np.testing.assert_allclose(dec, chk, atol=1e-6, rtol=1e-6)
 
 
+@pytest.mark.parametrize("window", [0, 24])
+def test_chunk_attention_mixed_row_lengths(window):
+    """Mixed prefill+decode batches: per-row q_lens lets one dispatch carry a
+    full prefill row (q_len == C), a decode row (q_len == 1 -- the degenerate
+    chunk) and an inactive row (q_len == 0). With block_q=1 every dead row is
+    a fully-skipped q block, so kernel output must equal the ref (which
+    zeroes rows at/past q_len) bit-for-bit across the whole tensor, and the
+    valid rows must match a q_lens-free dispatch exactly."""
+    ks = jax.random.split(jax.random.key(21), 3)
+    B, C, S, H, K, hd = 3, 16, 96, 4, 2, 16
+    q = _rand(ks[0], (B, C, H, hd), jnp.float32)
+    kc = _rand(ks[1], (B, S, K, hd), jnp.float32)
+    vc = _rand(ks[2], (B, S, K, hd), jnp.float32)
+    offs = jnp.array([10, 40, 0], jnp.int32)
+    qlens = jnp.array([C, 1, 0], jnp.int32)
+    out = ops.chunk_attention(q, kc, vc, offs, qlens, window=window,
+                              backend="interpret", block_q=1, block_k=32)
+    exp = ref.chunk_attention_ref(q, kc, vc, offs, qlens, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=TOL[jnp.float32], rtol=TOL[jnp.float32])
+    # dead rows really are zeros (skipped blocks finalize to 0)
+    assert np.all(np.asarray(out)[2] == 0)
+    assert np.all(np.asarray(out)[1, 1:] == 0)
+    # valid rows unchanged by the q_lens skip
+    base = ops.chunk_attention(q, kc, vc, offs, window=window,
+                               backend="interpret", block_q=1, block_k=32)
+    np.testing.assert_array_equal(np.asarray(out)[0], np.asarray(base)[0])
+    np.testing.assert_array_equal(np.asarray(out)[1, 0],
+                                  np.asarray(base)[1, 0])
+
+
 def test_chunk_attention_ignores_stale_cache_tail():
     """Property: output only depends on cache positions <= each query's
     absolute position (stale garbage beyond the written prefix is masked)."""

@@ -293,6 +293,94 @@ class TestKernelPaged:
 
 
 # ---------------------------------------------------------------------------
+# orphan page-blob GC (mark-and-sweep over surviving manifests)
+# ---------------------------------------------------------------------------
+class TestOrphanBlobGC:
+    LAY = "gc|64"
+
+    def _mk(self, root):
+        st = KVPageStore(page_size=16, storage=StorageManager(root),
+                         max_manifests=2)
+        st.register_layout(self.LAY, [1], [(1, 64, 2)], [np.float32])
+        return st
+
+    def _persist(self, st, seed, n=32):
+        kv = np.zeros((1, 64, 2), np.float32)
+        kv[0, :n] = np.random.default_rng(seed).normal(size=(n, 2))
+        prompt = np.random.default_rng(seed).integers(1, 99, n)
+        snap = SimpleNamespace(pages=st.put(self.LAY, [kv], seq_len=n),
+                               prompt=prompt.astype(np.int32), seq_len=n,
+                               logits=np.zeros(8, np.float32), origin=0)
+        assert st.persist_prefix(snap)
+        return snap, kv
+
+    @staticmethod
+    def _blob_count(root):
+        import os
+        d = os.path.join(root, ".blobs", "kvpages")
+        return len([f for f in os.listdir(d)
+                    if not f.endswith(".tmp")]) if os.path.isdir(d) else 0
+
+    def test_manifest_pruning_orphans_are_reclaimed(self):
+        """max_manifests=2: persisting 4 prefixes prunes the 2 oldest
+        manifests but leaves their page blobs -- the sweep reclaims exactly
+        those, and the surviving prefixes still re-hydrate bit-exactly."""
+        root = tempfile.mkdtemp(prefix="kvgc-")
+        st = self._mk(root)
+        snaps = [self._persist(st, seed) for seed in range(4)]
+        for snap, _ in snaps:
+            snap.pages.release()       # durable pages retire; blobs stay
+        before = self._blob_count(root)
+        assert before == 8             # 4 prefixes x 2 pages each
+        # default grace period: freshly written orphans are NOT swept (they
+        # could be a concurrent persist mid-flight); grace_s=0 reclaims them
+        res = st.gc_orphan_blobs()
+        assert res["swept"] == 0 and res["recent"] == 4
+        res = st.gc_orphan_blobs(grace_s=0.0)
+        assert res["swept"] == 4       # the 2 pruned prefixes' pages
+        assert res["kept"] == 4
+        assert st.stats["gc_swept_blobs"] == 4
+        assert self._blob_count(root) == 4
+        # surviving manifests re-hydrate from a fresh store on the same root
+        fresh = self._mk(root)
+        for seed in (2, 3):
+            snap, kv = snaps[seed][0], snaps[seed][1]
+            entry = fresh.rehydrate_prefix(snap.prompt)
+            assert entry is not None
+            np.testing.assert_array_equal(entry.pages.leaves()[0], kv)
+
+    def test_live_shared_pages_survive_cross_kernel_sweep(self):
+        """Cross-kernel: store A persists a prefix; store B (same root,
+        'another process') spills a context whose pages are in NO manifest
+        and also holds pages SHARED with A's manifest. B's sweep must keep
+        both -- manifest pages by the mark phase, B's spilled pages by the
+        in-RAM table -- and reclaim only a genuinely dead blob."""
+        root = tempfile.mkdtemp(prefix="kvgc2-")
+        a = self._mk(root)
+        snap_a, kv_a = self._persist(a, seed=10)
+        b = self._mk(root)
+        # B shares A's content (same bytes -> same pids) AND has private
+        # un-persisted state spilled to disk
+        shared = b.put(self.LAY, [kv_a], seq_len=32)
+        kv_b = np.zeros((1, 64, 2), np.float32)
+        kv_b[0, :16] = np.random.default_rng(11).normal(size=(16, 2))
+        private = b.put(self.LAY, [kv_b], seq_len=16)
+        assert b.demote_handle(shared) and b.demote_handle(private)
+        # a genuinely dead blob: no manifest, no table entry anywhere
+        b.storage.kv_page_save("deadbeef", b"orphan")
+        res = b.gc_orphan_blobs(grace_s=0.0)
+        assert res["swept"] == 1       # only the dead blob
+        # B's spilled private state still loads (pages promoted from disk)
+        np.testing.assert_array_equal(b.leaves(private)[0], kv_b)
+        np.testing.assert_array_equal(b.leaves(shared)[0], kv_a)
+        # and a third kernel still re-hydrates A's persisted prefix
+        c = self._mk(root)
+        entry = c.rehydrate_prefix(snap_a.prompt)
+        assert entry is not None
+        np.testing.assert_array_equal(entry.pages.leaves()[0], kv_a)
+
+
+# ---------------------------------------------------------------------------
 # control plane on page identity
 # ---------------------------------------------------------------------------
 class TestFractionalAffinity:

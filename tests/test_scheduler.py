@@ -182,7 +182,7 @@ def test_batched_step_fault_retries_inflight():
     absorbed on retry within llm_retries."""
     with make_kernel("batched") as k:
         eng = k.pool.cores[0].engine
-        original = eng.step
+        original = eng.serve_step      # the worker's per-tick entry point
         state = {"failed": False}
 
         def flaky_step():
@@ -191,7 +191,7 @@ def test_batched_step_fault_retries_inflight():
                 raise ValueError("injected decode fault")
             return original()
 
-        eng.step = flaky_step
+        eng.serve_step = flaky_step
         scs = [_llm(f"f{i}", max_new=6) for i in range(3)]
         for sc in scs:
             k.submit(sc)
@@ -299,7 +299,7 @@ def test_batched_dead_core_does_not_attract_retries():
         def always_fail():
             raise ValueError("dead core")
 
-        dead.step = always_fail
+        dead.serve_step = always_fail
         scs = [_llm(f"d{i}", max_new=6) for i in range(8)]
         for sc in scs:
             k.submit(sc)

@@ -1,0 +1,415 @@
+"""Differential serving-equivalence harness.
+
+The serving stack exposes three prefill/decode paths that must emit
+bit-identical per-sequence token streams:
+
+  * serial  -- one full single-sequence prefill per XLA call, guarded decode
+               dispatch (the pre-PR-2 baseline);
+  * chunked -- batched chunked prefill interleaved with the guarded decode
+               dispatch (the PR-2..4 path, ``mixed_step=False``);
+  * mixed   -- ONE unified dispatch per tick: prefill chunks + decode tokens
+               as length-1 chunk rows, inactive rows masked per row (this
+               PR's default).
+
+The harness generates random workloads from a pure seed -- admission bursts
+of random prompt lengths, eager and non-eager, greedy and temperature
+sampling with fixed per-sequence streams, prefix reuse (exact resubmission
+and grown-conversation suffix extension) and mid-stream migration to a twin
+engine (logits- and text-kind snapshots) -- and replays the SAME schedule
+against every {path} x {paged_kv on/off} combination on all four model
+archs, asserting token bit-equality.
+
+Deterministic seeds always run; with ``hypothesis`` installed (CI dev
+extras) a property sweep explores more seeds. Per-row chunk-mask unit tests
+and the VLM mixed-batch coverage live here too.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.configs import get_config
+from repro.memory import KVPageStore
+from repro.models import build_model
+from repro.serving import PrefixCache, ServingEngine
+
+ARCHS = ["tiny", "moonshot-v1-16b-a3b", "rwkv6-1.6b", "recurrentgemma-2b"]
+MODES = ["serial", "chunked", "mixed"]
+MAX_LEN = 96
+SLOTS = 4
+TICK_LIMIT = 4000        # safety net: a diverging while-loop fails, not hangs
+
+
+def _cfg(arch):
+    return get_config(arch) if arch == "tiny" else get_config(arch, smoke=True)
+
+
+_PARAMS = {}
+
+
+def _params(arch):
+    if arch not in _PARAMS:
+        model = build_model(_cfg(arch))
+        _PARAMS[arch], _ = model.init_params(jax.random.key(0))
+    return _PARAMS[arch]
+
+
+# ---------------------------------------------------------------------------
+# schedule generation (pure function of the seed -- no engine state leaks in)
+# ---------------------------------------------------------------------------
+
+def _make_schedule(seed, n_events=9):
+    rng = np.random.default_rng(seed)
+    temperature = float(rng.choice([0.0, 0.7]))
+    events = []
+    n_seqs = 0
+    for _ in range(n_events):
+        r = rng.random()
+        if r < 0.45 or n_seqs == 0:
+            k = int(rng.integers(1, 3))
+            reqs = []
+            for _ in range(k):
+                u = rng.random()
+                if u < 0.2 and n_seqs > 0:
+                    reqs.append(("exact", int(rng.integers(0, n_seqs))))
+                elif u < 0.45 and n_seqs > 0:
+                    suffix = rng.integers(1, 200,
+                                          int(rng.integers(2, 12)))
+                    reqs.append(("grown", int(rng.integers(0, n_seqs)),
+                                 suffix.astype(np.int32)))
+                else:
+                    toks = rng.integers(1, 200, int(rng.integers(3, 44)))
+                    reqs.append(("fresh", toks.astype(np.int32)))
+                n_seqs += 1
+            events.append(("admit", reqs, bool(rng.integers(2)),
+                           int(rng.integers(2, 9))))
+        elif r < 0.85:
+            events.append(("tick", int(rng.integers(1, 5))))
+        else:
+            events.append(("migrate", int(rng.integers(0, 10 ** 6)),
+                           str(rng.choice(["logits", "text"]))))
+    return temperature, events
+
+
+# ---------------------------------------------------------------------------
+# schedule interpreter
+# ---------------------------------------------------------------------------
+
+class _Run:
+    """Replay one schedule on one (arch, mode, paged) engine pair."""
+
+    def __init__(self, arch, mode, paged, temperature):
+        cfg = _cfg(arch)
+        self.store = KVPageStore(page_size=16, device_pages=8192) \
+            if paged else None
+        self.pc = PrefixCache()
+        kw = dict(max_slots=SLOTS, max_len=MAX_LEN, rng_seed=0,
+                  temperature=temperature, params=_params(arch),
+                  prefix_cache=self.pc, page_store=self.store,
+                  serial_prefill=(mode == "serial"),
+                  mixed_step=(False if mode == "chunked" else None))
+        self.main = ServingEngine(cfg, engine_id=0, **kw)
+        self.twin = ServingEngine(cfg, engine_id=1, **kw)
+        self.live = {}       # name -> [engine, slot]
+        self.finished = {}   # name -> (prompt ints, token list)
+        self.max_new = {}    # name -> max_new
+        self.names = []      # admission order
+        self.ticks = 0
+
+    def _reap(self):
+        for name in list(self.live):
+            eng, slot = self.live[name]
+            if not eng.is_prefilling(slot) and eng.is_done(slot):
+                eng.harvest_prefix(slot)
+                toks = eng.result(slot)
+                eng.free(slot)
+                prompt = self._prompts[name]
+                self.finished[name] = (prompt, toks)
+                del self.live[name]
+
+    def tick(self):
+        self.ticks += 1
+        if self.ticks > TICK_LIMIT:
+            raise AssertionError("schedule did not converge (tick limit)")
+        self.main.serve_step()
+        self.twin.serve_step()
+        self._reap()
+
+    def _drain_seq(self, name):
+        while name in self.live:
+            self.tick()
+
+    def _resolve_prompt(self, spec):
+        kind = spec[0]
+        if kind == "fresh":
+            return spec[1]
+        ref = self.names[spec[1]]
+        self._drain_seq(ref)
+        prompt, toks = self.finished[ref]
+        if kind == "exact":
+            return prompt
+        grown = np.concatenate(
+            [prompt, np.asarray(toks, np.int32), spec[2]])
+        return grown[:MAX_LEN - 16]       # keep prompt+max_new admissible
+
+    def run(self, events):
+        self._prompts = {}
+        for ev in events:
+            if ev[0] == "admit":
+                _, reqs, eager, max_new = ev
+                prompts = [self._resolve_prompt(spec) for spec in reqs]
+                while self.main.free_slot_count() < len(prompts):
+                    self.tick()
+                slots = self.main.add_sequences(
+                    [dict(prompt=p, max_new=max_new) for p in prompts],
+                    eager=eager)
+                for p, slot in zip(prompts, slots):
+                    name = f"s{len(self.names)}"
+                    self.names.append(name)
+                    self._prompts[name] = np.asarray(p, np.int32)
+                    self.live[name] = [self.main, slot]
+                    self.max_new[name] = max_new
+            elif ev[0] == "tick":
+                for _ in range(ev[1]):
+                    self.tick()
+            elif ev[0] == "migrate":
+                if not self.live:
+                    continue
+                name = sorted(self.live)[ev[1] % len(self.live)]
+                eng, slot = self.live[name]
+                while eng.is_prefilling(slot):
+                    self.tick()
+                    if name not in self.live:
+                        break
+                if name not in self.live:
+                    continue
+                eng, slot = self.live[name]
+                snap = eng.snapshot(slot, kind=ev[2])
+                other = self.twin if eng is self.main else self.main
+                del self.live[name]
+                while other.free_slot_count() == 0:
+                    self.tick()
+                slot2 = other.restore(snap)
+                snap.release()
+                self.live[name] = [other, slot2]
+        while self.live:
+            self.tick()
+        return {name: list(toks) for name, (_, toks) in
+                self.finished.items()}
+
+
+def _assert_equivalent(arch, seed):
+    temperature, events = _make_schedule(seed)
+    results = {}
+    for paged in (False, True):
+        for mode in MODES:
+            run = _Run(arch, mode, paged, temperature)
+            results[(mode, paged)] = run.run(events)
+            if mode == "mixed":
+                assert run.main.stats["mixed_steps"] > 0
+    ref = results[("serial", False)]
+    assert any(len(t) > 0 for t in ref.values())
+    for key, got in results.items():
+        assert got == ref, (arch, seed, temperature, key)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_equivalence_deterministic(arch, seed):
+    """{serial, chunked, mixed} x {paged on/off} emit identical streams on a
+    fixed random workload (burst sizes, prompt lengths, temperature, prefix
+    reuse, mid-stream migration all drawn from the seed)."""
+    _assert_equivalent(arch, seed)
+
+
+@settings(max_examples=3, deadline=None)
+@given(arch=st.sampled_from(ARCHS), seed=st.integers(0, 10 ** 6))
+def test_equivalence_property(arch, seed):
+    """Property sweep over random workloads (CI: hypothesis installed)."""
+    _assert_equivalent(arch, seed)
+
+
+# ---------------------------------------------------------------------------
+# per-row chunk-mask unit level (the generalized no-op invariant)
+# ---------------------------------------------------------------------------
+
+def _batch_axes(model):
+    _, logical = model.init_cache(1, 8)
+
+    def _is_label(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+    labels = jax.tree.leaves(logical, is_leaf=_is_label)
+    return [lab.index("batch") if "batch" in lab else None for lab in labels]
+
+
+def _rows(cache, axes, rows):
+    out = []
+    for leaf, ax in zip(jax.tree.leaves(cache), axes):
+        leaf = np.asarray(leaf)
+        out.append(leaf if ax is None else np.take(leaf, rows, axis=ax))
+    return out
+
+
+def _assert_rows_equal(a, b, axes, rows, ctx):
+    for i, (x, y) in enumerate(zip(_rows(a, axes, rows),
+                                   _rows(b, axes, rows))):
+        assert np.array_equal(x, y), (ctx, f"leaf {i}")
+
+
+class TestPerRowChunkMask:
+    """One chunk dispatch with lengths [C, 1, 0]: the prefill row consumes
+    its chunk, the decode row is bit-identical to decode_step, and the
+    inactive row's every cache leaf is preserved bit-for-bit -- the per-row
+    mask that replaced the decode keep-guard."""
+
+    def _setup(self, arch, B=3, P=13):
+        cfg = _cfg(arch)
+        model = build_model(cfg)
+        params = _params(arch)
+        cache, _ = model.init_cache(B, 64)
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(1, 200, (B, P)), jnp.int32)
+        cache, logits = model.prefill(params, toks, cache,
+                                      lengths=jnp.full((B,), P, jnp.int32))
+        return cfg, model, params, cache, logits, P
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_mixed_row_lengths(self, arch):
+        cfg, model, params, cache, logits, P = self._setup(arch)
+        axes = _batch_axes(model)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        cache_dec, logits_dec = model.decode_step(params, nxt, cache)
+
+        C = 8
+        rng = np.random.default_rng(1)
+        buf = np.zeros((3, C), np.int32)
+        buf[0] = rng.integers(1, 200, C)          # row 0: prefill C more
+        buf[1, 0] = int(nxt[1])                   # row 1: decode
+        lengths = np.array([C, 1, 0], np.int32)   # row 2: inactive
+        offs = np.array([P, P, 0], np.int32)
+        cache_mix, logits_mix = model.prefill_chunk(
+            params, jnp.asarray(buf), cache, q_offset=jnp.asarray(offs),
+            lengths=jnp.asarray(lengths), kv_width=None)
+
+        # decode row: logits and every cache leaf bitwise == decode_step
+        assert np.array_equal(np.asarray(logits_mix)[1],
+                              np.asarray(logits_dec)[1])
+        _assert_rows_equal(cache_mix, cache_dec, axes, [1],
+                           (arch, "decode row"))
+        # inactive row: strict no-op
+        _assert_rows_equal(cache_mix, cache, axes, [2],
+                           (arch, "inactive row"))
+        # prefill row: independent of batch composition (same chunk alone)
+        cache_solo, logits_solo = model.prefill_chunk(
+            params, jnp.asarray(buf), cache, q_offset=jnp.asarray(offs),
+            lengths=jnp.asarray(np.array([C, 0, 0], np.int32)),
+            kv_width=None)
+        assert np.array_equal(np.asarray(logits_mix)[0],
+                              np.asarray(logits_solo)[0])
+        _assert_rows_equal(cache_mix, cache_solo, axes, [0],
+                           (arch, "prefill row"))
+
+    @pytest.mark.parametrize("arch", ["recurrentgemma-2b", "rwkv6-1.6b"])
+    def test_wrap_around_rows_track_decode_step(self, arch):
+        """Rolling-buffer writes wrap modulo the window and recurrent
+        carries evolve every step -- the per-model-leaf masking must keep
+        length-1 chunk rows bitwise equal to decode_step across MULTIPLE
+        wraps (recurrentgemma smoke window = 16, run ~2.5 windows)."""
+        cfg, model, params, cache, logits, P = self._setup(arch)
+        axes = _batch_axes(model)
+        cache_chunk = cache
+        logits_chunk = logits
+        for step in range(40):
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            cache, logits = model.decode_step(params, nxt, cache)
+            nxt_c = jnp.argmax(logits_chunk, -1).astype(jnp.int32)
+            assert np.array_equal(np.asarray(nxt), np.asarray(nxt_c)), step
+            cache_chunk, logits_chunk = model.prefill_chunk(
+                params, nxt_c[:, None], cache_chunk,
+                q_offset=jnp.asarray(np.full((3,), P + step, np.int32)),
+                lengths=jnp.ones((3,), jnp.int32), kv_width=None)
+            assert np.array_equal(np.asarray(logits),
+                                  np.asarray(logits_chunk)), step
+            _assert_rows_equal(cache, cache_chunk, axes, [0, 1, 2],
+                               (arch, f"step {step}"))
+
+
+# ---------------------------------------------------------------------------
+# VLM mixed-batch coverage
+# ---------------------------------------------------------------------------
+
+class TestVLMMixedBatch:
+    """Image prompts ride in the same chunk batches as text prompts and
+    decoding slots (stacked image_embeds + per-row mask), token-identical
+    to the serial one-prompt-per-dispatch path."""
+
+    ARCH = "llama-3.2-vision-90b"
+
+    def _engines(self):
+        cfg = _cfg(self.ARCH)
+        serial = ServingEngine(cfg, max_slots=SLOTS, max_len=MAX_LEN,
+                               rng_seed=0, params=_params(self.ARCH),
+                               serial_prefill=True)
+        mixed = ServingEngine(cfg, max_slots=SLOTS, max_len=MAX_LEN,
+                              rng_seed=0, params=_params(self.ARCH))
+        return cfg, serial, mixed
+
+    @staticmethod
+    def _drain(eng, slots):
+        outs = {}
+        while len(outs) < len(slots):
+            for s in slots:
+                if s not in outs and eng.is_done(s):
+                    outs[s] = eng.result(s)
+                    eng.free(s)
+            if len(outs) < len(slots):
+                eng.serve_step()
+        return [outs[s] for s in slots]
+
+    def test_image_and_text_burst_matches_serial(self):
+        cfg, serial, mixed = self._engines()
+        rng = np.random.default_rng(5)
+        prompts = [rng.integers(1, cfg.vocab - 1, n).astype(np.int32)
+                   for n in (12, 30, 21)]
+        img = [jax.random.normal(
+            jax.random.key(9 + i),
+            (1, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16)
+            for i in range(2)]
+        reqs = [dict(prompt=prompts[0], max_new=8, image_embeds=img[0]),
+                dict(prompt=prompts[1], max_new=8),          # text-only
+                dict(prompt=prompts[2], max_new=8, image_embeds=img[1])]
+        ref = [self._drain(serial, [serial.add_sequence(**r)])[0]
+               for r in reqs]
+
+        # a runner decodes while the image+text burst admits: every tick is
+        # one dispatch carrying image rows, a text row and the decode row
+        runner_prompt = rng.integers(1, cfg.vocab - 1, 9).astype(np.int32)
+        runner_ref = self._drain(
+            serial, [serial.add_sequence(runner_prompt, max_new=12)])[0]
+        runner = mixed.add_sequence(runner_prompt, max_new=12)
+        mixed.serve_step()
+        slots = mixed.add_sequences([dict(**r) for r in reqs], eager=False)
+        outs = self._drain(mixed, slots + [runner])
+        assert outs[:3] == ref
+        assert outs[3] == runner_ref
+        assert mixed.stats["mixed_steps"] > 0
+
+    def test_text_prompt_after_image_slot_is_clean(self):
+        """A text prompt reusing a slot that held an image conversation must
+        see pristine (zero) frontend K/V, not the previous occupant's."""
+        cfg, serial, mixed = self._engines()
+        rng = np.random.default_rng(6)
+        text = rng.integers(1, cfg.vocab - 1, 18).astype(np.int32)
+        ref = self._drain(serial, [serial.add_sequence(text, max_new=6)])[0]
+        img = jax.random.normal(
+            jax.random.key(3), (1, cfg.num_frontend_tokens, cfg.d_model),
+            jnp.bfloat16)
+        dirty = mixed.add_sequence(
+            rng.integers(1, cfg.vocab - 1, 10).astype(np.int32),
+            max_new=4, image_embeds=img, eager=False)
+        self._drain(mixed, [dirty])
+        slot = mixed.add_sequence(text, max_new=6, eager=False)
+        got = self._drain(mixed, [slot])[0]
+        assert got == ref

@@ -18,6 +18,17 @@ scheduler: occupancy placement, quantum-boundary preemption only) and ON:
                 whose engine already holds the prefix (vs ~1/num_cores for
                 occupancy-only), and prefill work saved.
 
+A fourth workload exercises the multi-tenant front door (no control plane
+needed -- quota admission lives in the scheduler):
+
+  tenant     -- a hog tenant floods long best-effort generations while a
+                user tenant issues short interactive calls; run without
+                quotas and with a max_concurrent quota on the hog. Reports
+                the user tenant's p50/p90 latency in both runs (the quota
+                must not penalize bystanders), the hog's fast structured
+                rejections, and streaming TTFT vs blocking completion
+                latency for an identical call under the same load.
+
   PYTHONPATH=src python -m benchmarks.bench_control [--smoke] [--out DIR]
 """
 from __future__ import annotations
@@ -28,6 +39,7 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.common import make_aios_kernel, warm_cores
+from repro.sdk.api import AgentSession
 from repro.sdk.query import LLMQuery
 
 
@@ -166,6 +178,66 @@ def _affinity_part(control: bool, *, turns: int) -> Dict:
             "prefix_saved_tokens": saved}
 
 
+# -- part 4: multi-tenant front door ----------------------------------------------
+def _tenant_part(quota: bool, *, n_hog: int, n_user: int, hog_new: int,
+                 user_new: int) -> Dict:
+    """Hog tenant saturates the pool; user tenant wants low latency. With
+    ``quota`` a max_concurrent ceiling on the hog makes its over-quota
+    submissions fail fast at the front door instead of deepening the queue;
+    the user tenant (and the no-quota hog baseline) must be unaffected."""
+    rng = np.random.default_rng(7)
+    k = _kernel(False, quantum=32)
+    if quota:
+        k.register_tenant("hog", max_concurrent=4)
+    with k:
+        hog = AgentSession(k, "hog-agent", tenant="hog")
+        user = AgentSession(k, "user-agent", tenant="user")
+        t0 = time.monotonic()
+        hogs = [hog.submit(LLMQuery(
+                    prompt=list(map(int, rng.integers(1, 500, 10))),
+                    max_new_tokens=hog_new, slo_class="best_effort"))
+                for _ in range(n_hog)]
+        time.sleep(0.05)           # hog wave admitted; pool saturated
+        lat = []
+        for _ in range(n_user):
+            t = time.monotonic()
+            user.llm_chat(list(map(int, rng.integers(1, 500, 8))),
+                          max_new_tokens=user_new, slo_class="interactive")
+            lat.append(time.monotonic() - t)
+        # streaming vs blocking under the same residual hog load: TTFT is
+        # one decode tick away once scheduled; the blocking call pays the
+        # full generation before the caller sees anything
+        sprompt = list(map(int, rng.integers(1, 500, 8)))
+        t = time.monotonic()
+        ssc = user.llm_chat(sprompt, max_new_tokens=32,
+                            slo_class="interactive", stream=True)
+        next(ssc.stream(timeout=600))
+        ttft = time.monotonic() - t
+        ssc.join(timeout=600)
+        t = time.monotonic()
+        user.llm_chat(sprompt, max_new_tokens=32, slo_class="interactive")
+        blocking = time.monotonic() - t
+        hog_done = hog_rejected = 0
+        for sc in hogs:
+            try:
+                sc.join(timeout=600)
+                hog_done += 1
+            except RuntimeError as e:
+                assert "binding quota" in str(e)
+                hog_rejected += 1
+        wall = time.monotonic() - t0
+        usage = k.access.tenant_usage("hog")
+    return {"mode": "hog_quota" if quota else "no_quota",
+            "user_p50_s": round(_pct(lat, 0.5), 4),
+            "user_p90_s": round(_pct(lat, 0.9), 4),
+            "user_completions": n_user,
+            "hog_completed": hog_done,
+            "hog_quota_rejections": usage["quota_rejections"],
+            "stream_ttft_s": round(ttft, 4),
+            "blocking_latency_s": round(blocking, 4),
+            "wall_s": round(wall, 2)}
+
+
 def run(smoke: bool = False, quiet: bool = False) -> Dict:
     # n_bg >> pool slots (2 cores x 4): a deep best-effort backlog sits on
     # the central queue for the whole run. Occupancy-only dispatch is FIFO,
@@ -176,10 +248,13 @@ def run(smoke: bool = False, quiet: bool = False) -> Dict:
         if smoke else \
         dict(n_bg=28, n_inter=12, bg_new=80, inter_new=6, gap_s=0.2)
     turns = 6 if smoke else 10
+    ten_kw = dict(n_hog=10, n_user=6, hog_new=40, user_new=6) if smoke \
+        else dict(n_hog=16, n_user=10, hog_new=64, user_new=8)
 
     slo_rows = [_slo_part(c, **slo_kw) for c in (False, True)]
     mig_rows = [_migration_part(c) for c in (False, True)]
     aff_rows = [_affinity_part(c, turns=turns) for c in (False, True)]
+    ten_rows = [_tenant_part(q, **ten_kw) for q in (False, True)]
 
     # bit-exactness across placements: the rebalancer may move any sequence
     # anywhere; tokens must not change
@@ -188,14 +263,22 @@ def run(smoke: bool = False, quiet: bool = False) -> Dict:
     p90_gain = (off["p90_wait_interactive_s"] /
                 max(on["p90_wait_interactive_s"], 1e-9))
     tput_ratio = on["tokens_per_s"] / max(off["tokens_per_s"], 1e-9)
+    nq, q = ten_rows
     out = {
-        "rows": slo_rows + mig_rows + aff_rows,
+        "rows": slo_rows + mig_rows + aff_rows + ten_rows,
         "interactive_p90_improvement": round(p90_gain, 2),
         "tokens_per_s_ratio_on_vs_off": round(tput_ratio, 3),
         "migration_exact_match": exact,
         "migrations": mig_rows[1]["migrations"],
         "affinity_hit_rate_on": aff_rows[1]["affinity_hit_rate"],
         "affinity_hit_rate_off": aff_rows[0]["affinity_hit_rate"],
+        # quota on the hog must not penalize the user tenant (~1.0 or
+        # better -- rejections free pool capacity)
+        "tenant_user_p90_ratio_quota_vs_not": round(
+            q["user_p90_s"] / max(nq["user_p90_s"], 1e-9), 3),
+        "tenant_hog_rejections": q["hog_quota_rejections"],
+        "stream_ttft_speedup_vs_blocking": round(
+            q["blocking_latency_s"] / max(q["stream_ttft_s"], 1e-9), 2),
     }
     if not quiet:
         print(f"[control/slo]       interactive p90 "
@@ -209,6 +292,12 @@ def run(smoke: bool = False, quiet: bool = False) -> Dict:
         print(f"[control/affinity]  hit rate "
               f"{aff_rows[0]['affinity_hit_rate']} -> "
               f"{aff_rows[1]['affinity_hit_rate']}")
+        print(f"[control/tenant]    user p90 {nq['user_p90_s']}s -> "
+              f"{q['user_p90_s']}s under hog quota "
+              f"({q['hog_quota_rejections']} fast rejections, "
+              f"{q['hog_completed']}/{ten_kw['n_hog']} hog "
+              f"completed); stream TTFT {q['stream_ttft_s']}s vs blocking "
+              f"{q['blocking_latency_s']}s")
     return out
 
 

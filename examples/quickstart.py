@@ -9,41 +9,48 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.agents import FRAMEWORKS, register_builtin_tools  # noqa: E402
 from repro.core import AIOSKernel  # noqa: E402
-from repro.sdk import api  # noqa: E402
+from repro.sdk import AgentSession  # noqa: E402
 
 
 def main():
     # 1. boot the kernel: pool-wide batched scheduler (burst admission +
-    # continuous batching), 16-token quantum, one LLM core
+    # continuous batching), 16-token quantum, one LLM core; give the demo
+    # tenant a quota record + its own interactive SLO target
     kernel = AIOSKernel(arch="tiny", scheduler="batched", quantum=16,
                         engine_kw={"max_slots": 4, "max_len": 256})
     register_builtin_tools(kernel.tools)
+    kernel.register_tenant("demo-co", max_concurrent=8,
+                           slo_targets={"interactive": 0.1})
 
     with kernel:
-        # 2. raw SDK calls -- each becomes a syscall through the scheduler
-        resp = api.llm_chat(kernel, "demo", prompt=[5, 4, 3, 2, 1],
-                            max_new_tokens=8)
+        # 2. an AgentSession binds (kernel, tenant, agent) once -- every
+        # call below is a syscall carrying that identity through the
+        # scheduler's front door (quotas, SLOs, ACLs, audit log)
+        demo = AgentSession(kernel, "demo", tenant="demo-co")
+        resp = demo.llm_chat([5, 4, 3, 2, 1], max_new_tokens=8)
         print("llm_chat tokens:", resp["tokens"])
 
-        api.create_memory(kernel, "demo", "the AIOS kernel schedules syscalls")
-        hits = api.search_memories(kernel, "demo", "what schedules syscalls")
+        # streaming: tokens arrive per decode tick, bit-equal to blocking
+        sc = demo.llm_chat([5, 4, 3, 2, 1], max_new_tokens=8, stream=True)
+        print("streamed      :", [t for t in sc.stream()])
+
+        demo.create_memory("the AIOS kernel schedules syscalls")
+        hits = demo.search_memories("what schedules syscalls")
         print("memory hit:", hits["search_results"][0]["content"])
 
-        calc = api.call_tool(kernel, "demo", "calculator",
-                             {"expression": "(20-2)/3"})
+        calc = demo.call_tool("calculator", {"expression": "(20-2)/3"})
         print("calculator:", calc["result"])
 
-        # 3. burst admission: submit several agents' prompts AT ONCE -- the
-        # kernel admits the burst as one batched chunked prefill instead of
-        # one XLA prefill per agent
+        # 3. burst admission: submit several prompts AT ONCE -- the kernel
+        # admits the burst as one batched chunked prefill instead of one
+        # XLA prefill per agent
         from repro.sdk.query import LLMQuery
         eng = kernel.pool.cores[0].engine
         chunks_before = eng.stats["prefill_chunks"]
-        burst = [LLMQuery(prompt=list(range(1, 40 + 7 * i)),
-                          max_new_tokens=6).to_syscall(f"burst{i}")
+        burst = [AgentSession(kernel, f"burst{i}", tenant="demo-co").submit(
+                     LLMQuery(prompt=list(range(1, 40 + 7 * i)),
+                              max_new_tokens=6))
                  for i in range(4)]
-        for sc in burst:
-            kernel.submit(sc)
         outs = [sc.join(timeout=120) for sc in burst]
         print(f"burst of {len(burst)} admitted through "
               f"{eng.stats['prefill_chunks'] - chunks_before} "
@@ -58,6 +65,7 @@ def main():
 
         print("kernel metrics:", {k: v for k, v in kernel.metrics().items()
                                   if k in ("completed", "avg_wait")})
+        print("tenant usage:", kernel.access.tenant_usage("demo-co"))
 
 
 if __name__ == "__main__":

@@ -25,9 +25,13 @@ class BaseAgent:
     framework = "native"
 
     def __init__(self, kernel, name: str, *, max_new_tokens: int = 24,
-                 tokenizer: Optional[ToyTokenizer] = None):
+                 tokenizer: Optional[ToyTokenizer] = None,
+                 tenant: str = "default"):
         self.kernel = kernel
         self.name = name
+        # capability-style handle: every SDK call this agent makes carries
+        # (tenant, agent), which the kernel front door meters quotas against
+        self.session = api.AgentSession(kernel, name, tenant=tenant)
         self.max_new_tokens = max_new_tokens
         self.tok = tokenizer or ToyTokenizer(kernel.pool.cores[0].engine.cfg.vocab)
         self.llm_calls = 0
@@ -36,24 +40,25 @@ class BaseAgent:
     # -- SDK shortcuts -------------------------------------------------------------
     def chat(self, text: str, *, max_new_tokens: Optional[int] = None) -> Dict:
         self.llm_calls += 1
-        return api.llm_chat(self.kernel, self.name, self.tok.encode(text),
-                            max_new_tokens=max_new_tokens or self.max_new_tokens)
+        return self.session.llm_chat(
+            self.tok.encode(text),
+            max_new_tokens=max_new_tokens or self.max_new_tokens)
 
     def tool(self, tool_name: str, params: Dict[str, Any]) -> Dict:
         self.tool_calls += 1
-        return api.call_tool(self.kernel, self.name, tool_name, params)
+        return self.session.call_tool(tool_name, params)
 
     def remember(self, content: str, metadata=None) -> Dict:
-        return api.create_memory(self.kernel, self.name, content, metadata)
+        return self.session.create_memory(content, metadata)
 
     def recall(self, query: str, k: int = 3) -> Dict:
-        return api.search_memories(self.kernel, self.name, query, k)
+        return self.session.search_memories(query, k)
 
     def write(self, path: str, content: str) -> Dict:
-        return api.write_file(self.kernel, self.name, path, content)
+        return self.session.write_file(path, content)
 
     def read(self, path: str) -> Dict:
-        return api.read_file(self.kernel, self.name, path)
+        return self.session.read_file(path)
 
     # -- task entry ------------------------------------------------------------------
     def run(self, task: Dict[str, Any]) -> Dict[str, Any]:

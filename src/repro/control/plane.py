@@ -39,10 +39,14 @@ class ControlPlane:
                  preemption: bool = True, admission: bool = True,
                  rebalancer_kw: Optional[dict] = None,
                  affinity_kw: Optional[dict] = None,
-                 admission_kw: Optional[dict] = None):
+                 admission_kw: Optional[dict] = None,
+                 slo_registry=None):
         self.num_cores = num_cores
         self.bus = TelemetryBus(num_cores)
-        self.policy = policy or SLOPolicy()
+        self.policy = policy or SLOPolicy(registry=slo_registry)
+        if slo_registry is not None and self.policy.registry is None:
+            # explicit policy + registry: targets resolve per tenant first
+            self.policy.registry = slo_registry
         self.rebalancer = (Rebalancer(self.bus, **(rebalancer_kw or {}))
                            if rebalance else None)
         self.affinity = (AffinityRouter(prefix_cache, **(affinity_kw or {}))
@@ -100,7 +104,7 @@ class ControlPlane:
             self._running[core_idx][sc.pid] = self.policy.rank(sc)
 
     def on_exit(self, core_idx: int, sc, reason: str) -> None:
-        """reason: finished | suspended | migrated | fault."""
+        """reason: finished | suspended | migrated | fault | cancelled."""
         cls = getattr(sc, "slo_class", "batch")
         with self._lock:
             self._running[core_idx].pop(sc.pid, None)
@@ -108,7 +112,10 @@ class ControlPlane:
             self.stats["completions"] += 1
             total = sc.waiting_time
             self.bus.record("wait", total, cls)
-            miss = total > self.policy.targets.get(cls, float("inf"))
+            self.bus.record("tenant_wait", total,
+                            getattr(sc, "tenant_id", "default"))
+            # per-tenant target first (registry), then the class default
+            miss = total > self.policy.target(sc)
             if miss:
                 self.stats["slo_misses"] += 1
             # per-class 0/1 miss series: the admission controller acts on
@@ -265,6 +272,10 @@ class ControlPlane:
                 m[f"p50_wait_{cls}"] = self.bus.p50("wait", cls)
                 m[f"p90_wait_{cls}"] = self.bus.p90("wait", cls)
         m["interactive_miss_rate"] = round(self.interactive_miss_rate(), 3)
+        tenants = self.bus.tags("tenant_wait")
+        if tenants:
+            m["tenant_p90_wait"] = {
+                t: round(self.bus.p90("tenant_wait", t), 4) for t in tenants}
         costs = self.bus.series("migration_cost")
         if costs:
             m["migration_cost_p50"] = self.bus.p50("migration_cost")

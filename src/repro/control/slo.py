@@ -29,17 +29,47 @@ DEFAULT_TARGETS: Dict[str, float] = {
 CLASS_RANK: Dict[str, int] = {"interactive": 0, "batch": 1, "best_effort": 2}
 
 
+class SLORegistry:
+    """Per-tenant SLO target overrides (ROADMAP follow-on (d)). The access
+    manager owns one instance and populates it from ``register_tenant``; the
+    policy consults it before falling back to the class defaults, so two
+    tenants sharing a pool can buy different wait targets for the same
+    ``slo_class``."""
+
+    def __init__(self):
+        self._targets: Dict[str, Dict[str, float]] = {}
+        self._lock = threading.Lock()
+
+    def set_targets(self, tenant: str, targets: Dict[str, float]):
+        bad = set(targets) - set(CLASS_RANK)
+        if bad:
+            raise ValueError(f"unknown slo classes {sorted(bad)} "
+                             f"(known: {sorted(CLASS_RANK)})")
+        with self._lock:
+            self._targets.setdefault(tenant, {}).update(targets)
+
+    def target(self, tenant: str, slo_class: str) -> Optional[float]:
+        with self._lock:
+            return self._targets.get(tenant, {}).get(slo_class)
+
+    def tenants(self) -> List[str]:
+        with self._lock:
+            return sorted(self._targets)
+
+
 class SLOPolicy:
     """Classification + targets + the about-to-miss test."""
 
     def __init__(self, targets: Optional[Dict[str, float]] = None,
-                 preempt_at_frac: float = 0.5):
+                 preempt_at_frac: float = 0.5,
+                 registry: Optional[SLORegistry] = None):
         self.targets = dict(DEFAULT_TARGETS)
         if targets:
             self.targets.update(targets)
         # fraction of the wait target after which a still-queued syscall is
         # "about to miss" and may trigger a mid-quantum preemption
         self.preempt_at_frac = preempt_at_frac
+        self.registry = registry
 
     @staticmethod
     def classify(sc) -> str:
@@ -63,8 +93,12 @@ class SLOPolicy:
         return CLASS_RANK.get(getattr(sc, "slo_class", "batch"), 1)
 
     def target(self, sc) -> float:
-        return self.targets.get(getattr(sc, "slo_class", "batch"),
-                                self.targets["batch"])
+        cls = getattr(sc, "slo_class", "batch")
+        if self.registry is not None:
+            t = self.registry.target(getattr(sc, "tenant_id", "default"), cls)
+            if t is not None:
+                return t
+        return self.targets.get(cls, self.targets["batch"])
 
     def waited(self, sc, now: Optional[float] = None) -> float:
         q = sc.queued_time or sc.created_time

@@ -85,6 +85,13 @@ class TelemetryBus:
             d = self._events.get((kind, slo_class))
             return list(d) if d else []
 
+    def tags(self, kind: str) -> List[str]:
+        """Every tag a series kind has been recorded under (e.g. the tenants
+        with ``tenant_wait`` samples) -- lets consumers enumerate per-tenant
+        series without knowing the tenant set up front."""
+        with self._lock:
+            return sorted(tag for (k, tag) in self._events if k == kind)
+
     def p50(self, kind: str, slo_class: str = "_") -> float:
         return percentile(self.series(kind, slo_class), 0.5)
 

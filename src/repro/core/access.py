@@ -1,69 +1,243 @@
-"""Access manager (paper §3.8, Appendix A.8): privilege-group access control
-for cross-agent resources + user-intervention gate for irreversible
-operations. Access syscalls execute inline (not scheduler-dispatched,
-paper Fig. 3).
+"""Access manager (paper §3.8, Appendix A.8): the kernel's multi-tenant
+front door. Privilege-group access control for cross-agent resources, a
+user-intervention gate for irreversible operations, and — per tenant —
+quota records (concurrent syscalls, token budget, KV page budget), SLO
+target overrides, and the audit log. The scheduler calls ``admit_syscall``
+at submission; rejections fail fast naming the binding quota. Access
+syscalls execute inline (not scheduler-dispatched, paper Fig. 3).
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Set
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from repro.control.slo import SLORegistry
+from repro.core.dispatch import resolve_op, syscall_op, unknown_op
+from repro.core.syscall import DEFAULT_TENANT
 
 IRREVERSIBLE_OPS = {"delete", "overwrite", "privilege_change", "remove_memory",
                     "sto_rollback"}
 
 
+@dataclass
+class TenantQuota:
+    """Per-tenant resource ceilings; ``None`` means unlimited."""
+    max_concurrent: Optional[int] = None   # in-flight syscalls
+    token_budget: Optional[int] = None     # cumulative generated LLM tokens
+    kv_page_budget: Optional[int] = None   # KV pages reserved concurrently
+
+
+class _TenantUsage:
+    __slots__ = ("inflight", "tokens_spent", "tokens_reserved",
+                 "pages_reserved", "admitted", "quota_rejections")
+
+    def __init__(self):
+        self.inflight = 0
+        self.tokens_spent = 0      # settled from completed responses
+        self.tokens_reserved = 0   # max_new_tokens of in-flight calls
+        self.pages_reserved = 0
+        self.admitted = 0
+        self.quota_rejections = 0
+
+    def snapshot(self) -> Dict[str, int]:
+        return {s: getattr(self, s) for s in self.__slots__}
+
+
 class AccessManager:
     def __init__(self, intervention_cb: Optional[Callable[[str, str], bool]] = None):
-        # privilege group of a target agent: who may touch its resources
-        self._groups: Dict[str, Set[str]] = {}
+        # privilege group of a (tenant, target agent): who may touch its
+        # resources. Grants never cross tenants.
+        self._groups: Dict[Tuple[str, str], Set[str]] = {}
         self._lock = threading.Lock()
         # default policy: require explicit approval (deny when no callback)
         self._intervene = intervention_cb
         self.audit_log: List[Dict[str, Any]] = []
+        # tenant front door: quotas + usage + per-tenant SLO targets
+        self._quotas: Dict[str, TenantQuota] = {}
+        self._usage: Dict[str, _TenantUsage] = {}
+        self.slo_registry = SLORegistry()
 
     def _log(self, **kw):
         kw["time"] = time.time()
+        kw.setdefault("tenant", DEFAULT_TENANT)
         self.audit_log.append(kw)
 
+    # -- tenants -----------------------------------------------------------------------
+    def register_tenant(self, tenant_id: str, *,
+                        max_concurrent: Optional[int] = None,
+                        token_budget: Optional[int] = None,
+                        kv_page_budget: Optional[int] = None,
+                        slo_targets: Optional[Dict[str, float]] = None):
+        """Install (or update) a tenant's quota record and SLO targets.
+        Unregistered tenants are unlimited and bypass accounting."""
+        with self._lock:
+            self._quotas[tenant_id] = TenantQuota(
+                max_concurrent=max_concurrent, token_budget=token_budget,
+                kv_page_budget=kv_page_budget)
+            self._usage.setdefault(tenant_id, _TenantUsage())
+        if slo_targets:
+            self.slo_registry.set_targets(tenant_id, slo_targets)
+        self._log(op="register_tenant", tenant=tenant_id,
+                  quota=vars(self._quotas[tenant_id]))
+
+    def tenant_usage(self, tenant_id: str) -> Dict[str, int]:
+        with self._lock:
+            u = self._usage.get(tenant_id)
+            return u.snapshot() if u else _TenantUsage().snapshot()
+
+    def admit_syscall(self, sc, *, tokens_needed: int = 0,
+                      pages_needed: int = 0) -> Optional[str]:
+        """Quota gate called by the scheduler at submission. Returns None and
+        charges the tenant's usage on admit, or a reason string naming the
+        binding quota on rejection. Charges are released by a done-callback,
+        so every settle path (complete / fail / shed / cancel) pays back."""
+        with self._lock:
+            quota = self._quotas.get(sc.tenant_id)
+            if quota is None:
+                return None        # unregistered tenant: unlimited
+            u = self._usage[sc.tenant_id]
+            reason = self._binding_quota(sc.tenant_id, quota, u,
+                                         tokens_needed, pages_needed)
+            if reason is not None:
+                u.quota_rejections += 1
+            else:
+                u.inflight += 1
+                u.tokens_reserved += tokens_needed
+                u.pages_reserved += pages_needed
+                u.admitted += 1
+        if reason is not None:
+            self._log(op="quota_reject", tenant=sc.tenant_id,
+                      agent=sc.agent_name, pid=sc.pid, reason=reason)
+            return reason
+        sc.add_done_callback(
+            lambda done: self._release(done, tokens_needed, pages_needed))
+        return None
+
+    @staticmethod
+    def _binding_quota(tenant: str, quota: TenantQuota, u: _TenantUsage,
+                       tokens_needed: int, pages_needed: int) -> Optional[str]:
+        if (quota.max_concurrent is not None
+                and u.inflight >= quota.max_concurrent):
+            return (f"tenant '{tenant}' over quota: {u.inflight} syscalls "
+                    f"in flight >= max_concurrent={quota.max_concurrent} "
+                    f"[binding quota: max_concurrent]")
+        if (quota.token_budget is not None
+                and u.tokens_spent + u.tokens_reserved + tokens_needed
+                > quota.token_budget):
+            return (f"tenant '{tenant}' over quota: "
+                    f"{u.tokens_spent} spent + {u.tokens_reserved} reserved "
+                    f"+ {tokens_needed} requested tokens > "
+                    f"token_budget={quota.token_budget} "
+                    f"[binding quota: token_budget]")
+        if (quota.kv_page_budget is not None
+                and u.pages_reserved + pages_needed > quota.kv_page_budget):
+            return (f"tenant '{tenant}' over quota: {u.pages_reserved} "
+                    f"reserved + {pages_needed} requested KV pages > "
+                    f"kv_page_budget={quota.kv_page_budget} "
+                    f"[binding quota: kv_page_budget]")
+        return None
+
+    def _release(self, sc, tokens_needed: int, pages_needed: int):
+        spent = 0
+        if sc.status == "done" and isinstance(sc.response, dict):
+            spent = int((sc.response.get("usage") or {}).get("new_tokens", 0))
+        with self._lock:
+            u = self._usage.get(sc.tenant_id)
+            if u is None:
+                return
+            u.inflight -= 1
+            u.tokens_reserved -= tokens_needed
+            u.pages_reserved -= pages_needed
+            u.tokens_spent += spent
+
     # -- privilege groups --------------------------------------------------------------
-    def add_privilege(self, sid: str, tid: str):
+    def add_privilege(self, sid: str, tid: str, tenant: str = DEFAULT_TENANT):
         """Admit agent `sid` into agent `tid`'s privilege group."""
         with self._lock:
-            self._groups.setdefault(tid, set()).add(sid)
-        self._log(op="add_privilege", source=sid, target=tid)
+            self._groups.setdefault((tenant, tid), set()).add(sid)
+        self._log(op="add_privilege", source=sid, target=tid, tenant=tenant)
 
-    def revoke_privilege(self, sid: str, tid: str):
+    def revoke_privilege(self, sid: str, tid: str, tenant: str = DEFAULT_TENANT):
         with self._lock:
-            self._groups.get(tid, set()).discard(sid)
-        self._log(op="revoke_privilege", source=sid, target=tid)
+            self._groups.get((tenant, tid), set()).discard(sid)
+        self._log(op="revoke_privilege", source=sid, target=tid, tenant=tenant)
 
-    def check_access(self, sid: str, tid: str) -> bool:
-        with self._lock:
-            ok = sid == tid or sid in self._groups.get(tid, set())
-        self._log(op="check_access", source=sid, target=tid, granted=ok)
+    def check_access(self, sid: str, tid: str, tenant: str = DEFAULT_TENANT,
+                     target_tenant: Optional[str] = None) -> bool:
+        """May agent ``sid`` (of ``tenant``) touch agent ``tid``'s resources?
+        Cross-tenant access is always denied — privilege groups are a
+        within-tenant mechanism."""
+        target_tenant = tenant if target_tenant is None else target_tenant
+        if target_tenant != tenant:
+            ok = False
+        else:
+            with self._lock:
+                ok = (sid == tid
+                      or sid in self._groups.get((tenant, tid), set()))
+        self._log(op="check_access", source=sid, target=tid, tenant=tenant,
+                  target_tenant=target_tenant, granted=ok)
         return ok
 
     # -- user intervention ---------------------------------------------------------------
-    def ask_permission(self, agent: str, operation: str) -> bool:
+    def ask_permission(self, agent: str, operation: str,
+                       tenant: str = DEFAULT_TENANT) -> bool:
         """Gate irreversible operations behind explicit confirmation."""
         if operation not in IRREVERSIBLE_OPS:
             return True
         approved = bool(self._intervene(agent, operation)) if self._intervene else False
         self._log(op="ask_permission", agent=agent, operation=operation,
-                  approved=approved)
+                  approved=approved, tenant=tenant)
         return approved
+
+    # -- syscall surface (registry-dispatched) -------------------------------------------
+    @syscall_op("add_privilege")
+    def _op_add_privilege(self, sc, sid: str, tid: str) -> Dict[str, Any]:
+        self.add_privilege(sid, tid, tenant=sc.tenant_id)
+        return {"success": True}
+
+    @syscall_op("revoke_privilege")
+    def _op_revoke_privilege(self, sc, sid: str, tid: str) -> Dict[str, Any]:
+        self.revoke_privilege(sid, tid, tenant=sc.tenant_id)
+        return {"success": True}
+
+    @syscall_op("check_access")
+    def _op_check_access(self, sc, sid: str, tid: str,
+                         target_tenant: Optional[str] = None) -> Dict[str, Any]:
+        return {"success": True,
+                "granted": self.check_access(sid, tid, tenant=sc.tenant_id,
+                                             target_tenant=target_tenant)}
+
+    @syscall_op("ask_permission")
+    def _op_ask_permission(self, sc, operation: str) -> Dict[str, Any]:
+        return {"success": True,
+                "approved": self.ask_permission(sc.agent_name, operation,
+                                                tenant=sc.tenant_id)}
+
+    @syscall_op("get_audit_log")
+    def _op_get_audit_log(self, sc, n: int = 50) -> Dict[str, Any]:
+        """Recent audit entries scoped to the caller's tenant."""
+        with self._lock:
+            mine = [e for e in self.audit_log if e.get("tenant") == sc.tenant_id]
+        return {"success": True, "entries": mine[-n:]}
 
     def execute_access_syscall(self, sc) -> Dict[str, Any]:
         op = sc.request_data["operation"]
-        p = sc.request_data.get("params", {})
-        if op == "add_privilege":
-            self.add_privilege(p["sid"], p["tid"])
-            return {"success": True}
-        if op == "check_access":
-            return {"success": True,
-                    "granted": self.check_access(p["sid"], p["tid"])}
-        if op == "ask_permission":
-            return {"success": True,
-                    "approved": self.ask_permission(sc.agent_name, p["operation"])}
-        raise KeyError(op)
+        params = sc.request_data.get("params", {})
+        fn = resolve_op(self, op)
+        if fn is None:
+            return unknown_op(self, op)
+        return fn(sc, **params)
+
+    # -- metrics -------------------------------------------------------------------------
+    def metrics(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "tenants": {t: {"quota": vars(q),
+                                "usage": self._usage[t].snapshot()}
+                            for t, q in self._quotas.items()},
+                "quota_rejections": sum(u.quota_rejections
+                                        for u in self._usage.values()),
+                "audit_entries": len(self.audit_log),
+            }

@@ -1,0 +1,64 @@
+"""Unified syscall op dispatch: one registry/decorator pattern shared by the
+memory / storage / tool / access managers instead of five hand-rolled
+op-string if-chains. Unknown operations resolve to a structured
+``{"success": False, "error": ...}`` response rather than leaking a raw
+``KeyError`` through ``sc.fail(str(e))``.
+
+Usage::
+
+    class StorageManager:
+        @syscall_op("sto_write")
+        def sto_write(self, file_path, content): ...
+
+    fn = resolve_op(manager, op)        # bound method or None
+    resp = fn(**params) if fn else unknown_op(manager, op)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+_OP_ATTR = "__syscall_op__"
+
+
+def syscall_op(name: str) -> Callable:
+    """Mark a manager method as the handler for syscall operation ``name``.
+    A method may serve several op aliases (stack the decorator)."""
+    def deco(fn):
+        ops = getattr(fn, _OP_ATTR, ())
+        setattr(fn, _OP_ATTR, ops + (name,))
+        return fn
+    return deco
+
+
+def _op_table(cls: type) -> Dict[str, str]:
+    """op name -> attribute name, collected over the MRO (subclasses may
+    override or extend a parent's surface). Cached on the class."""
+    cached = cls.__dict__.get("_syscall_op_table")
+    if cached is not None:
+        return cached
+    table: Dict[str, str] = {}
+    for klass in reversed(cls.__mro__):
+        for attr, fn in vars(klass).items():
+            for op in getattr(fn, _OP_ATTR, ()):
+                table[op] = attr
+    cls._syscall_op_table = table
+    return table
+
+
+def resolve_op(manager: Any, op: str) -> Optional[Callable]:
+    """Bound handler registered for ``op`` on the manager, or None."""
+    attr = _op_table(type(manager)).get(op)
+    return getattr(manager, attr) if attr is not None else None
+
+
+def registered_ops(manager: Any):
+    """Sorted op names a manager exposes (introspection / docs / errors)."""
+    return sorted(_op_table(type(manager)))
+
+
+def unknown_op(manager: Any, op: str) -> Dict[str, Any]:
+    """Structured failure for an unregistered operation."""
+    kind = type(manager).__name__
+    return {"success": False,
+            "error": f"unknown {kind} operation '{op}' "
+                     f"(known: {', '.join(registered_ops(manager))})"}

@@ -105,11 +105,15 @@ class AIOSKernel:
         self.control = None
         if control and scheduler == "batched":
             from repro.control import ControlPlane
+            ckw = dict(control_kw or {})
+            # the access manager owns per-tenant SLO targets; the plane's
+            # policy resolves them before the class defaults
+            ckw.setdefault("slo_registry", self.access.slo_registry)
             self.control = ControlPlane(num_cores,
                                         self.context.prefix_cache,
-                                        **(control_kw or {}))
+                                        **ckw)
         sched_cls = SCHEDULERS[scheduler]
-        skw: Dict[str, Any] = {}
+        skw: Dict[str, Any] = {"access": self.access}
         if scheduler in ("rr", "batched"):
             skw["quantum"] = quantum
         if self.control is not None:
@@ -153,9 +157,16 @@ class AIOSKernel:
         self.scheduler.submit(sc)
         return sc
 
-    def send_request(self, agent_name: str, query) -> Dict[str, Any]:
+    def register_tenant(self, tenant_id: str, **kw):
+        """Install a tenant's quota record and SLO targets (front door,
+        paper §3.8). Delegates to the access manager; see
+        ``AccessManager.register_tenant`` for the quota knobs."""
+        self.access.register_tenant(tenant_id, **kw)
+
+    def send_request(self, agent_name: str, query,
+                     tenant_id: str = "default") -> Dict[str, Any]:
         """SDK transport: Query -> syscall -> dispatch -> blocking response."""
-        sc = query.to_syscall(agent_name)
+        sc = query.to_syscall(agent_name, tenant_id=tenant_id)
         self.submit(sc)
         return sc.join()
 
@@ -168,6 +179,7 @@ class AIOSKernel:
         m["memory"] = dict(self.memory.stats)
         m["tools"] = dict(self.tools.stats)
         m["engine"] = [dict(c.engine.stats) for c in self.pool.cores]
+        m["access"] = self.access.metrics()
         if self.kv_store is not None:
             m["kv_store"] = self.kv_store.metrics()
         if self.control is not None:

@@ -12,7 +12,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.syscall import LLMSyscall
+from repro.core.syscall import LLMSyscall, SyscallCancelled
 from repro.serving.engine import ServingEngine
 
 
@@ -66,9 +66,13 @@ class LLMCore:
         decode steps, so a burst routed to this core shares one batched
         chunk dispatch instead of one prefill per sequence."""
         rd = sc.request_data
+        # streamed syscalls re-wire their token channel on every (re)admit,
+        # so the channel survives suspends and cross-core migrations
+        sink = sc.token_sink() if isinstance(sc, LLMSyscall) else None
         if sc.context_id is not None:
             snap = self.ctx.load(sc.context_id)
-            slot = self.engine.restore(snap, seq_id=sc.pid, eager=eager)
+            slot = self.engine.restore(snap, seq_id=sc.pid, eager=eager,
+                                       sink=sink)
             self.ctx.clear(sc.context_id)
             sc.context_id = None
             if getattr(sc, "_migrated_from", None) is not None:
@@ -81,7 +85,7 @@ class LLMCore:
                 max_new=rd.get("max_new_tokens", 32),
                 eos_id=rd.get("eos_id", -1),
                 image_embeds=rd.get("image_embeds"),
-                eager=eager)
+                eager=eager, sink=sink)
         return slot
 
     def _finish(self, sc: LLMSyscall, slot: int) -> Dict[str, Any]:
@@ -114,6 +118,10 @@ class LLMCore:
             slot = self.admit(sc)
             steps = 0
             while not self.engine.is_done(slot):
+                if sc.cancelled:
+                    self.engine.free(slot)
+                    self.busy_time += time.monotonic() - t0
+                    raise SyscallCancelled(f"pid={sc.pid}")
                 if quantum is not None and steps >= quantum:
                     ctx_id = self._suspend(sc, slot)
                     self.busy_time += time.monotonic() - t0

@@ -12,7 +12,8 @@ import time
 from collections import deque
 from typing import Any, Dict, List, Optional
 
-from repro.core.syscall import MemorySyscall
+from repro.core.dispatch import resolve_op, syscall_op, unknown_op
+from repro.core.syscall import DEFAULT_TENANT, MemorySyscall
 
 _note_ids = itertools.count(1)
 
@@ -81,17 +82,26 @@ class BaseMemoryManager:
         return self.blocks[agent]
 
     # -- syscall dispatch ------------------------------------------------------------
+    @staticmethod
+    def _namespace(sc: MemorySyscall) -> str:
+        """Memory blocks are tenant-isolated: non-default tenants get their
+        own namespace so same-named agents of different tenants never share a
+        block. ``target_agent`` (ACL-gated by the scheduler) reads another
+        agent's block within the same tenant."""
+        agent = sc.request_data.get("target_agent") or sc.agent_name
+        tenant = getattr(sc, "tenant_id", DEFAULT_TENANT)
+        return agent if tenant == DEFAULT_TENANT else f"{tenant}::{agent}"
+
     def execute_memory_syscall(self, sc: MemorySyscall) -> Dict[str, Any]:
         op = sc.request_data["operation"]
         params = sc.request_data.get("params", {})
-        fn = {
-            "add_memory": self.add_memory, "get_memory": self.get_memory,
-            "update_memory": self.update_memory, "remove_memory": self.remove_memory,
-            "retrieve_memory": self.retrieve_memory,
-        }[op]
-        return fn(sc.agent_name, **params)
+        fn = resolve_op(self, op)
+        if fn is None:
+            return unknown_op(self, op)
+        return fn(self._namespace(sc), **params)
 
     # -- CRUD ------------------------------------------------------------------------
+    @syscall_op("add_memory")
     def add_memory(self, agent: str, *, content: str,
                    metadata: Optional[Dict] = None) -> Dict[str, Any]:
         with self._lock:
@@ -105,6 +115,7 @@ class BaseMemoryManager:
             self._maybe_evict(agent)
             return {"memory_id": note.note_id, "success": True}
 
+    @syscall_op("get_memory")
     def get_memory(self, agent: str, *, memory_id: str) -> Dict[str, Any]:
         with self._lock:
             blk = self._block(agent)
@@ -118,6 +129,7 @@ class BaseMemoryManager:
             return {"memory_id": memory_id, "content": note.content,
                     "metadata": note.metadata, "success": True}
 
+    @syscall_op("update_memory")
     def update_memory(self, agent: str, *, memory_id: str, content: str,
                       metadata: Optional[Dict] = None) -> Dict[str, Any]:
         with self._lock:
@@ -138,6 +150,7 @@ class BaseMemoryManager:
             self._maybe_evict(agent)
             return {"memory_id": memory_id, "success": True}
 
+    @syscall_op("remove_memory")
     def remove_memory(self, agent: str, *, memory_id: str) -> Dict[str, Any]:
         with self._lock:
             blk = self._block(agent)
@@ -150,6 +163,7 @@ class BaseMemoryManager:
             self.storage.vector_remove(f"mem-{agent}", memory_id)
             return {"success": True}
 
+    @syscall_op("retrieve_memory")
     def retrieve_memory(self, agent: str, *, query: str, k: int = 3
                         ) -> Dict[str, Any]:
         with self._lock:

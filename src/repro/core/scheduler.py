@@ -13,7 +13,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
-from repro.core.syscall import Syscall
+from repro.core.syscall import Syscall, SyscallCancelled
 
 
 class _PriorityQueue:
@@ -50,11 +50,13 @@ class BaseScheduler:
     llm_quantum: Optional[int] = None   # decode steps per slice; None = to completion
 
     def __init__(self, llm_core_pool, memory_manager, storage_manager,
-                 tool_manager, *, log: Optional[Callable[[str], None]] = None):
+                 tool_manager, *, log: Optional[Callable[[str], None]] = None,
+                 access=None):
         self.pool = llm_core_pool
         self.memory = memory_manager
         self.storage = storage_manager
         self.tools = tool_manager
+        self.access = access      # tenant front door (quotas + cross-agent ACL)
         self.log = log or (lambda m: None)
         self.llm_queue = self._make_queue()
         self.mem_queue: "queue.Queue" = queue.Queue()
@@ -69,11 +71,45 @@ class BaseScheduler:
         return queue.Queue()
 
     # -- submission -----------------------------------------------------------------
-    def submit(self, syscall: Syscall):
+    def _quota_demand(self, sc: Syscall):
+        """(tokens, KV pages) a syscall will hold while in flight -- the
+        amounts the tenant quota gate charges at admission. Only LLM syscalls
+        consume either; pages use core 0's page geometry (pools are
+        homogeneous)."""
+        if sc.category != "llm":
+            return 0, 0
+        rd = sc.request_data
+        tokens = rd.get("max_new_tokens", 32)
+        pager = self.pool.cores[0].engine.pager
+        return tokens, pager.pages_for(len(rd["prompt"]) + tokens)
+
+    def _front_door_admit(self, sc: Syscall) -> bool:
+        """Tenant quota gate (paper §3.8): every submission passes through
+        the access manager before touching a queue. Over-quota tenants get a
+        fast structured rejection naming the binding quota; charged usage is
+        released by the syscall's done-callback on any settle path."""
+        if self.access is None:
+            return True
+        tokens, pages = self._quota_demand(sc)
+        reason = self.access.admit_syscall(sc, tokens_needed=tokens,
+                                           pages_needed=pages)
+        if reason is not None:
+            sc.mark_queued()
+            sc.fail(reason)
+            self._record(sc)
+            return False
+        return True
+
+    def _enqueue(self, syscall: Syscall):
         syscall.mark_queued()
         q = {"llm": self.llm_queue, "memory": self.mem_queue,
              "storage": self.sto_queue, "tool": self.tool_queue}[syscall.category]
         q.put(syscall)
+
+    def submit(self, syscall: Syscall):
+        if not self._front_door_admit(syscall):
+            return
+        self._enqueue(syscall)
 
     # -- lifecycle -------------------------------------------------------------------
     def start(self):
@@ -98,6 +134,40 @@ class BaseScheduler:
         with self._completed_lock:
             self.completed.append(sc)
 
+    def _finish_cancelled(self, sc: Syscall):
+        """Settle a cancelled syscall observed at a queue hop: release its
+        suspended context (pages) if it holds one, then fail it. The done-
+        callbacks installed at admission release quota charges."""
+        if sc.context_id is not None:
+            try:
+                self.pool.cores[0].ctx.clear(sc.context_id)
+            except Exception:  # noqa: BLE001 -- context may already be gone
+                pass
+            sc.context_id = None
+        sc.fail("cancelled")
+        self._record(sc)
+
+    def _acl_denial(self, sc: Syscall) -> Optional[Dict[str, Any]]:
+        """Cross-agent access gate for memory/storage syscalls naming a
+        ``target_agent``/``target_tenant``: the access manager's privilege
+        groups decide; cross-tenant is always denied."""
+        rd = sc.request_data or {}
+        target = rd.get("target_agent")
+        target_tenant = rd.get("target_tenant")
+        if self.access is None or (target is None and target_tenant is None):
+            return None
+        target = target or sc.agent_name
+        if self.access.check_access(sc.agent_name, target,
+                                    tenant=sc.tenant_id,
+                                    target_tenant=target_tenant):
+            return None
+        scope = (f" of tenant '{target_tenant}'"
+                 if target_tenant and target_tenant != sc.tenant_id else "")
+        return {"success": False,
+                "error": f"access denied: agent '{sc.agent_name}' (tenant "
+                         f"'{sc.tenant_id}') may not access resources of "
+                         f"'{target}'{scope}"}
+
     # -- module workers ---------------------------------------------------------------
     def _drain(self, q, handler):
         while not self._stop.is_set():
@@ -105,9 +175,12 @@ class BaseScheduler:
                 sc = q.get(timeout=0.05)
             except queue.Empty:
                 continue
+            if sc.cancelled:
+                self._finish_cancelled(sc)
+                continue
             sc.mark_running()
             try:
-                resp = handler(sc)
+                resp = self._acl_denial(sc) or handler(sc)
                 sc.complete(resp)
             except Exception as e:  # noqa: BLE001 -- kernel isolates agent errors
                 sc.fail(str(e))
@@ -138,6 +211,9 @@ class BaseScheduler:
                     backlog.append(cand)
                     continue
                 sc = cand
+            if sc.cancelled:
+                self._finish_cancelled(sc)
+                continue
             sc.mark_running()
             try:
                 sc.complete(self.tools.execute_tool_syscall(sc))
@@ -151,6 +227,9 @@ class BaseScheduler:
         """Core fault: requeue so another core (or a recovered one) picks it
         up; the context snapshot bounds lost work to one quantum (DESIGN.md
         §5). Fail only after llm_retries."""
+        if isinstance(err, SyscallCancelled) or sc.cancelled:
+            self._finish_cancelled(sc)
+            return
         retries = getattr(sc, "_retries", 0)
         if retries < self.llm_retries:
             sc._retries = retries + 1
@@ -167,6 +246,9 @@ class BaseScheduler:
             try:
                 sc = self.llm_queue.get(timeout=0.05)
             except queue.Empty:
+                continue
+            if sc.cancelled:
+                self._finish_cancelled(sc)
                 continue
             sc.mark_running()
             try:
@@ -274,10 +356,14 @@ class BatchedScheduler(BaseScheduler):
         return queue.Queue()
 
     def submit(self, syscall: Syscall):
-        """Central-queue submission behind the SLO admission controller:
+        """Central-queue submission behind the two-stage admission
+        controller: the tenant quota gate first (an over-quota tenant is
+        rejected before it can load the pool at all), then the SLO shed --
         while interactive traffic is missing its wait target, incoming
         best_effort LLM syscalls are shed at the door (fail fast, naming the
         reason) instead of deepening a queue the misses prove is saturated."""
+        if not self._front_door_admit(syscall):
+            return
         if (self.control is not None and syscall.category == "llm"
                 and self.control.should_shed(syscall)):
             syscall.mark_queued()
@@ -287,7 +373,7 @@ class BatchedScheduler(BaseScheduler):
                          f"{self.control.admission_miss_rate:.2f})")
             self._record(syscall)
             return
-        super().submit(syscall)
+        self._enqueue(syscall)
 
     # -- lifecycle ------------------------------------------------------------------
     def start(self):
@@ -419,6 +505,11 @@ class BatchedScheduler(BaseScheduler):
                     self._dispatcher_held = 1
                 except queue.Empty:
                     continue
+                if pending.cancelled:
+                    self._finish_cancelled(pending)
+                    pending = None
+                    self._dispatcher_held = 0
+                    continue
                 reason = self._infeasible_reason(pending)
                 if reason is not None:
                     pending.fail(reason)
@@ -459,6 +550,9 @@ class BatchedScheduler(BaseScheduler):
                     sc = self.llm_queue.get_nowait()
                 except queue.Empty:
                     break
+                if sc.cancelled:
+                    self._finish_cancelled(sc)
+                    continue
                 reason = self._infeasible_reason(sc)
                 if reason is not None:
                     sc.fail(reason)
@@ -489,9 +583,17 @@ class BatchedScheduler(BaseScheduler):
     def _preempt_victim(self, running: Dict[int, Syscall], engine,
                         below_rank: int) -> Optional[int]:
         """Slot of the least latency-sensitive running sequence with class
-        rank strictly greater than ``below_rank`` (ties: most remaining
-        tokens -- the longest tail benefits most from yielding). None when
-        nothing is eligible (mid-prefill and finishing slots are not)."""
+        rank strictly greater than ``below_rank``. Ties break toward the
+        tenant hogging this core (most running slots -- the offending tenant
+        pays for the pressure it creates), then by the rebalancer's migration
+        cost model: CHEAPEST resident-bytes-per-remaining-token first, the
+        same ordering migrations use, since a preempted context makes the
+        identical snapshot -> restore round-trip. None when nothing is
+        eligible (mid-prefill and finishing slots are not)."""
+        from repro.control.rebalancer import migration_cost
+        tenant_load: Dict[str, int] = {}
+        for sc in running.values():
+            tenant_load[sc.tenant_id] = tenant_load.get(sc.tenant_id, 0) + 1
         best, best_key = None, None
         for slot, sc in running.items():
             if engine.is_prefilling(slot) or engine.is_done(slot):
@@ -500,7 +602,9 @@ class BatchedScheduler(BaseScheduler):
             if rank <= below_rank:
                 continue
             s = engine.slots[slot]
-            key = (rank, s.max_new - len(s.generated))
+            remaining = s.max_new - len(s.generated)
+            cost = migration_cost(engine.resident_bytes(slot), remaining)
+            key = (rank, tenant_load[sc.tenant_id], -cost, remaining)
             if best_key is None or key > best_key:
                 best, best_key = slot, key
         return best
@@ -581,6 +685,11 @@ class BatchedScheduler(BaseScheduler):
                     sc = myq.get(timeout=0.0 if busy else 0.05)
                 except queue.Empty:
                     break
+                if sc.cancelled:
+                    with self._inflight_lock:
+                        self._inflight[core_idx] -= 1
+                    self._finish_cancelled(sc)
+                    continue
                 sc.mark_running()
                 try:
                     slot = core.admit(sc, eager=False)
@@ -618,6 +727,21 @@ class BatchedScheduler(BaseScheduler):
                 if running:
                     self._run_migrations(core_idx, core, engine, running,
                                          used)
+            # cancellation sweep: a timed-out join (or explicit cancel())
+            # must free the slot + pages NOW, not at generation end
+            for slot, sc in list(running.items()):
+                if not sc.cancelled:
+                    continue
+                try:
+                    engine.free(slot)
+                except Exception:  # noqa: BLE001
+                    pass
+                if self.control is not None:
+                    self.control.on_exit(core_idx, sc, "cancelled")
+                with self._inflight_lock:
+                    self._inflight[core_idx] -= 1
+                self._finish_cancelled(sc)
+                del running[slot], used[slot]
             if not running:
                 time.sleep(0.001)
                 continue

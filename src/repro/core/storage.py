@@ -23,6 +23,7 @@ except ImportError:          # non-POSIX: in-process lock only
 
 import numpy as np
 
+from repro.core.dispatch import resolve_op, syscall_op, unknown_op
 from repro.core.syscall import StorageSyscall
 
 _DIM = 256
@@ -111,20 +112,13 @@ class StorageManager:
     def execute_storage_syscall(self, sc: StorageSyscall) -> Dict[str, Any]:
         op = sc.request_data["operation"]
         params = sc.request_data.get("params", {})
-        fn = {
-            "sto_create_file": self.sto_create_file,
-            "sto_create_directory": self.sto_create_directory,
-            "sto_mount": self.sto_mount,
-            "sto_write": self.sto_write,
-            "sto_read": self.sto_read,
-            "sto_retrieve": self.sto_retrieve,
-            "sto_rollback": self.sto_rollback,
-            "sto_share": self.sto_share,
-            "sto_history": self.get_file_history,
-        }[op]
+        fn = resolve_op(self, op)
+        if fn is None:
+            return unknown_op(self, op)
         return fn(**params)
 
     # -- file operations -------------------------------------------------------------------
+    @syscall_op("sto_create_file")
     def sto_create_file(self, file_path: str, collection_name: Optional[str] = None
                         ) -> Dict[str, Any]:
         p = self._abs(file_path)
@@ -134,10 +128,12 @@ class StorageManager:
                 open(p, "w").close()
         return {"success": True, "path": file_path}
 
+    @syscall_op("sto_create_directory")
     def sto_create_directory(self, dir_path: str) -> Dict[str, Any]:
         os.makedirs(self._abs(dir_path), exist_ok=True)
         return {"success": True, "path": dir_path}
 
+    @syscall_op("sto_write")
     def sto_write(self, file_path: str, content: str,
                   collection_name: Optional[str] = None) -> Dict[str, Any]:
         p = self._abs(file_path)
@@ -154,6 +150,7 @@ class StorageManager:
         self.stats["writes"] += 1
         return {"success": True, "path": file_path}
 
+    @syscall_op("sto_read")
     def sto_read(self, file_path: str) -> Dict[str, Any]:
         p = self._abs(file_path)
         with self.get_file_lock(file_path):
@@ -175,6 +172,7 @@ class StorageManager:
             victims = sorted(os.listdir(vd))
             os.remove(os.path.join(vd, victims[0]))
 
+    @syscall_op("sto_history")
     def get_file_history(self, file_path: str, limit: Optional[int] = None
                          ) -> Dict[str, Any]:
         vd = self._versions_dir(file_path)
@@ -187,6 +185,7 @@ class StorageManager:
             {"index": int(v.split("_")[0]), "time": float(v.split("_")[1])}
             for v in versions]}
 
+    @syscall_op("sto_rollback")
     def sto_rollback(self, file_path: str, n: int = 1,
                      time_stamp: Optional[float] = None) -> Dict[str, Any]:
         vd = self._versions_dir(file_path)
@@ -219,6 +218,7 @@ class StorageManager:
     def generate_share_link(self, file_path: str) -> str:
         return f"aios://share/{self.get_file_hash(file_path)[:16]}"
 
+    @syscall_op("sto_share")
     def sto_share(self, file_path: str) -> Dict[str, Any]:
         with self.get_file_lock(file_path):
             if not os.path.exists(self._abs(file_path)):
@@ -228,6 +228,7 @@ class StorageManager:
         return {"success": True, "link": link}
 
     # -- mount + semantic retrieval ------------------------------------------------------------
+    @syscall_op("sto_mount")
     def sto_mount(self, collection_name: str, dir_path: str) -> Dict[str, Any]:
         d = self._abs(dir_path)
         if not os.path.isdir(d):
@@ -247,6 +248,7 @@ class StorageManager:
                     continue
         return {"success": True, "indexed": count}
 
+    @syscall_op("sto_retrieve")
     def sto_retrieve(self, collection_name: str, query_text: str, k: int = 3,
                      keywords: Optional[str] = None) -> Dict[str, Any]:
         hits = self.vector_query(collection_name, query_text, k)

@@ -3,25 +3,41 @@
 Each syscall is thread-bound: the issuing agent thread blocks on
 ``syscall.event.wait()`` while the scheduler dispatches the call to the
 owning module's worker. Categories: llm / memory / storage / tool / access.
+
+Every syscall carries a ``tenant_id`` (paper §3.8): the access manager keys
+quotas, privilege groups, and SLO targets by tenant, and the scheduler
+enforces them at admission. LLM syscalls may additionally open a streaming
+token channel (``stream()``) fed by the serving engine per decode tick.
 """
 from __future__ import annotations
 
 import itertools
+import queue
 import threading
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional
 
 _pid_counter = itertools.count(1)
+
+DEFAULT_TENANT = "default"
+
+# sentinel closing a streaming token channel
+_STREAM_END = object()
+
+
+class SyscallCancelled(Exception):
+    """Raised inside workers when a syscall's cancel flag is observed."""
 
 
 class Syscall:
     category = "generic"
 
     def __init__(self, agent_name: str, request_data: Dict[str, Any],
-                 priority: int = 0):
+                 priority: int = 0, tenant_id: str = DEFAULT_TENANT):
         self.agent_name = agent_name
         self.request_data = request_data
         self.priority = priority
+        self.tenant_id = tenant_id
         self.event = threading.Event()
         self.pid = next(_pid_counter)
         self.status = "created"      # created|queued|running|suspended|done|error
@@ -35,6 +51,9 @@ class Syscall:
         # scheduling bookkeeping
         self.quanta_used = 0
         self.context_id: Optional[str] = None   # set when suspended
+        self.cancelled = False                  # cooperative cancel flag
+        self._done_callbacks: List[Callable[["Syscall"], None]] = []
+        self._settle_lock = threading.Lock()
 
     # -- lifecycle ----------------------------------------------------------------
     def mark_queued(self):
@@ -51,22 +70,63 @@ class Syscall:
         self.context_id = context_id
         self.quanta_used += 1
 
+    def add_done_callback(self, fn: Callable[["Syscall"], None]):
+        """Run ``fn(self)`` exactly once when the syscall settles (complete or
+        fail). Resource release (quota slots, reservations) hangs off this so
+        every completion path — normal, shed, retry-exhausted, cancelled —
+        releases without each call site remembering to."""
+        run_now = False
+        with self._settle_lock:
+            if self.event.is_set():
+                run_now = True
+            else:
+                self._done_callbacks.append(fn)
+        if run_now:
+            fn(self)
+
+    def _settle(self):
+        with self._settle_lock:
+            cbs, self._done_callbacks = self._done_callbacks, []
+        for cb in cbs:
+            try:
+                cb(self)
+            except Exception:   # noqa: BLE001 -- callbacks never break settling
+                pass
+
     def complete(self, response: Any):
+        if self.event.is_set():
+            return
         self.response = response
         self.status = "done"
         self.end_time = time.monotonic()
+        self._settle()
         self.event.set()
 
     def fail(self, error: str):
+        if self.event.is_set():
+            return
         self.error = error
         self.status = "error"
         self.end_time = time.monotonic()
+        self._settle()
         self.event.set()
 
+    def cancel(self) -> bool:
+        """Request cooperative cancellation. The scheduler observes the flag
+        at every queue hop and decode tick, frees the slot/context, and fails
+        the syscall with "cancelled". Returns False if already settled."""
+        if self.event.is_set():
+            return False
+        self.cancelled = True
+        return True
+
     def join(self, timeout: Optional[float] = None) -> Any:
-        """Block the issuing agent thread until the kernel responds."""
+        """Block the issuing agent thread until the kernel responds. A timed
+        out join cancels the syscall so it stops holding slots/pages."""
         if not self.event.wait(timeout):
-            raise TimeoutError(f"syscall pid={self.pid} timed out")
+            self.cancel()
+            raise TimeoutError(
+                f"syscall pid={self.pid} timed out (cancellation requested)")
         if self.status == "error":
             raise RuntimeError(f"syscall pid={self.pid} failed: {self.error}")
         return self.response
@@ -87,22 +147,63 @@ class Syscall:
 
     def __repr__(self):
         return (f"<{type(self).__name__} pid={self.pid} agent={self.agent_name} "
-                f"status={self.status}>")
+                f"tenant={self.tenant_id} status={self.status}>")
 
 
 class LLMSyscall(Syscall):
     """request_data: {prompt: list[int] | str, max_new_tokens, temperature,
-    eos_id, tools?, action_type?}"""
+    eos_id, tools?, action_type?, stream?}
+
+    With ``stream=True`` the engine pushes each decoded token into a channel
+    the issuing thread drains via ``stream()`` while the syscall is still
+    running; the final token sequence is bit-equal to the blocking
+    ``join()["tokens"]`` because both read the same per-tick emissions."""
     category = "llm"
+
+    def __init__(self, agent_name: str, request_data: Dict[str, Any],
+                 priority: int = 0, tenant_id: str = DEFAULT_TENANT):
+        super().__init__(agent_name, request_data, priority, tenant_id)
+        self._stream_q: Optional[queue.Queue] = (
+            queue.Queue() if request_data.get("stream") else None)
+        self.first_token_time: Optional[float] = None
+        if self._stream_q is not None:
+            self.add_done_callback(lambda _sc: self._stream_q.put(_STREAM_END))
+
+    def token_sink(self) -> Optional[Callable[[int], None]]:
+        """Engine-facing per-token callback, or None for blocking calls."""
+        return self.push_token if self._stream_q is not None else None
+
+    def push_token(self, token: int):
+        if self.first_token_time is None:
+            self.first_token_time = time.monotonic()
+        if self._stream_q is not None:
+            self._stream_q.put(token)
+
+    def stream(self, timeout: Optional[float] = 600.0) -> Iterator[int]:
+        """Yield tokens as the engine decodes them; returns when the syscall
+        settles. Raises if it failed. Requires ``stream=True`` at submit."""
+        if self._stream_q is None:
+            raise RuntimeError(
+                f"syscall pid={self.pid} was not submitted with stream=True")
+        while True:
+            item = self._stream_q.get(timeout=timeout)
+            if item is _STREAM_END:
+                if self.status == "error":
+                    raise RuntimeError(
+                        f"syscall pid={self.pid} failed: {self.error}")
+                return
+            yield item
 
 
 class MemorySyscall(Syscall):
-    """request_data: {operation: add|get|update|remove|retrieve, params}"""
+    """request_data: {operation: add|get|update|remove|retrieve, params,
+    target_agent?, target_tenant?}"""
     category = "memory"
 
 
 class StorageSyscall(Syscall):
-    """request_data: {operation: sto_* , params}"""
+    """request_data: {operation: sto_* , params, target_agent?,
+    target_tenant?}"""
     category = "storage"
 
 
@@ -112,6 +213,7 @@ class ToolSyscall(Syscall):
 
 
 class AccessSyscall(Syscall):
-    """request_data: {operation: add_privilege|check_access|ask_permission,
-    params}. Not dispatched by the scheduler (paper Fig. 3): executed inline."""
+    """request_data: {operation: add_privilege|check_access|ask_permission|
+    get_audit_log, params}. Not dispatched by the scheduler (paper Fig. 3):
+    executed inline."""
     category = "access"

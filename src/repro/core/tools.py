@@ -99,7 +99,11 @@ class ToolManager:
 
     # -- conflicts ----------------------------------------------------------------------
     def has_conflict(self, tool_name: str) -> bool:
-        tool = self.load_tool_instance(tool_name)
+        try:
+            tool = self.load_tool_instance(tool_name)
+        except KeyError:
+            return False   # unknown tool: no conflict -- the execute path
+                           # returns the structured unknown-tool failure
         with self._lock:
             return self._live[tool_name] >= tool.parallel_limit
 
@@ -107,7 +111,12 @@ class ToolManager:
     def execute_tool_syscall(self, sc: ToolSyscall) -> Dict[str, Any]:
         name = sc.request_data["tool_name"]
         params = sc.request_data.get("params", {})
-        tool = self.load_tool_instance(name)
+        try:
+            tool = self.load_tool_instance(name)
+        except KeyError:
+            return {"success": False,
+                    "error": f"unknown tool '{name}' "
+                             f"(known: {', '.join(sorted(self._factories))})"}
         params = tool.coerce(params)
         try:
             tool.validate(params)

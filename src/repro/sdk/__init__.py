@@ -2,4 +2,5 @@ from repro.sdk.query import (  # noqa: F401
     LLMQuery, MemoryQuery, StorageQuery, ToolQuery, AccessQuery,
     LLMResponse, MemoryResponse, StorageResponse, ToolResponse)
 from repro.sdk import api  # noqa: F401
+from repro.sdk.api import AgentSession  # noqa: F401
 from repro.sdk.tokenizer import ToyTokenizer  # noqa: F401

@@ -1,121 +1,293 @@
-"""AIOS SDK API functions (paper Table 4): thin typed wrappers over
-kernel.send_request. Every call blocks the calling agent thread on the
-syscall's event, exactly as the paper's thread-bound syscalls do.
+"""AIOS SDK API (paper Table 4).
+
+``AgentSession`` is the primary surface: a capability-style handle bound to
+``(kernel, tenant, agent)`` that exposes every Table-4 call as a method, so
+identity is threaded once instead of passing ``(kernel, agent)`` positionals
+through every call — and the kernel's front door sees a real ``tenant_id``
+to enforce quotas and per-tenant SLO targets against.
+
+The module-level functions below are kept as thin delegating wrappers
+(deprecated: prefer ``AgentSession``). They bind the default tenant, so
+existing agents/examples keep working unchanged.
+
+Every blocking call parks the calling agent thread on the syscall's event,
+exactly as the paper's thread-bound syscalls do; ``llm_chat(stream=True)``
+instead returns the live ``LLMSyscall`` whose ``stream()`` yields tokens as
+the engine decodes them (``join()`` afterwards returns the bit-equal full
+response).
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List, Optional
 
+from repro.core.syscall import DEFAULT_TENANT, Syscall
 from repro.sdk.query import (AccessQuery, LLMQuery, MemoryQuery, StorageQuery,
                              ToolQuery)
 
 
+class AgentSession:
+    """One agent's handle onto a kernel: ``AgentSession(kernel, "alice",
+    tenant="acme")``. All syscalls it issues carry ``(tenant, agent)``, which
+    is what the access manager meters quotas against and the SLO registry
+    resolves targets for."""
+
+    def __init__(self, kernel, agent: str, *, tenant: str = DEFAULT_TENANT):
+        self.kernel = kernel
+        self.agent = agent
+        self.tenant = tenant
+
+    def __repr__(self):
+        return (f"<AgentSession agent={self.agent!r} tenant={self.tenant!r}>")
+
+    # -- transport -------------------------------------------------------------
+    def submit(self, query) -> Syscall:
+        """Query -> tenant-stamped syscall -> kernel; returns the live
+        syscall handle (non-blocking)."""
+        sc = query.to_syscall(self.agent, tenant_id=self.tenant)
+        self.kernel.submit(sc)
+        return sc
+
+    def send(self, query) -> Dict[str, Any]:
+        """Submit and block for the response."""
+        if not hasattr(self.kernel, "submit"):
+            # duck-typed baseline runtimes (benchmarks' DirectRuntime) expose
+            # only the blocking send_request transport, no syscall handles
+            return self.kernel.send_request(self.agent, query)
+        return self.submit(query).join()
+
+    # -- LLM core --------------------------------------------------------------
+    def llm_chat(self, prompt: List[int], *, max_new_tokens: int = 32,
+                 temperature: float = 0.0, priority: int = 0,
+                 slo_class: Optional[str] = None, stream: bool = False):
+        """Blocking by default. With ``stream=True`` returns the LLMSyscall:
+        iterate ``.stream()`` for per-tick tokens, then ``.join()`` for the
+        full response."""
+        q = LLMQuery(prompt=prompt, max_new_tokens=max_new_tokens,
+                     temperature=temperature, priority=priority,
+                     slo_class=slo_class, stream=stream)
+        if stream:
+            return self.submit(q)
+        return self.send(q)
+
+    def llm_chat_with_json_output(self, prompt, **kw):
+        return self.send(LLMQuery(prompt=prompt,
+                                  action_type="chat_with_json_output", **kw))
+
+    def llm_call_tool(self, prompt, **kw):
+        return self.send(LLMQuery(prompt=prompt, action_type="call_tool",
+                                  **kw))
+
+    # -- memory ----------------------------------------------------------------
+    def create_memory(self, content: str, metadata=None):
+        return self.send(MemoryQuery(
+            "add_memory", {"content": content, "metadata": metadata or {}}))
+
+    def get_memory(self, memory_id: str, *,
+                   target_agent: Optional[str] = None,
+                   target_tenant: Optional[str] = None):
+        return self.send(MemoryQuery(
+            "get_memory", {"memory_id": memory_id},
+            target_agent=target_agent, target_tenant=target_tenant))
+
+    def update_memory(self, memory_id: str, content: str, metadata=None):
+        return self.send(MemoryQuery(
+            "update_memory", {"memory_id": memory_id, "content": content,
+                              "metadata": metadata}))
+
+    def delete_memory(self, memory_id: str):
+        return self.send(MemoryQuery("remove_memory",
+                                     {"memory_id": memory_id}))
+
+    def search_memories(self, query: str, k: int = 3, *,
+                        target_agent: Optional[str] = None,
+                        target_tenant: Optional[str] = None):
+        return self.send(MemoryQuery(
+            "retrieve_memory", {"query": query, "k": k},
+            target_agent=target_agent, target_tenant=target_tenant))
+
+    # -- storage ---------------------------------------------------------------
+    def create_file(self, file_path: str):
+        return self.send(StorageQuery("sto_create_file",
+                                      {"file_path": file_path}))
+
+    def create_dir(self, dir_path: str):
+        return self.send(StorageQuery("sto_create_directory",
+                                      {"dir_path": dir_path}))
+
+    def write_file(self, file_path: str, content: str,
+                   collection: Optional[str] = None):
+        return self.send(StorageQuery(
+            "sto_write", {"file_path": file_path, "content": content,
+                          "collection_name": collection}))
+
+    def read_file(self, file_path: str, *,
+                  target_agent: Optional[str] = None,
+                  target_tenant: Optional[str] = None):
+        return self.send(StorageQuery(
+            "sto_read", {"file_path": file_path},
+            target_agent=target_agent, target_tenant=target_tenant))
+
+    def mount(self, collection: str, dir_path: str):
+        return self.send(StorageQuery(
+            "sto_mount", {"collection_name": collection,
+                          "dir_path": dir_path}))
+
+    def retrieve_file(self, collection: str, query: str, k: int = 3,
+                      keywords: Optional[str] = None):
+        return self.send(StorageQuery(
+            "sto_retrieve", {"collection_name": collection,
+                             "query_text": query, "k": k,
+                             "keywords": keywords}))
+
+    def rollback_file(self, file_path: str, n: int = 1):
+        return self.send(StorageQuery("sto_rollback",
+                                      {"file_path": file_path, "n": n}))
+
+    def share_file(self, file_path: str):
+        return self.send(StorageQuery("sto_share", {"file_path": file_path}))
+
+    # -- tools -----------------------------------------------------------------
+    def call_tool(self, tool_name: str, params: Dict[str, Any]):
+        return self.send(ToolQuery(tool_name, params))
+
+    # -- access ----------------------------------------------------------------
+    def add_privilege(self, sid: str, tid: str):
+        return self.send(AccessQuery("add_privilege",
+                                     {"sid": sid, "tid": tid}))
+
+    def revoke_privilege(self, sid: str, tid: str):
+        return self.send(AccessQuery("revoke_privilege",
+                                     {"sid": sid, "tid": tid}))
+
+    def check_access(self, sid: str, tid: str,
+                     target_tenant: Optional[str] = None):
+        return self.send(AccessQuery(
+            "check_access", {"sid": sid, "tid": tid,
+                             "target_tenant": target_tenant}))
+
+    def ask_permission(self, operation: str):
+        return self.send(AccessQuery("ask_permission",
+                                     {"operation": operation}))
+
+    def get_audit_log(self, n: int = 50):
+        return self.send(AccessQuery("get_audit_log", {"n": n}))
+
+
+# ---------------------------------------------------------------------------
+# Deprecated module-level wrappers (pre-session surface). Each delegates to a
+# default-tenant AgentSession; prefer holding a session handle instead of
+# threading (kernel, agent) through every call.
+# ---------------------------------------------------------------------------
+def _session(kernel, agent: str) -> AgentSession:
+    return AgentSession(kernel, agent)
+
+
 # -- LLM core ------------------------------------------------------------------
 def llm_chat(kernel, agent: str, prompt: List[int], *, max_new_tokens=32,
-             temperature=0.0, priority=0) -> Dict[str, Any]:
-    return kernel.send_request(agent, LLMQuery(
-        prompt=prompt, max_new_tokens=max_new_tokens, temperature=temperature,
-        priority=priority))
+             temperature=0.0, priority=0, stream=False):
+    """Deprecated: prefer ``AgentSession(kernel, agent).llm_chat(...)``."""
+    return _session(kernel, agent).llm_chat(
+        prompt, max_new_tokens=max_new_tokens, temperature=temperature,
+        priority=priority, stream=stream)
 
 
 def llm_chat_with_json_output(kernel, agent, prompt, **kw):
-    return kernel.send_request(agent, LLMQuery(
-        prompt=prompt, action_type="chat_with_json_output", **kw))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).llm_chat_with_json_output(prompt, **kw)
 
 
 def llm_call_tool(kernel, agent, prompt, **kw):
-    return kernel.send_request(agent, LLMQuery(
-        prompt=prompt, action_type="call_tool", **kw))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).llm_call_tool(prompt, **kw)
 
 
 # -- memory --------------------------------------------------------------------
 def create_memory(kernel, agent, content: str, metadata=None):
-    return kernel.send_request(agent, MemoryQuery(
-        "add_memory", {"content": content, "metadata": metadata or {}}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).create_memory(content, metadata)
 
 
 def get_memory(kernel, agent, memory_id: str):
-    return kernel.send_request(agent, MemoryQuery(
-        "get_memory", {"memory_id": memory_id}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).get_memory(memory_id)
 
 
 def update_memory(kernel, agent, memory_id: str, content: str, metadata=None):
-    return kernel.send_request(agent, MemoryQuery(
-        "update_memory", {"memory_id": memory_id, "content": content,
-                          "metadata": metadata}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).update_memory(memory_id, content, metadata)
 
 
 def delete_memory(kernel, agent, memory_id: str):
-    return kernel.send_request(agent, MemoryQuery(
-        "remove_memory", {"memory_id": memory_id}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).delete_memory(memory_id)
 
 
 def search_memories(kernel, agent, query: str, k: int = 3):
-    return kernel.send_request(agent, MemoryQuery(
-        "retrieve_memory", {"query": query, "k": k}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).search_memories(query, k)
 
 
 # -- storage -------------------------------------------------------------------
 def create_file(kernel, agent, file_path: str):
-    return kernel.send_request(agent, StorageQuery(
-        "sto_create_file", {"file_path": file_path}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).create_file(file_path)
 
 
 def create_dir(kernel, agent, dir_path: str):
-    return kernel.send_request(agent, StorageQuery(
-        "sto_create_directory", {"dir_path": dir_path}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).create_dir(dir_path)
 
 
 def write_file(kernel, agent, file_path: str, content: str,
                collection: Optional[str] = None):
-    return kernel.send_request(agent, StorageQuery(
-        "sto_write", {"file_path": file_path, "content": content,
-                      "collection_name": collection}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).write_file(file_path, content, collection)
 
 
 def read_file(kernel, agent, file_path: str):
-    return kernel.send_request(agent, StorageQuery(
-        "sto_read", {"file_path": file_path}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).read_file(file_path)
 
 
 def mount(kernel, agent, collection: str, dir_path: str):
-    return kernel.send_request(agent, StorageQuery(
-        "sto_mount", {"collection_name": collection, "dir_path": dir_path}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).mount(collection, dir_path)
 
 
 def retrieve_file(kernel, agent, collection: str, query: str, k: int = 3,
                   keywords: Optional[str] = None):
-    return kernel.send_request(agent, StorageQuery(
-        "sto_retrieve", {"collection_name": collection, "query_text": query,
-                         "k": k, "keywords": keywords}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).retrieve_file(collection, query, k,
+                                                 keywords)
 
 
 def rollback_file(kernel, agent, file_path: str, n: int = 1):
-    return kernel.send_request(agent, StorageQuery(
-        "sto_rollback", {"file_path": file_path, "n": n}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).rollback_file(file_path, n)
 
 
 def share_file(kernel, agent, file_path: str):
-    return kernel.send_request(agent, StorageQuery(
-        "sto_share", {"file_path": file_path}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).share_file(file_path)
 
 
 # -- tools ----------------------------------------------------------------------
 def call_tool(kernel, agent, tool_name: str, params: Dict[str, Any]):
-    return kernel.send_request(agent, ToolQuery(tool_name, params))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).call_tool(tool_name, params)
 
 
 # -- access ----------------------------------------------------------------------
 def add_privilege(kernel, agent, sid: str, tid: str):
-    return kernel.send_request(agent, AccessQuery(
-        "add_privilege", {"sid": sid, "tid": tid}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).add_privilege(sid, tid)
 
 
 def check_access(kernel, agent, sid: str, tid: str):
-    return kernel.send_request(agent, AccessQuery(
-        "check_access", {"sid": sid, "tid": tid}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).check_access(sid, tid)
 
 
 def ask_permission(kernel, agent, operation: str):
-    return kernel.send_request(agent, AccessQuery(
-        "ask_permission", {"operation": operation}))
+    """Deprecated: prefer AgentSession."""
+    return _session(kernel, agent).ask_permission(operation)

@@ -1,14 +1,16 @@
 """AIOS SDK query/response structures (paper Appendix B.1) and their mapping
 onto kernel syscalls. send_request lives on the kernel; queries know how to
-become syscalls.
+become syscalls. Every ``to_syscall`` accepts the issuing ``tenant_id``
+(threaded from an ``AgentSession`` or kernel.send_request) so the kernel's
+front door can enforce per-tenant quotas and SLO targets.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Dict, List, Optional
 
-from repro.core.syscall import (AccessSyscall, LLMSyscall, MemorySyscall,
-                                StorageSyscall, ToolSyscall)
+from repro.core.syscall import (DEFAULT_TENANT, AccessSyscall, LLMSyscall,
+                                MemorySyscall, StorageSyscall, ToolSyscall)
 
 
 @dataclasses.dataclass
@@ -22,36 +24,60 @@ class LLMQuery:
     # SLO latency class consumed by the pool control plane (repro.control):
     # interactive | batch | best_effort. None = derived from priority.
     slo_class: Optional[str] = None
+    # stream=True opens the syscall's incremental token channel: iterate
+    # LLMSyscall.stream() while it decodes; join() still returns the full
+    # (bit-equal) response afterwards.
+    stream: bool = False
     query_class: str = "llm"
 
-    def to_syscall(self, agent_name: str) -> LLMSyscall:
+    def to_syscall(self, agent_name: str,
+                   tenant_id: str = DEFAULT_TENANT) -> LLMSyscall:
         return LLMSyscall(agent_name, {
             "prompt": self.prompt, "max_new_tokens": self.max_new_tokens,
             "temperature": self.temperature, "eos_id": self.eos_id,
-            "action_type": self.action_type, "slo_class": self.slo_class},
-            priority=self.priority)
+            "action_type": self.action_type, "slo_class": self.slo_class,
+            "stream": self.stream},
+            priority=self.priority, tenant_id=tenant_id)
 
 
 @dataclasses.dataclass
 class MemoryQuery:
     operation_type: str                     # add|get|update|remove|retrieve (_memory)
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # cross-agent access (ACL-gated by the scheduler via the access
+    # manager's privilege groups; cross-tenant is always denied)
+    target_agent: Optional[str] = None
+    target_tenant: Optional[str] = None
     query_class: str = "memory"
 
-    def to_syscall(self, agent_name: str) -> MemorySyscall:
-        return MemorySyscall(agent_name, {
-            "operation": self.operation_type, "params": self.params})
+    def to_syscall(self, agent_name: str,
+                   tenant_id: str = DEFAULT_TENANT) -> MemorySyscall:
+        rd: Dict[str, Any] = {"operation": self.operation_type,
+                              "params": self.params}
+        if self.target_agent is not None:
+            rd["target_agent"] = self.target_agent
+        if self.target_tenant is not None:
+            rd["target_tenant"] = self.target_tenant
+        return MemorySyscall(agent_name, rd, tenant_id=tenant_id)
 
 
 @dataclasses.dataclass
 class StorageQuery:
     operation_type: str                     # sto_*
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    target_agent: Optional[str] = None
+    target_tenant: Optional[str] = None
     query_class: str = "storage"
 
-    def to_syscall(self, agent_name: str) -> StorageSyscall:
-        return StorageSyscall(agent_name, {
-            "operation": self.operation_type, "params": self.params})
+    def to_syscall(self, agent_name: str,
+                   tenant_id: str = DEFAULT_TENANT) -> StorageSyscall:
+        rd: Dict[str, Any] = {"operation": self.operation_type,
+                              "params": self.params}
+        if self.target_agent is not None:
+            rd["target_agent"] = self.target_agent
+        if self.target_tenant is not None:
+            rd["target_tenant"] = self.target_tenant
+        return StorageSyscall(agent_name, rd, tenant_id=tenant_id)
 
 
 @dataclasses.dataclass
@@ -60,20 +86,25 @@ class ToolQuery:
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     query_class: str = "tool"
 
-    def to_syscall(self, agent_name: str) -> ToolSyscall:
+    def to_syscall(self, agent_name: str,
+                   tenant_id: str = DEFAULT_TENANT) -> ToolSyscall:
         return ToolSyscall(agent_name, {
-            "tool_name": self.tool_name, "params": self.params})
+            "tool_name": self.tool_name, "params": self.params},
+            tenant_id=tenant_id)
 
 
 @dataclasses.dataclass
 class AccessQuery:
-    operation_type: str                     # add_privilege|check_access|ask_permission
+    operation_type: str      # add_privilege|revoke_privilege|check_access|
+                             # ask_permission|get_audit_log
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     query_class: str = "access"
 
-    def to_syscall(self, agent_name: str) -> AccessSyscall:
+    def to_syscall(self, agent_name: str,
+                   tenant_id: str = DEFAULT_TENANT) -> AccessSyscall:
         return AccessSyscall(agent_name, {
-            "operation": self.operation_type, "params": self.params})
+            "operation": self.operation_type, "params": self.params},
+            tenant_id=tenant_id)
 
 
 # -- response wrappers (paper B.1) -- kernels return dicts; these add typing --

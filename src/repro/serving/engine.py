@@ -90,7 +90,7 @@ class ContextSnapshot:
 
 class _Slot:
     __slots__ = ("active", "prefilling", "seq_id", "prompt", "generated",
-                 "counter", "max_new", "eos_id")
+                 "counter", "max_new", "eos_id", "sink")
 
     def __init__(self):
         self.active = False
@@ -101,6 +101,10 @@ class _Slot:
         self.counter = 0
         self.max_new = 0
         self.eos_id = -1
+        self.sink = None          # per-token callback (streaming syscalls):
+                                  # called once per token appended to
+                                  # `generated`, so a drained stream is
+                                  # bit-equal to the blocking result
 
 
 class _PendingPrefill:
@@ -490,10 +494,11 @@ class ServingEngine:
     # -- admission (batched chunked prefill) ----------------------------------------
     def add_sequence(self, prompt, *, seq_id=None, max_new: int = 32,
                      eos_id: int = -1, seq_key=None, image_embeds=None,
-                     eager: bool = True) -> int:
+                     eager: bool = True, sink=None) -> int:
         return self.add_sequences(
             [dict(prompt=prompt, seq_id=seq_id, max_new=max_new,
-                  eos_id=eos_id, seq_key=seq_key, image_embeds=image_embeds)],
+                  eos_id=eos_id, seq_key=seq_key, image_embeds=image_embeds,
+                  sink=sink)],
             eager=eager)[0]
 
     def add_sequences(self, requests, *, eager: bool = True) -> List[int]:
@@ -537,6 +542,7 @@ class ServingEngine:
                 s.counter = 0
                 s.max_new = max_new
                 s.eos_id = r.get("eos_id", -1)
+                s.sink = r.get("sink")
             seq_key = r.get("seq_key")
             if seq_key is None:
                 seq_key = jax.random.key(
@@ -893,6 +899,8 @@ class ServingEngine:
             s = self.slots[i]
             t = int(tok_host[i])
             s.generated.append(t)
+            if s.sink is not None:
+                s.sink(t)
             s.counter += 1
             emitted[i] = t
             self.pager.grow(f"slot{i}", len(s.prompt) + len(s.generated) + 1)
@@ -1039,6 +1047,8 @@ class ServingEngine:
                 s = self.slots[slot]
                 t = int(pend_host[slot])
                 s.generated.append(t)
+                if s.sink is not None:
+                    s.sink(t)
                 s.counter += 1
                 new_counters.append(s.counter)
                 emitted[slot] = t
@@ -1105,6 +1115,7 @@ class ServingEngine:
         with self._lock:
             self.slots[slot].active = False
             self.slots[slot].prefilling = False
+            self.slots[slot].sink = None
             self._prefill_queue = [j for j in self._prefill_queue
                                    if j.slot != slot]
             self.pager.release(f"slot{slot}")
@@ -1143,7 +1154,7 @@ class ServingEngine:
         return snap
 
     def restore(self, snap: ContextSnapshot, *, seq_id=None,
-                eager: bool = True) -> int:
+                eager: bool = True, sink=None) -> int:
         """Resume a suspended sequence into a free slot (exact continuation).
         A text-kind snapshot re-prefills its context; with ``eager=False``
         that re-prefill only joins the chunked queue, so a scheduler worker
@@ -1162,6 +1173,9 @@ class ServingEngine:
             s.generated = list(snap.generated)
             s.max_new = getattr(snap, "max_new", 32)
             s.eos_id = getattr(snap, "eos_id", -1)
+            s.sink = sink   # snapshots never carry the channel: already-
+                            # streamed tokens live in `generated`, only NEW
+                            # tokens flow (exactly-once across migrations)
         key = jax.random.wrap_key_data(jnp.asarray(snap.seq_key_data))
         self.seq_keys = self.seq_keys.at[slot].set(key)
         if snap.kind == "logits":

@@ -1,0 +1,336 @@
+"""Multi-tenant front door (paper §3.8): tenant-scoped syscall surface with
+quota admission, per-tenant SLO targets, cross-tenant ACL on memory/storage
+syscalls, incremental token streaming, and cooperative cancellation."""
+import time
+
+import pytest
+
+from repro.control.slo import SLOPolicy, SLORegistry
+from repro.core import AIOSKernel
+from repro.sdk import api
+from repro.sdk.api import AgentSession
+from repro.sdk.query import (AccessQuery, LLMQuery, MemoryQuery, StorageQuery,
+                             ToolQuery)
+
+PROMPT = list(range(1, 9))
+
+
+@pytest.fixture(scope="module")
+def kernel():
+    k = AIOSKernel(arch="tiny", scheduler="batched", quantum=32,
+                   engine_kw={"max_slots": 4, "max_len": 256})
+    k.start()
+    yield k
+    k.stop()
+
+
+def _wait_status(sc, want, timeout=30):
+    deadline = time.time() + timeout
+    while sc.status != want and time.time() < deadline:
+        time.sleep(0.01)
+    return sc.status
+
+
+# ---------------------------------------------------------------------------
+# quota admission
+# ---------------------------------------------------------------------------
+class TestQuotas:
+    def test_concurrent_quota_binds_other_tenants_unaffected(self, kernel):
+        kernel.register_tenant("qa-conc", max_concurrent=1)
+        hog = AgentSession(kernel, "hog", tenant="qa-conc")
+        other = AgentSession(kernel, "bystander", tenant="qa-conc-other")
+        sc1 = hog.submit(LLMQuery(prompt=PROMPT, max_new_tokens=48))
+        time.sleep(0.02)        # let it enter the front door first
+        sc2 = hog.submit(LLMQuery(prompt=PROMPT, max_new_tokens=8))
+        with pytest.raises(RuntimeError, match="max_concurrent"):
+            sc2.join(timeout=10)
+        # a different tenant is not affected by qa-conc's quota
+        assert other.llm_chat(PROMPT, max_new_tokens=8)["finished"]
+        assert len(sc1.join(timeout=120)["tokens"]) == 48
+        # slot freed: the tenant can admit again
+        assert hog.llm_chat(PROMPT, max_new_tokens=8)["finished"]
+        u = kernel.access.tenant_usage("qa-conc")
+        assert u["inflight"] == 0 and u["quota_rejections"] == 1
+
+    def test_token_budget_binds_and_settles_actuals(self, kernel):
+        kernel.register_tenant("qa-tok", token_budget=40)
+        s = AgentSession(kernel, "tok", tenant="qa-tok")
+        assert len(s.llm_chat(PROMPT, max_new_tokens=32)["tokens"]) == 32
+        u = kernel.access.tenant_usage("qa-tok")
+        assert u["tokens_spent"] == 32 and u["tokens_reserved"] == 0
+        # 32 spent + 32 requested > 40 -> rejected naming the budget
+        sc = s.submit(LLMQuery(prompt=PROMPT, max_new_tokens=32))
+        with pytest.raises(RuntimeError, match="token_budget"):
+            sc.join(timeout=10)
+        # 32 spent + 8 requested <= 40 -> admitted
+        assert len(s.llm_chat(PROMPT, max_new_tokens=8)["tokens"]) == 8
+
+    def test_page_quota_binds(self, kernel):
+        pager = kernel.pool.cores[0].engine.pager
+        need = pager.pages_for(len(PROMPT) + 32)
+        kernel.register_tenant("qa-page", kv_page_budget=need - 1)
+        s = AgentSession(kernel, "pg", tenant="qa-page")
+        sc = s.submit(LLMQuery(prompt=PROMPT, max_new_tokens=32))
+        with pytest.raises(RuntimeError, match="kv_page_budget"):
+            sc.join(timeout=10)
+
+    def test_unregistered_tenant_is_unlimited(self, kernel):
+        s = AgentSession(kernel, "free", tenant="qa-unregistered")
+        scs = [s.submit(LLMQuery(prompt=PROMPT, max_new_tokens=4))
+               for _ in range(6)]
+        assert all(len(sc.join(timeout=120)["tokens"]) == 4 for sc in scs)
+
+    def test_quota_rejection_is_audited(self, kernel):
+        kernel.register_tenant("qa-audit", max_concurrent=0)
+        s = AgentSession(kernel, "aud", tenant="qa-audit")
+        with pytest.raises(RuntimeError, match="max_concurrent"):
+            s.llm_chat(PROMPT, max_new_tokens=4)
+        entries = [e for e in kernel.access.audit_log
+                   if e["op"] == "quota_reject" and e["tenant"] == "qa-audit"]
+        assert entries and "max_concurrent" in entries[-1]["reason"]
+        assert kernel.metrics()["access"]["quota_rejections"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# per-tenant SLO registry
+# ---------------------------------------------------------------------------
+class TestSLORegistry:
+    def test_registry_resolution_unit(self):
+        reg = SLORegistry()
+        reg.set_targets("gold", {"interactive": 0.05, "batch": 0.5})
+        pol = SLOPolicy(registry=reg)
+
+        class FakeSC:
+            slo_class = "interactive"
+            tenant_id = "gold"
+        assert pol.target(FakeSC()) == 0.05
+        FakeSC.tenant_id = "plain"
+        assert pol.target(FakeSC()) == 0.25        # class default
+        FakeSC.tenant_id = "gold"
+        FakeSC.slo_class = "best_effort"           # no override for class
+        assert pol.target(FakeSC()) == float("inf")
+        with pytest.raises(ValueError):
+            reg.set_targets("x", {"nope": 1.0})
+
+    def test_kernel_wires_registry_into_control_plane(self):
+        k = AIOSKernel(arch="tiny", scheduler="batched", quantum=32,
+                       control=True,
+                       engine_kw={"max_slots": 2, "max_len": 128})
+        k.register_tenant("gold", slo_targets={"interactive": 0.07})
+        assert k.control.policy.registry is k.access.slo_registry
+        sc = LLMQuery(prompt=PROMPT, slo_class="interactive").to_syscall(
+            "a", tenant_id="gold")
+        k.control.policy.tag(sc)
+        assert k.control.policy.target(sc) == 0.07
+        sc2 = LLMQuery(prompt=PROMPT, slo_class="interactive").to_syscall("a")
+        k.control.policy.tag(sc2)
+        assert k.control.policy.target(sc2) == 0.25
+
+
+# ---------------------------------------------------------------------------
+# cross-tenant / cross-agent ACL on memory + storage syscalls
+# ---------------------------------------------------------------------------
+class TestCrossTenantACL:
+    def test_memory_cross_tenant_denied_cross_agent_gated(self, kernel):
+        alice = AgentSession(kernel, "alice", tenant="acme")
+        spy = AgentSession(kernel, "spy", tenant="evil")
+        mid = alice.create_memory("acme quarterly numbers")["memory_id"]
+        r = spy.get_memory(mid, target_agent="alice", target_tenant="acme")
+        assert not r["success"] and "access denied" in r["error"]
+        # same tenant, no privilege -> denied; after grant -> allowed
+        bob = AgentSession(kernel, "bob", tenant="acme")
+        r2 = bob.get_memory(mid, target_agent="alice")
+        assert not r2["success"] and "access denied" in r2["error"]
+        alice.add_privilege("bob", "alice")
+        r3 = bob.get_memory(mid, target_agent="alice")
+        assert r3["success"] and r3["content"] == "acme quarterly numbers"
+        # the grant lives in tenant 'acme': same names in another tenant
+        # get nothing
+        bob_evil = AgentSession(kernel, "bob", tenant="evil")
+        r4 = bob_evil.get_memory(mid, target_agent="alice",
+                                 target_tenant="acme")
+        assert not r4["success"]
+
+    def test_memory_blocks_are_tenant_namespaced(self, kernel):
+        a1 = AgentSession(kernel, "shared-name", tenant="ns-one")
+        a2 = AgentSession(kernel, "shared-name", tenant="ns-two")
+        mid = a1.create_memory("tenant one's note")["memory_id"]
+        # same agent name, different tenant: does not see the note
+        assert not a2.get_memory(mid)["success"]
+        assert a1.get_memory(mid)["success"]
+
+    def test_storage_cross_tenant_denied(self, kernel):
+        w = AgentSession(kernel, "writer", tenant="acme")
+        w.write_file("reports/q3.txt", "classified")
+        out = AgentSession(kernel, "outsider", tenant="evil")
+        r = out.read_file("reports/q3.txt", target_agent="writer",
+                          target_tenant="acme")
+        assert not r["success"] and "access denied" in r["error"]
+        # within-tenant privilege grant opens it
+        reader = AgentSession(kernel, "reader", tenant="acme")
+        r2 = reader.read_file("reports/q3.txt", target_agent="writer")
+        assert not r2["success"]
+        w.add_privilege("reader", "writer")
+        r3 = reader.read_file("reports/q3.txt", target_agent="writer")
+        assert r3["success"] and r3["content"] == "classified"
+
+    def test_check_access_syscall_cross_tenant(self, kernel):
+        a = AgentSession(kernel, "alice", tenant="acme")
+        assert not a.check_access("alice", "alice",
+                                  target_tenant="evil")["granted"]
+        assert a.check_access("alice", "alice")["granted"]
+
+
+# ---------------------------------------------------------------------------
+# unified op dispatch: unknown ops fail structured, never raw KeyError
+# ---------------------------------------------------------------------------
+class TestUnknownOps:
+    def test_unknown_ops_structured(self, kernel):
+        s = AgentSession(kernel, "u1")
+        for q, frag in [(MemoryQuery("frobnicate"), "unknown"),
+                        (StorageQuery("sto_frobnicate"), "unknown"),
+                        (ToolQuery("no_such_tool"), "unknown tool"),
+                        (AccessQuery("frobnicate"), "unknown")]:
+            r = s.send(q)
+            assert r["success"] is False and frag in r["error"], (q, r)
+            assert "KeyError" not in r["error"]
+
+    def test_unknown_op_error_names_known_ops(self, kernel):
+        r = AgentSession(kernel, "u2").send(MemoryQuery("bogus"))
+        assert "add_memory" in r["error"] and "retrieve_memory" in r["error"]
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+class TestStreaming:
+    def test_stream_tokens_bit_equal_blocking(self, kernel):
+        s = AgentSession(kernel, "streamer", tenant="st")
+        blocking = s.llm_chat(PROMPT, max_new_tokens=24)
+        sc = s.llm_chat(PROMPT, max_new_tokens=24, stream=True)
+        streamed = list(sc.stream(timeout=120))
+        final = sc.join(timeout=120)
+        assert streamed == final["tokens"] == blocking["tokens"]
+        assert len(streamed) == 24
+
+    def test_stream_is_incremental(self, kernel):
+        s = AgentSession(kernel, "streamer2")
+        sc = s.llm_chat(PROMPT, max_new_tokens=48, stream=True)
+        it = sc.stream(timeout=120)
+        first = next(it)
+        t_first = time.monotonic()
+        rest = list(it)
+        sc.join(timeout=120)
+        # the first token arrived before the generation finished
+        assert sc.first_token_time is not None
+        assert sc.first_token_time <= sc.end_time
+        assert t_first <= sc.end_time + 1e-6
+        assert [first] + rest == sc.response["tokens"]
+
+    def test_stream_survives_quantum_suspend(self):
+        """quantum << max_new forces suspend/resume mid-generation; every
+        token still arrives exactly once, in order."""
+        k = AIOSKernel(arch="tiny", scheduler="batched", quantum=4,
+                       engine_kw={"max_slots": 1, "max_len": 128})
+        with k:
+            s = AgentSession(k, "sq")
+            # one slot + two streams: quantum expiry forces suspend/requeue
+            sc1 = s.llm_chat(PROMPT, max_new_tokens=32, stream=True)
+            sc2 = s.llm_chat(list(range(2, 10)), max_new_tokens=32,
+                             stream=True)
+            got1 = list(sc1.stream(timeout=120))
+            got2 = list(sc2.stream(timeout=120))
+            assert got1 == sc1.join()["tokens"]
+            assert got2 == sc2.join()["tokens"]
+
+    def test_stream_requires_flag(self, kernel):
+        s = AgentSession(kernel, "nf")
+        sc = s.submit(LLMQuery(prompt=PROMPT, max_new_tokens=4))
+        with pytest.raises(RuntimeError, match="stream=True"):
+            next(sc.stream())
+        sc.join(timeout=60)
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+# ---------------------------------------------------------------------------
+class TestCancellation:
+    def test_join_timeout_cancels_and_frees_resources(self):
+        k = AIOSKernel(arch="tiny", scheduler="batched", quantum=64,
+                       engine_kw={"max_slots": 2, "max_len": 256})
+        k.register_tenant("cx", max_concurrent=4)
+        with k:
+            s = AgentSession(k, "canceller", tenant="cx")
+            sc = s.submit(LLMQuery(prompt=PROMPT, max_new_tokens=200))
+            with pytest.raises(TimeoutError):
+                sc.join(timeout=0.05)
+            assert sc.cancelled
+            assert _wait_status(sc, "error") == "error"
+            assert sc.error == "cancelled"
+            # worker freed the slot + pages; quota charge released
+            eng = k.pool.cores[0].engine
+            deadline = time.time() + 10
+            while eng.free_slot_count() != eng.max_slots and \
+                    time.time() < deadline:
+                time.sleep(0.01)
+            assert eng.free_slot_count() == eng.max_slots
+            assert eng.pager.free_pages == eng.pager.num_pages
+            assert k.access.tenant_usage("cx")["inflight"] == 0
+            # the pool still serves new work
+            assert s.llm_chat(PROMPT, max_new_tokens=4)["finished"]
+
+    def test_cancel_queued_syscall(self):
+        """A syscall cancelled while still queued never runs."""
+        k = AIOSKernel(arch="tiny", scheduler="batched", quantum=64,
+                       engine_kw={"max_slots": 1, "max_len": 256})
+        with k:
+            s = AgentSession(k, "q")
+            sc1 = s.submit(LLMQuery(prompt=PROMPT, max_new_tokens=64))
+            sc2 = s.submit(LLMQuery(prompt=PROMPT, max_new_tokens=64))
+            assert sc2.cancel()
+            assert _wait_status(sc2, "error", timeout=60) == "error"
+            assert sc2.error == "cancelled"
+            assert len(sc1.join(timeout=120)["tokens"]) == 64
+        assert not sc1.cancel()     # already settled: cancel is a no-op
+
+    def test_cancel_on_rr_exclusive_path(self):
+        k = AIOSKernel(arch="tiny", scheduler="rr", quantum=8,
+                       engine_kw={"max_slots": 2, "max_len": 256})
+        with k:
+            s = AgentSession(k, "rr")
+            sc = s.submit(LLMQuery(prompt=PROMPT, max_new_tokens=200))
+            with pytest.raises(TimeoutError):
+                sc.join(timeout=0.05)
+            assert _wait_status(sc, "error") == "error"
+            eng = k.pool.cores[0].engine
+            deadline = time.time() + 10
+            while eng.free_slot_count() != eng.max_slots and \
+                    time.time() < deadline:
+                time.sleep(0.01)
+            assert eng.free_slot_count() == eng.max_slots
+            assert s.llm_chat(PROMPT, max_new_tokens=4)["finished"]
+
+
+# ---------------------------------------------------------------------------
+# session handle + wrapper delegation
+# ---------------------------------------------------------------------------
+class TestSessionSurface:
+    def test_module_wrappers_still_work(self, kernel):
+        r = api.llm_chat(kernel, "legacy", PROMPT, max_new_tokens=4)
+        assert r["finished"]
+        assert api.write_file(kernel, "legacy", "w/l.txt", "x")["success"]
+        assert api.read_file(kernel, "legacy", "w/l.txt")["content"] == "x"
+
+    def test_wrapper_and_session_bit_equal(self, kernel):
+        legacy = api.llm_chat(kernel, "cmp", PROMPT, max_new_tokens=8)
+        via_session = AgentSession(kernel, "cmp").llm_chat(
+            PROMPT, max_new_tokens=8)
+        assert legacy["tokens"] == via_session["tokens"]
+
+    def test_audit_log_syscall_scoped_to_tenant(self, kernel):
+        a = AgentSession(kernel, "aud-a", tenant="aud-t1")
+        b = AgentSession(kernel, "aud-b", tenant="aud-t2")
+        a.add_privilege("x", "y")
+        b.add_privilege("p", "q")
+        ents = a.get_audit_log()["entries"]
+        assert ents and all(e["tenant"] == "aud-t1" for e in ents)

@@ -144,7 +144,10 @@ def test_batched_preemption_fairness_long_job_yields():
                      engine_kw={"max_slots": 1, "max_len": 256}) as k:
         long_sc = _llm("long", max_new=40)
         k.submit(long_sc)
-        time.sleep(0.3)                      # long job admitted and decoding
+        deadline = time.time() + 60
+        while long_sc.status != "running":   # admitted (a fixed sleep races
+            time.sleep(0.005)                # warm-compile-cache decode speed)
+            assert time.time() < deadline
         short_sc = _llm("short", max_new=4)
         k.submit(short_sc)
         short_sc.join(timeout=300)

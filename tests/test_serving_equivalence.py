@@ -19,6 +19,12 @@ engine (logits- and text-kind snapshots) -- and replays the SAME schedule
 against every {path} x {paged_kv on/off} combination on all four model
 archs, asserting token bit-equality.
 
+Every sequence is also admitted with a streaming sink (the per-token
+channel behind ``llm_chat(stream=True)``): the harness asserts the streamed
+token sequence is bit-equal to the harvested result for every sequence in
+every combination -- including across migration, where ``restore`` re-wires
+the sink and the pending token must be emitted exactly once.
+
 Deterministic seeds always run; with ``hypothesis`` installed (CI dev
 extras) a property sweep explores more seeds. Per-row chunk-mask unit tests
 and the VLM mixed-batch coverage live here too.
@@ -112,6 +118,7 @@ class _Run:
         self.main = ServingEngine(cfg, engine_id=0, **kw)
         self.twin = ServingEngine(cfg, engine_id=1, **kw)
         self.live = {}       # name -> [engine, slot]
+        self.streamed = {}   # name -> tokens seen by the streaming sink
         self.finished = {}   # name -> (prompt ints, token list)
         self.max_new = {}    # name -> max_new
         self.names = []      # admission order
@@ -161,11 +168,15 @@ class _Run:
                 prompts = [self._resolve_prompt(spec) for spec in reqs]
                 while self.main.free_slot_count() < len(prompts):
                     self.tick()
+                names = [f"s{len(self.names) + i}"
+                         for i in range(len(prompts))]
+                sinks = [self.streamed.setdefault(n, []).append
+                         for n in names]
                 slots = self.main.add_sequences(
-                    [dict(prompt=p, max_new=max_new) for p in prompts],
+                    [dict(prompt=p, max_new=max_new, sink=sink)
+                     for p, sink in zip(prompts, sinks)],
                     eager=eager)
-                for p, slot in zip(prompts, slots):
-                    name = f"s{len(self.names)}"
+                for name, p, slot in zip(names, prompts, slots):
                     self.names.append(name)
                     self._prompts[name] = np.asarray(p, np.int32)
                     self.live[name] = [self.main, slot]
@@ -190,11 +201,16 @@ class _Run:
                 del self.live[name]
                 while other.free_slot_count() == 0:
                     self.tick()
-                slot2 = other.restore(snap)
+                slot2 = other.restore(snap,
+                                      sink=self.streamed[name].append)
                 snap.release()
                 self.live[name] = [other, slot2]
         while self.live:
             self.tick()
+        # streaming channel is bit-equal to the harvested result for every
+        # sequence -- exactly-once across suspend/migration included
+        for name, (_, toks) in self.finished.items():
+            assert self.streamed[name] == list(toks), (name, "stream")
         return {name: list(toks) for name, (_, toks) in
                 self.finished.items()}
 

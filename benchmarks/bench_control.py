@@ -211,8 +211,14 @@ def _tenant_part(quota: bool, *, n_hog: int, n_user: int, hog_new: int,
         t = time.monotonic()
         ssc = user.llm_chat(sprompt, max_new_tokens=32,
                             slo_class="interactive", stream=True)
-        next(ssc.stream(timeout=600))
+        # hold ONE iterator: abandoning a stream() generator mid-flight
+        # cancels the producer (backpressure contract), so TTFT peeks the
+        # first token and the same generator drains the rest
+        sit = ssc.stream(timeout=600)
+        next(sit)
         ttft = time.monotonic() - t
+        for _ in sit:
+            pass
         ssc.join(timeout=600)
         t = time.monotonic()
         user.llm_chat(sprompt, max_new_tokens=32, slo_class="interactive")

@@ -14,6 +14,10 @@ it must never change tokens):
                 second kernel's prefix hits come back from the disk-tier
                 manifests the first one persisted. Reports the hit-rate and
                 exact_match=1.0 against the first kernel's tokens.
+  quant      -- off-device bytes-per-token of the kv_quant=int8 page tiers
+                vs full precision, measured on a live mid-decode snapshot,
+                with the re-hydration exactness delta (greedy token
+                equality + final-logit drift).
   affinity   -- routing quality of fractional per-page residency scoring vs
                 the binary origin tag, on conversations whose pages span two
                 cores (the grown-resubmission-migrates pattern): fraction of
@@ -113,6 +117,58 @@ def _rehydrate_part(*, base_len: int, agents: int, max_new: int) -> Dict:
             "exact_match": float(outs1 == outs2)}
 
 
+# -- part 2b: quantized off-device page tiers ---------------------------------------
+def _quant_part(*, prompt_len: int, max_new: int) -> Dict:
+    """Bytes-per-token of off-device (host/disk) KV residency with
+    ``kv_quant=off`` vs ``int8``, measured on a real snapshot (decode
+    mid-stream, snapshot to the host tier, free the slot), plus the
+    re-hydration exactness delta: the restored-and-drained stream's greedy
+    tokens must equal the fp run's, with the final-logit drift reported."""
+    from benchmarks.common import TINY, shared_params
+    from repro.serving.engine import ServingEngine
+
+    prompt = np.arange(3, 3 + prompt_len, dtype=np.int32) % 400 + 1
+    res = {}
+    # 32-token pages for the off-device tier: per-channel scales amortize
+    # over the page's time axis, so bigger pages keep the bytes win near
+    # the dtype ratio (bf16 source -> ~1.9x; fp32 source -> ~3.5x)
+    for mode in ("off", "int8"):
+        store = KVPageStore(page_size=32, kv_quant=mode)
+        eng = ServingEngine(TINY, max_slots=2, max_len=256,
+                            params=shared_params(), page_store=store)
+        slot = eng.add_sequence(prompt, max_new=max_new)
+        for _ in range(max_new // 2):
+            eng.step()
+        snap = eng.snapshot(slot, kind="logits")   # pages land on host tier
+        eng.free(slot)
+        seq_len = prompt_len + max_new // 2
+        host_bytes = store.host_used()
+        slot = eng.restore(snap)
+        while not eng.is_done(slot):
+            eng.step()
+        res[mode] = {
+            "tokens": eng.result(slot),
+            "logits": np.asarray(eng._last_logits[slot], np.float64),
+            "host_bytes_per_token": round(host_bytes / seq_len, 1),
+            "quantized_pages": store.stats["quantized_pages"],
+            "saved_bytes": store.stats["quant_saved_bytes"],
+        }
+        eng.free(slot)
+        snap.release()
+    ratio = (res["off"]["host_bytes_per_token"]
+             / max(res["int8"]["host_bytes_per_token"], 1e-9))
+    assert res["int8"]["quantized_pages"] > 0
+    return {"mode": "quant", "prompt_len": prompt_len,
+            "bpt_off": res["off"]["host_bytes_per_token"],
+            "bpt_int8": res["int8"]["host_bytes_per_token"],
+            "bytes_ratio": round(ratio, 2),
+            "quant_saved_bytes": res["int8"]["saved_bytes"],
+            "logit_max_abs_err": float(np.abs(
+                res["off"]["logits"] - res["int8"]["logits"]).max()),
+            "exact_match": float(res["off"]["tokens"]
+                                 == res["int8"]["tokens"])}
+
+
 # -- part 3: fractional vs binary affinity scoring ----------------------------------
 def _affinity_part(*, conversations: int, pages_per_conv: int) -> Dict:
     """Routing-rule quality, isolated from scheduler noise: entries whose
@@ -177,17 +233,24 @@ def run(smoke: bool = False, quiet: bool = False) -> Dict:
     aff_kw = (dict(conversations=12, pages_per_conv=7) if smoke else
               dict(conversations=24, pages_per_conv=9))
 
+    qt_kw = (dict(prompt_len=64, max_new=8) if smoke else
+             dict(prompt_len=120, max_new=12))
+
     dedup = _dedup_part(**dd_kw)
     rehyd = _rehydrate_part(**rh_kw)
+    quant = _quant_part(**qt_kw)
     aff = _affinity_part(**aff_kw)
 
     out = {
-        "rows": [dedup, rehyd, aff],
+        "rows": [dedup, rehyd, quant, aff],
         "dedup_ratio": dedup["dedup_ratio"],
         "dedup_exact_match": dedup["exact_match"],
         "rehydrate_hit_rate": rehyd["hit_rate_k2"],
         "rehydrates": rehyd["rehydrates_k2"],
-        "exact_match": min(dedup["exact_match"], rehyd["exact_match"]),
+        "quant_bytes_ratio": quant["bytes_ratio"],
+        "quant_logit_max_abs_err": quant["logit_max_abs_err"],
+        "exact_match": min(dedup["exact_match"], rehyd["exact_match"],
+                           quant["exact_match"]),
         "affinity_hit_rate_binary": aff["hit_rate_binary"],
         "affinity_hit_rate_fractional": aff["hit_rate_fractional"],
     }
@@ -199,6 +262,11 @@ def run(smoke: bool = False, quiet: bool = False) -> Dict:
         print(f"[memory/rehydrate] fresh kernel: {rehyd['rehydrates_k2']} "
               f"rehydrates, hit rate {rehyd['hit_rate_k2']}, "
               f"exact_match={rehyd['exact_match']}")
+        print(f"[memory/quant]     off-device bytes/token "
+              f"{quant['bpt_off']} (fp) -> {quant['bpt_int8']} (int8): "
+              f"{quant['bytes_ratio']}x smaller | greedy tokens equal="
+              f"{bool(quant['exact_match'])}, logit max-abs-err="
+              f"{quant['logit_max_abs_err']:.3e}")
         print(f"[memory/affinity]  max-residency routing "
               f"{aff['hit_rate_binary']} (binary) -> "
               f"{aff['hit_rate_fractional']} (fractional)")

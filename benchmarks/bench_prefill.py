@@ -24,6 +24,9 @@ Four signals, swept over burst sizes and prompt lengths:
   tick under mixed load (2 -> 1) and pure-decode step wall time, where the
   interleaved engine pays the whole-tree inactive-row keep-guard (~17% of
   a CPU decode step at PR-2) that the per-row chunk mask retired.
+* packed -- the token-packed ragged layout vs the padded [rows x chunk]
+  dispatch at two chunk-occupancy ratios (decode-heavy ~15%, prefill-heavy
+  ~60%): wall per mixed tick, measured occupancy, token equality.
 
 Every mode also checks exactness: the tokens emitted after batched prefill
 and after mixed stepping must equal the serial path's.
@@ -153,6 +156,77 @@ def _unified_metrics(params, *, max_len=256, slots=8, steps=50,
                  out["decode_step_ms_mixed"]) /
         max(out["decode_step_ms_interleaved"], 1e-9), 1)
     return out
+
+
+def _packed_metrics(params, *, max_len=256, repeats=3) -> List[Dict]:
+    """Token-packed ragged dispatch vs the padded [rows x chunk] layout on
+    the SAME mixed engine, at two chunk-occupancy ratios:
+
+    * decode_heavy -- 7 decoding runners + 1 long admitting prompt: most
+      dispatch rows carry ONE real token, so the padded layout pays
+      rows x chunk slots for ~chunk + 7 real ones (occupancy ~15%);
+    * prefill_heavy -- 4 admitting prompts + 4 decoders: chunk rows
+      dominate and packing saves little (occupancy ~60%+).
+
+    Reported per scenario: measured occupancy (real / padded tokens from
+    the engine's packed stats), wall ms per mixed tick while the admission
+    drains, and token equality padded vs packed (runners and admits)."""
+    # NB uniform full-width prompts are deliberately absent: when every
+    # row fills the chunk, the power-of-2 token bucket equals the padded
+    # rectangle and the engine correctly stays on the padded program
+    scenarios = {
+        "decode_heavy": dict(runners=7, admit_lens=(160,)),
+        "prefill_heavy": dict(runners=4, admit_lens=(96, 56, 24, 40)),
+    }
+    rows = []
+    for name, sc in scenarios.items():
+        res = {}
+        for packed in (False, True):
+            eng = ServingEngine(TINY, max_slots=8, max_len=max_len,
+                                params=params, prefill_chunk_cap=64,
+                                packed_step=packed)
+            runners = [eng.add_sequence(_prompts(1, 64, 50 + i)[0],
+                                        max_new=max_len - 80)
+                       for i in range(sc["runners"])]
+            eng.serve_step()
+            best, outs = None, []
+            for rep in range(repeats + 1):        # rep 0 warms the buckets
+                prompts = [_prompts(1, L, 1000 + 17 * rep + j)[0]
+                           for j, L in enumerate(sc["admit_lens"])]
+                slots = eng.add_sequences(
+                    [dict(prompt=p, max_new=8) for p in prompts],
+                    eager=False)
+                ticks, t0 = 0, time.monotonic()
+                while eng.prefill_pending():
+                    eng.serve_step()
+                    ticks += 1
+                jax.block_until_ready(eng.next_tokens)
+                dt = (time.monotonic() - t0) / max(ticks, 1)
+                if rep > 0:
+                    best = dt if best is None else min(best, dt)
+                outs.append(_drain(eng, slots))
+            res[packed] = {
+                "tick_ms": round(best * 1e3, 3),
+                "outs": outs,
+                "runner_tokens": [eng.result(s)[:8] for s in runners],
+                "stats": dict(eng.stats),
+            }
+            for s in runners:
+                eng.free(s)
+        st = res[True]["stats"]
+        occ = st["packed_tokens"] / max(st["packed_padded_tokens"], 1)
+        assert st["packed_dispatches"] > 0, name
+        rows.append({
+            "scenario": name, "occupancy": round(occ, 3),
+            "padded_tick_ms": res[False]["tick_ms"],
+            "packed_tick_ms": res[True]["tick_ms"],
+            "packed_tick_speedup": round(
+                res[False]["tick_ms"] / max(res[True]["tick_ms"], 1e-9), 2),
+            "exact": (res[False]["outs"] == res[True]["outs"]
+                      and res[False]["runner_tokens"]
+                      == res[True]["runner_tokens"]),
+        })
+    return rows
 
 
 def run(burst_sizes=(1, 2, 4, 8), prompt_lens=(96, 224), max_len: int = 512,
@@ -294,6 +368,10 @@ def run(burst_sizes=(1, 2, 4, 8), prompt_lens=(96, 224), max_len: int = 512,
                            repeats=max(repeats, 3))
     exact &= uni["exact"]
 
+    # token-packed ragged dispatch vs padded layout at two occupancies
+    packed_rows = _packed_metrics(params, repeats=max(repeats, 3))
+    exact &= all(r["exact"] for r in packed_rows)
+
     big = [r for r in pool_summary if r["burst"] >= 4]
     summary = {
         "exact_match": 1.0 if exact else 0.0,
@@ -306,6 +384,8 @@ def run(burst_sizes=(1, 2, 4, 8), prompt_lens=(96, 224), max_len: int = 512,
         "unified": uni,
         "step_dispatch_reduction": uni["step_dispatch_reduction"],
         "guard_overhead_recovered_pct": uni["guard_overhead_recovered_pct"],
+        "packed": packed_rows,
+        "packed_min_occupancy": min(r["occupancy"] for r in packed_rows),
     }
     if not quiet:
         for r in rows:
@@ -325,6 +405,11 @@ def run(burst_sizes=(1, 2, 4, 8), prompt_lens=(96, 224), max_len: int = 512,
               f"{uni['decode_step_ms_mixed']}ms "
               f"({uni['guard_overhead_recovered_pct']}% guard overhead "
               f"recovered) | exact={uni['exact']}")
+        for r in packed_rows:
+            print(f"[prefill/packed] {r['scenario']}: occupancy="
+                  f"{r['occupancy']} tick {r['padded_tick_ms']}ms -> "
+                  f"{r['packed_tick_ms']}ms ({r['packed_tick_speedup']}x) "
+                  f"exact={r['exact']}")
         print(f"[prefill] exact={bool(exact)} | pool burst>=4: "
               f"{summary['speedup_burst4plus_pool']}x wall, "
               f"{summary['dispatch_reduction_burst4plus']}x dispatch | "

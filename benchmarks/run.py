@@ -84,7 +84,10 @@ def _derive(name: str, out: dict) -> str:
                 f"dispatch={out['dispatch_reduction_burst4plus']}x;"
                 f"stall={out['decode_stall_reduction']}x;"
                 f"tick_dispatch={out['step_dispatch_reduction']}x;"
-                f"guard={out['guard_overhead_recovered_pct']}%")
+                f"guard={out['guard_overhead_recovered_pct']}%;"
+                + "packed=" + "|".join(
+                    f"{r['scenario']}:{r['packed_tick_speedup']}x@occ"
+                    f"{r['occupancy']}" for r in out["packed"]))
     if name.startswith("context_switch"):
         ok = all(r["exact_match"] == 1.0 for r in rows)
         return f"exact_match_all={'1.0' if ok else 'FAIL'}"
@@ -112,6 +115,7 @@ def _derive(name: str, out: dict) -> str:
         return (f"exact={out['exact_match']};"
                 f"dedup={out['dedup_ratio']};"
                 f"rehydrate_hits={out['rehydrate_hit_rate']};"
+                f"quant={out['quant_bytes_ratio']}x;"
                 f"affinity={out['affinity_hit_rate_binary']}->"
                 f"{out['affinity_hit_rate_fractional']}")
     if name.startswith("throughput"):

@@ -1,0 +1,8 @@
+"""AIOS reproduction package.
+
+Importing ``repro`` opts the process into the persistent XLA compilation
+cache (set ``REPRO_XLA_CACHE=0`` to disable; see ``repro.xla_cache``).
+"""
+from repro.xla_cache import enable_persistent_cache
+
+enable_persistent_cache()

@@ -142,7 +142,12 @@ class AccessManager:
     def _release(self, sc, tokens_needed: int, pages_needed: int):
         spent = 0
         if sc.status == "done" and isinstance(sc.response, dict):
-            spent = int((sc.response.get("usage") or {}).get("new_tokens", 0))
+            usage = sc.response.get("usage") or {}
+            # settle at ACTUAL spend: generated tokens plus the prompt
+            # tokens really prefilled (a prefix-cache hit refunds the
+            # difference vs the full-prompt reservation)
+            spent = int(usage.get("new_tokens", 0)) + \
+                int(usage.get("prompt_tokens", 0))
         with self._lock:
             u = self._usage.get(sc.tenant_id)
             if u is None:

@@ -86,14 +86,21 @@ class LLMCore:
                 eos_id=rd.get("eos_id", -1),
                 image_embeds=rd.get("image_embeds"),
                 eager=eager, sink=sink)
+            # actual prefill cost of this admission (prefix-cache hits
+            # subtract): settled against the tenant's token budget at finish
+            sc._prefill_tokens = int(self.engine.slots[slot].prefilled)
         return slot
 
     def _finish(self, sc: LLMSyscall, slot: int) -> Dict[str, Any]:
         tokens = self.engine.result(slot)
+        prompt_tokens = getattr(sc, "_prefill_tokens", None)
+        if prompt_tokens is None:
+            prompt_tokens = len(self.engine.slots[slot].prompt)
         self.engine.harvest_prefix(slot)   # grown resubmissions extend, not re-prefill
         self.engine.free(slot)
         return {"tokens": tokens, "finished": True,
-                "usage": {"new_tokens": len(tokens)}}
+                "usage": {"new_tokens": len(tokens),
+                          "prompt_tokens": int(prompt_tokens)}}
 
     def _suspend(self, sc: LLMSyscall, slot: int, *,
                  pinned: bool = False) -> str:

@@ -79,9 +79,13 @@ class BaseScheduler:
         if sc.category != "llm":
             return 0, 0
         rd = sc.request_data
-        tokens = rd.get("max_new_tokens", 32)
+        # a tenant's token budget meters BOTH directions of the context:
+        # prompt tokens are prefill work (reserved up front, settled at the
+        # actual prefilled count -- prefix-cache hits refund the difference)
+        # and max_new bounds the decode side
+        tokens = len(rd["prompt"]) + rd.get("max_new_tokens", 32)
         pager = self.pool.cores[0].engine.pager
-        return tokens, pager.pages_for(len(rd["prompt"]) + tokens)
+        return tokens, pager.pages_for(tokens)
 
     def _front_door_admit(self, sc: Syscall) -> bool:
         """Tenant quota gate (paper §3.8): every submission passes through

@@ -24,6 +24,10 @@ DEFAULT_TENANT = "default"
 # sentinel closing a streaming token channel
 _STREAM_END = object()
 
+# default bound on a streaming channel: tokens queue ahead of the consumer
+# up to this depth, then backpressure escalates to cooperative cancel
+DEFAULT_STREAM_BUFFER = 256
+
 
 class SyscallCancelled(Exception):
     """Raised inside workers when a syscall's cancel flag is observed."""
@@ -152,22 +156,33 @@ class Syscall:
 
 class LLMSyscall(Syscall):
     """request_data: {prompt: list[int] | str, max_new_tokens, temperature,
-    eos_id, tools?, action_type?, stream?}
+    eos_id, tools?, action_type?, stream?, stream_buffer?}
 
     With ``stream=True`` the engine pushes each decoded token into a channel
     the issuing thread drains via ``stream()`` while the syscall is still
     running; the final token sequence is bit-equal to the blocking
-    ``join()["tokens"]`` because both read the same per-tick emissions."""
+    ``join()["tokens"]`` because both read the same per-tick emissions.
+
+    The channel is BOUNDED (``stream_buffer`` tokens, default
+    ``DEFAULT_STREAM_BUFFER``): a consumer that stops draining -- crashed,
+    disconnected, or garbage-collected mid-iteration -- cannot grow the
+    queue without limit while the engine decodes to an audience of zero.
+    Overflow (and generator abandonment, via ``stream()``'s finally block)
+    escalates to cooperative ``cancel()``, so the scheduler frees the slot,
+    KV pages and tenant quota charge on its next tick."""
     category = "llm"
 
     def __init__(self, agent_name: str, request_data: Dict[str, Any],
                  priority: int = 0, tenant_id: str = DEFAULT_TENANT):
         super().__init__(agent_name, request_data, priority, tenant_id)
-        self._stream_q: Optional[queue.Queue] = (
-            queue.Queue() if request_data.get("stream") else None)
+        self._stream_q: Optional[queue.Queue] = None
         self.first_token_time: Optional[float] = None
-        if self._stream_q is not None:
-            self.add_done_callback(lambda _sc: self._stream_q.put(_STREAM_END))
+        self.stream_overflows = 0
+        if request_data.get("stream"):
+            cap = int(request_data.get("stream_buffer",
+                                       DEFAULT_STREAM_BUFFER))
+            self._stream_q = queue.Queue(maxsize=max(1, cap))
+            self.add_done_callback(lambda _sc: self._push_end())
 
     def token_sink(self) -> Optional[Callable[[int], None]]:
         """Engine-facing per-token callback, or None for blocking calls."""
@@ -176,23 +191,54 @@ class LLMSyscall(Syscall):
     def push_token(self, token: int):
         if self.first_token_time is None:
             self.first_token_time = time.monotonic()
-        if self._stream_q is not None:
-            self._stream_q.put(token)
+        if self._stream_q is None:
+            return
+        try:
+            self._stream_q.put_nowait(token)
+        except queue.Full:
+            # the consumer is gone or stalled past the buffer: stop the
+            # producer instead of decoding into the void. Never blocks the
+            # engine tick.
+            self.stream_overflows += 1
+            self.cancel()
+
+    def _push_end(self):
+        """Settle marker: END must always land even when the channel is
+        full (the consumer re-reads the final status; queued-but-undrained
+        tokens of a settled syscall are droppable)."""
+        while True:
+            try:
+                self._stream_q.put_nowait(_STREAM_END)
+                return
+            except queue.Full:
+                try:
+                    self._stream_q.get_nowait()
+                except queue.Empty:
+                    pass
 
     def stream(self, timeout: Optional[float] = 600.0) -> Iterator[int]:
         """Yield tokens as the engine decodes them; returns when the syscall
-        settles. Raises if it failed. Requires ``stream=True`` at submit."""
+        settles. Raises if it failed. Requires ``stream=True`` at submit.
+        Abandoning the iterator (break / exception / GC) before the END
+        marker cancels the syscall -- the slot, pages and quota charge are
+        released instead of riding a stream nobody reads."""
         if self._stream_q is None:
             raise RuntimeError(
                 f"syscall pid={self.pid} was not submitted with stream=True")
-        while True:
-            item = self._stream_q.get(timeout=timeout)
-            if item is _STREAM_END:
-                if self.status == "error":
-                    raise RuntimeError(
-                        f"syscall pid={self.pid} failed: {self.error}")
-                return
-            yield item
+        finished = False
+        try:
+            while True:
+                item = self._stream_q.get(timeout=timeout)
+                if item is _STREAM_END:
+                    finished = True
+                    if self.status == "error":
+                        raise RuntimeError(
+                            f"syscall pid={self.pid} failed: {self.error}")
+                    return
+                yield item
+        finally:
+            if not finished:
+                self.cancel()
 
 
 class MemorySyscall(Syscall):

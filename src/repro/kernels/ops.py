@@ -61,6 +61,23 @@ def chunk_attention(q, k_cache, v_cache, q_offsets, q_lens=None, *, window=0,
                                **kw)
 
 
+def packed_chunk_attention(q, k_cache, v_cache, row_starts, q_offsets,
+                           q_lens, *, window=0, backend=None, **kw):
+    """Token-packed ragged chunk attention: q [Np, H, hd] concatenates all
+    rows' chunk tokens on one axis (row b at packed positions
+    ``row_starts[b] .. row_starts[b] + q_lens[b] - 1``) against [B, S, K, hd]
+    caches -- the mixed dispatch pays for real tokens, not rows x chunk
+    bucket. The Pallas path requires ``row_starts`` aligned to its block_q."""
+    b = backend or default_backend()
+    if b == "jnp":
+        return _ref.packed_chunk_attention_ref(q, k_cache, v_cache,
+                                               row_starts, q_offsets, q_lens,
+                                               window=window)
+    return _da.packed_chunk_attention(q, k_cache, v_cache, row_starts,
+                                      q_offsets, q_lens, window=window,
+                                      interpret=(b == "interpret"), **kw)
+
+
 def decode_attention(q, k_cache, v_cache, seq_lens, *, window=0, backend=None, **kw):
     b = backend or default_backend()
     if b == "jnp":

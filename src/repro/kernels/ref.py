@@ -72,6 +72,40 @@ def chunk_attention_ref(q, k_cache, v_cache, q_offsets, q_lens=None, *,
     return out
 
 
+def packed_chunk_attention_ref(q, k_cache, v_cache, row_starts, q_offsets,
+                               q_lens, *, window=0):
+    """Token-packed ragged chunk attention: q is [Np, H, hd] -- ALL rows'
+    chunk tokens concatenated on one axis (row b's tokens occupy packed
+    positions ``row_starts[b] .. row_starts[b] + q_lens[b] - 1``), so a
+    mixed dispatch pays FLOPs for real tokens only: a decode row costs one
+    packed slot, not a C-wide rectangle. Caches stay [B, S, K, hd] (the
+    chunk's K/V already written). ``row_starts`` must be non-decreasing
+    with row_starts[0] == 0; packed positions past a row's q_len (alignment
+    gaps, tail padding) produce zeros, mirroring chunk_attention_ref's
+    q_lens masking. Returns [Np, H, hd]."""
+    Np, H, hd = q.shape
+    B, S = k_cache.shape[0], k_cache.shape[1]
+    k = _broadcast_kv(k_cache, H)
+    v = _broadcast_kv(v_cache, H)
+    p_idx = jnp.arange(Np)
+    row = jnp.searchsorted(row_starts, p_idx, side="right") - 1   # [Np]
+    off = p_idx - row_starts[row]
+    valid = off < q_lens[row]
+    pos = q_offsets[row] + off                                    # [Np]
+    kg = k[row].astype(jnp.float32)                               # [Np, S, H, hd]
+    vg = v[row].astype(jnp.float32)
+    s = jnp.einsum("nhd,nshd->nhs", q.astype(jnp.float32),
+                   kg) / math.sqrt(hd)
+    kpos = jnp.arange(S)[None, :]                                 # [1, S]
+    mask = kpos <= pos[:, None]
+    if window:
+        mask &= kpos > (pos[:, None] - window)
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("nhs,nshd->nhd", p, vg).astype(q.dtype)
+    return jnp.where(valid[:, None, None], out, 0)
+
+
 def decode_attention_ref(q, k_cache, v_cache, seq_lens, *, window=0):
     """q: [B, H, hd]; caches [B, S, K, hd]; seq_lens [B]."""
     B, S, K, hd = k_cache.shape

@@ -43,6 +43,14 @@ import numpy as np
 from repro.memory.pagetable import KVPage, PageTable
 from repro.serving.paging import PageAllocator
 
+# int8 per-channel scales are stored bf16 (fp32 exponent range, 2 bytes --
+# jax ships ml_dtypes); fall back to fp32 where unavailable
+try:
+    import ml_dtypes
+    _SCALE_DTYPE = np.dtype(ml_dtypes.bfloat16)
+except Exception:               # noqa: BLE001
+    _SCALE_DTYPE = np.dtype(np.float32)
+
 
 class PageLayout:
     """Which flat leaves of a cache tree are pageable, and how to rebuild
@@ -139,9 +147,20 @@ class KVPageStore:
     def __init__(self, *, page_size: int = 16, device_pages: int = 1024,
                  host_budget_bytes: int = 256 << 20, storage=None,
                  persist: bool = True, index_ttl_s: float = 1.0,
-                 max_manifests: int = 1024):
+                 max_manifests: int = 1024, kv_quant: str = "off",
+                 gate_tokens: int = 4):
         assert page_size > 0
+        assert kv_quant in ("off", "int8"), kv_quant
         self.page_size = page_size
+        # precision as a tier property: with kv_quant="int8", pages landing
+        # on (or demoting to) the host/disk tiers hold int8 data plus
+        # per-channel scales; device-resident pages always stay full
+        # precision. Quantization happens EXACTLY ONCE, always from the
+        # original fp bytes -- a promoted page keeps its int8 form in host
+        # RAM (dequantized only at leaves()), so error never compounds.
+        self.kv_quant = kv_quant
+        self.gate_tokens = max(1, gate_tokens)   # prefix-probe gate depth
+        self._gate: Optional[Tuple[set, List[int]]] = None
         self.max_manifests = max_manifests   # persisted-prefix cap: oldest
                                              # manifests prune FIFO so a
                                              # long-running kernel's disk
@@ -169,6 +188,7 @@ class KVPageStore:
             "retired_pages": 0, "demotions_host": 0, "demotions_disk": 0,
             "promotions": 0, "persisted_entries": 0, "rehydrated_entries": 0,
             "device_rejections": 0, "gc_swept_blobs": 0, "gc_runs": 0,
+            "quantized_pages": 0, "quant_saved_bytes": 0, "gated_probes": 0,
         }
 
     # -- layouts -----------------------------------------------------------------
@@ -202,8 +222,66 @@ class KVPageStore:
     def _charge_device(self, pid: str, width: int) -> bool:
         return self.device_pager.reserve(pid, width)
 
+    # -- int8 tier precision -------------------------------------------------------
+    @staticmethod
+    def _quantize_slices(slices, taxes):
+        """Symmetric per-channel int8: the scale reduces over the TIME axis
+        only (shape = slice shape with that axis at size 1), so every
+        channel keeps its own dynamic range across the page's tokens.
+        All-zero channels get scale 1 (quantize to exact zeros). Scales are
+        stored bf16 (fp32 range, 2 bytes): a bf16-rounded scale shifts
+        q = clip(rint(f/s*127)) by at most one step -- noise the int8
+        rounding already carries -- and halving the per-channel metadata is
+        what keeps the bytes win near 2x for bf16 source caches."""
+        qs, scales = [], []
+        for a, ax in zip(slices, taxes):
+            f = np.asarray(a, np.float32)
+            s = np.max(np.abs(f), axis=ax, keepdims=True)
+            s = np.where(s == 0.0, 1.0, s)
+            s = np.asarray(s, _SCALE_DTYPE)
+            qs.append(np.clip(np.rint(f / s.astype(np.float32) * 127.0),
+                              -127, 127).astype(np.int8))
+            scales.append(s)
+        return qs, scales
+
+    @staticmethod
+    def _page_leaf(page: KVPage, j: int, dtype) -> np.ndarray:
+        """Slice j of a page in the layout's dtype, dequantizing int8
+        pages on the way out."""
+        a = page.data[j]
+        if page.scales is not None:
+            a = (a.astype(np.float32)
+                 * (page.scales[j].astype(np.float32) / 127.0))
+        return np.asarray(a, dtype)
+
+    @staticmethod
+    def _data_bytes(page: KVPage) -> int:
+        """Actual bytes of the page's CURRENT in-RAM representation (0 on
+        the disk tier) -- what host/device watermarks charge. Equals
+        page.nbytes for fp pages; smaller for quantized ones."""
+        if page.data is None:
+            return 0
+        n = sum(a.nbytes for a in page.data)
+        if page.scales is not None:
+            n += sum(a.nbytes for a in page.scales)
+        return n
+
+    def _quantize_page(self, page: KVPage) -> None:
+        """In-place demotion of a page's precision (fp -> int8 + scales).
+        Only ever called on pages still holding ORIGINAL fp data; the
+        caller re-charges the owning tier with the new _data_bytes."""
+        if page.scales is not None or page.data is None \
+                or page.taxes is None:
+            return
+        qs, scales = self._quantize_slices(page.data, page.taxes)
+        page.data, page.scales = qs, scales
+        self.stats["quantized_pages"] += 1
+        self.stats["quant_saved_bytes"] += page.nbytes - \
+            self._data_bytes(page)
+
     def _make_page(self, pid: str, slices: List[np.ndarray], width: int,
-                   origin: Optional[int], want_device: bool) -> KVPage:
+                   origin: Optional[int], want_device: bool,
+                   taxes=None) -> KVPage:
         nbytes = sum(a.nbytes for a in slices)
         tier = "host"
         if want_device:
@@ -221,28 +299,47 @@ class KVPageStore:
                 else:
                     self.stats["device_rejections"] += 1
         page = KVPage(pid, slices, nbytes, width, origin, tier)
+        page.taxes = tuple(taxes) if taxes is not None else None
         page.last_use = self._tick()
         if tier == "device":
             self._device_bytes += nbytes
         else:
-            self._host_used += nbytes
+            # landing off-device: quantize straight from the original fp
+            # slices before the host watermark is charged
+            if self.kv_quant == "int8":
+                self._quantize_page(page)
+            self._host_used += self._data_bytes(page)
         self.table.add(page)
         self.stats["put_pages"] += 1
         return page
 
     def _demote_device_to_host(self, page: KVPage) -> None:
         self.device_pager.release(page.pid)
+        self._device_bytes -= page.nbytes   # device copies are always fp
+        if self.kv_quant == "int8":
+            self._quantize_page(page)
         page.tier = "host"
-        self._device_bytes -= page.nbytes
-        self._host_used += page.nbytes
+        self._host_used += self._data_bytes(page)
         self.stats["demotions_host"] += 1
 
     def _flush(self, page: KVPage) -> bool:
+        """Write the page's disk blob. Versioned format: v2 is a dict
+        ``{"v": 2, "q": "off"|"int8", "data": [...], "scales": ...,
+        "taxes": ...}``; v1 blobs (a bare leaf list) are still readable by
+        ``_promote``. Under kv_quant="int8" a still-fp (device-tier) page
+        quantizes a COPY into the blob only -- its resident data stays full
+        precision."""
         if page.flushed:
             return True
         if self.storage is None or page.data is None:
             return False
-        self.storage.kv_page_save(page.pid, pickle.dumps(page.data))
+        data, scales = page.data, page.scales
+        if scales is None and self.kv_quant == "int8" \
+                and page.taxes is not None:
+            data, scales = self._quantize_slices(page.data, page.taxes)
+        payload = {"v": 2, "q": "off" if scales is None else "int8",
+                   "data": data, "scales": scales, "taxes": page.taxes}
+        self.storage.kv_page_save(page.pid, pickle.dumps(payload))
         page.flushed = True
         return True
 
@@ -253,8 +350,9 @@ class KVPageStore:
             self.device_pager.release(page.pid)
             self._device_bytes -= page.nbytes
         elif page.tier == "host":
-            self._host_used -= page.nbytes
+            self._host_used -= self._data_bytes(page)
         page.data = None
+        page.scales = None
         page.tier = "disk"
         self.stats["demotions_disk"] += 1
         return True
@@ -270,7 +368,7 @@ class KVPageStore:
             self.device_pager.release(page.pid)
             self._device_bytes -= page.nbytes
         elif page.tier == "host":
-            self._host_used -= page.nbytes
+            self._host_used -= self._data_bytes(page)
         self.table.remove(page.pid)
         self.stats["freed_pages"] += 1
 
@@ -289,7 +387,7 @@ class KVPageStore:
             self.device_pager.release(page.pid)
             self._device_bytes -= page.nbytes
         elif page.tier == "host":
-            self._host_used -= page.nbytes
+            self._host_used -= self._data_bytes(page)
         self.table.remove(page.pid)
         self.stats["retired_pages"] += 1
 
@@ -356,6 +454,9 @@ class KVPageStore:
                     sl = [slice(None)] * leaf.ndim
                     sl[ax] = slice(t0, t0 + width)
                     slices.append(np.ascontiguousarray(leaf[tuple(sl)]))
+                # identity (and hence dedup) is ALWAYS over the original fp
+                # bytes -- quantization changes a page's representation,
+                # never its id
                 pid = self._digest(layout_key, slices)
                 page = self.table.get(pid)
                 if page is not None:
@@ -363,7 +464,9 @@ class KVPageStore:
                     self.stats["dedup_hits"] += 1
                     self.stats["dedup_saved_bytes"] += page.nbytes
                 else:
-                    page = self._make_page(pid, slices, width, origin, device)
+                    page = self._make_page(
+                        pid, slices, width, origin, device,
+                        taxes=[lay.time_axes[i] for i in lay.paged_idx])
                 self.stats["put_bytes"] += page.nbytes   # logical (pre-dedup)
                 self.table.incref(pid)
                 page_ids.append(pid)
@@ -402,7 +505,8 @@ class KVPageStore:
                     ax = lay.time_axes[i]
                     sl = [slice(None)] * full[j].ndim
                     sl[ax] = slice(t0, t0 + page.width)
-                    full[j][tuple(sl)] = page.data[j]
+                    full[j][tuple(sl)] = self._page_leaf(
+                        page, j, lay.dtypes[i])
             if promoted:
                 self._enforce_host_budget(pinned)
         for j, i in enumerate(lay.paged_idx):
@@ -415,9 +519,18 @@ class KVPageStore:
         blob = self.storage.kv_page_load(page.pid) if self.storage else None
         if blob is None:
             raise KeyError(f"kv page {page.pid} not on disk")
-        page.data = pickle.loads(blob)
+        obj = pickle.loads(blob)
+        if isinstance(obj, dict) and obj.get("v") == 2:
+            page.data = list(obj["data"])
+            page.scales = (list(obj["scales"])
+                           if obj.get("q") == "int8" else None)
+            if page.taxes is None and obj.get("taxes") is not None:
+                page.taxes = tuple(obj["taxes"])
+        else:   # v1 blob: bare fp leaf list
+            page.data = obj
+            page.scales = None
         page.tier = "host"
-        self._host_used += page.nbytes
+        self._host_used += self._data_bytes(page)
         self.stats["promotions"] += 1
 
     def release(self, handle: PagedKV) -> None:
@@ -506,6 +619,7 @@ class KVPageStore:
             # keep hitting the cache instead of re-reading the blob
             self._index_cache = dict(idx)
             self._index_time = time.monotonic()
+            self._gate = self._build_gate(self._index_cache)
         self.stats["persisted_entries"] += 1
         return True
 
@@ -519,7 +633,26 @@ class KVPageStore:
                 or now - self._index_time > self.index_ttl_s):
             self._index_cache = self.storage.kv_manifest_index()
             self._index_time = now
+            self._gate = self._build_gate(self._index_cache)
         return self._index_cache
+
+    def _build_gate(self, index: Dict[str, int]) -> Tuple[set, List[int]]:
+        """Exact first-``gate_tokens`` gate over the manifest index: keys
+        are hex-encoded int32 token prefixes (8 hex chars per token), so
+        clipping a key at ``8 * min(n, gate_tokens)`` chars gives the
+        leading tokens without decoding. A probe whose own leading tokens
+        miss every clip can have NO manifest match (a match key[:8n] ==
+        tok[:n] implies its clip equals the probe's clip), so the O(index)
+        longest-prefix scan is skipped entirely -- the common cold-miss
+        path on a busy front door."""
+        G = self.gate_tokens
+        prefixes = set()
+        clips = set()
+        for key, n in index.items():
+            m = min(int(n), G)
+            prefixes.add(key[:8 * m])
+            clips.add(m)
+        return prefixes, sorted(clips)
 
     def rehydrate_prefix(self, tokens: np.ndarray, *, min_tokens: int = 4
                          ) -> Optional[PagedPrefixEntry]:
@@ -532,6 +665,14 @@ class KVPageStore:
         tok = np.ascontiguousarray(np.asarray(tokens, np.int32))
         with self.table.lock:     # snapshot: persist_prefix mutates in place
             index = list(self._manifest_index().items())
+            gate = self._gate
+        if gate is not None:
+            prefixes, clips = gate
+            tokb = tok.tobytes()
+            if not any(len(tok) >= m and tokb[:4 * m].hex() in prefixes
+                       for m in clips):
+                self.stats["gated_probes"] += 1
+                return None
         best_key, best_n = None, 0
         needles: Dict[int, str] = {}   # one hex conversion per distinct
                                        # length, not per index entry
@@ -619,6 +760,7 @@ class KVPageStore:
             tiers = self.table.tier_counts()
             page_bytes = sum(p.nbytes for p in self.table.pages())
             return dict(self.stats, pages=len(self.table),
+                        kv_quant=self.kv_quant,
                         page_bytes=page_bytes,
                         host_bytes=self._host_used,
                         residual_bytes=self._residual_bytes,

@@ -33,13 +33,14 @@ class KVPage:
     in-RAM reference); ``flushed`` records that the blob exists on disk."""
 
     __slots__ = ("pid", "data", "nbytes", "width", "refs", "tier", "origin",
-                 "durable", "flushed", "last_use")
+                 "durable", "flushed", "last_use", "scales", "taxes")
 
     def __init__(self, pid: str, data, nbytes: int, width: int,
                  origin: Optional[int], tier: str):
         self.pid = pid
         self.data = data
-        self.nbytes = nbytes
+        self.nbytes = nbytes        # attributed size: ORIGINAL fp bytes
+                                    # (identity-stable under quantization)
         self.width = width          # tokens covered (<= store page_size)
         self.refs = 0
         self.tier = tier
@@ -47,6 +48,14 @@ class KVPage:
         self.durable = False
         self.flushed = False
         self.last_use = 0
+        # precision is a property of the TIER, not the page identity: when
+        # the owning store runs kv_quant="int8", off-device copies hold int8
+        # data plus per-channel scales (time axis reduced to 1). scales is
+        # None while the page holds full-precision data; taxes records each
+        # slice's time-axis index so a later demotion can quantize without
+        # consulting the layout.
+        self.scales = None
+        self.taxes = None
 
 
 class PageTable:

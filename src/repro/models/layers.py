@@ -198,6 +198,61 @@ def chunk_attention(q, k_cache, v_cache, q_offsets, *, q_lens=None,
     return out.reshape(B, C, H, hd).astype(q.dtype)
 
 
+def packed_row_index(row_starts, q_lens, n_packed: int):
+    """Row membership of each packed token position: ``row[p]`` is the row
+    whose segment contains packed position p (``row_starts`` non-decreasing,
+    row_starts[0] == 0), ``valid[p]`` marks positions inside a row's q_len
+    (alignment gaps and tail padding are invalid), and ``off[p]`` is the
+    position's offset within its row. Shared by packed attention, packed
+    cache writes and the packed prefill bodies so the layout is decoded in
+    exactly one place."""
+    p_idx = jnp.arange(n_packed)
+    row = jnp.searchsorted(row_starts, p_idx, side="right") - 1
+    off = p_idx - row_starts[row]
+    valid = off < q_lens[row]
+    return row, off, valid
+
+
+def packed_chunk_attention(q, k_cache, v_cache, row_starts, q_offsets,
+                           q_lens, *, window: int = 0,
+                           use_kernel: bool = False):
+    """Token-packed ragged variant of ``chunk_attention``: q [Np, H, hd]
+    concatenates every row's chunk tokens on ONE packed axis (row b occupies
+    ``row_starts[b] .. row_starts[b] + q_lens[b] - 1``); caches stay
+    [B, S, K, hd] with the chunk's K/V already written. FLOPs scale with the
+    real tokens in the dispatch -- a decode row costs 1 packed slot, a
+    7-token tail chunk costs 7 -- instead of rows x chunk bucket. The jnp
+    fallback trades that FLOPs win for a gathered [Np, S, K, hd] read of the
+    caches (fine at CPU research scale; the Pallas kernel DMAs per-block
+    instead). Packed positions past a row's q_len produce zeros. Returns
+    [Np, H, hd]."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.packed_chunk_attention(q, k_cache, v_cache, row_starts,
+                                           q_offsets, q_lens, window=window)
+    Np, H, hd = q.shape
+    B, S, K, _ = k_cache.shape
+    g = H // K
+    scale = 1.0 / math.sqrt(hd)
+    row, _, valid = packed_row_index(row_starts, q_lens, Np)
+    pos = q_offsets[row] + (jnp.arange(Np) - row_starts[row])
+    kg = k_cache[row]                                  # [Np, S, K, hd]
+    vg = v_cache[row]
+    qg = q.reshape(Np, K, g, hd)
+    s = jnp.einsum("nkgd,nskd->nkgs", qg, kg,
+                   preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(S)[None, :]                      # [1, S]
+    mask = kpos <= pos[:, None]
+    if window:
+        mask &= kpos > (pos[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("nkgs,nskd->nkgd", p, vg,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(Np, H, hd).astype(q.dtype)
+    return jnp.where(valid[:, None, None], out, 0)
+
+
 def decode_attention(q, k_cache, v_cache, seq_lens, *, window: int = 0,
                      use_kernel: bool = False):
     """One-token attention against a contiguous KV cache.
@@ -298,6 +353,20 @@ def cache_write_chunk(cache, new, offsets, lengths):
     src = jnp.take_along_axis(new, jnp.clip(idx, 0, C - 1)[:, :, None, None],
                               axis=1)
     return jnp.where(hit[:, :, None, None], src.astype(cache.dtype), cache)
+
+
+def cache_write_packed(cache, new, rows, pos, valid):
+    """Scatter packed tokens into a [B, S, K, hd] cache: packed token p
+    (``new[p]``) lands at ``cache[rows[p], pos[p]]``; positions with
+    ``valid[p] == False`` (alignment gaps, tail padding, length-0 rows) are
+    dropped. Unlike cache_write_chunk this IS a scatter -- valid (row, pos)
+    pairs are unique so it is deterministic, and the serving cache is
+    unsharded, so the GSPMD scatter caveat of cache_write_token does not
+    bite; a sequence-sharded training cache should keep the masked-gather
+    forms. cache: [B, S, K, hd]; new: [Np, K, hd]; rows/pos/valid: [Np]."""
+    B = cache.shape[0]
+    wrows = jnp.where(valid, rows, B)          # out-of-bounds -> dropped
+    return cache.at[wrows, pos].set(new.astype(cache.dtype), mode="drop")
 
 
 # ---------------------------------------------------------------------------

@@ -418,6 +418,24 @@ class RecurrentGemma:
                      tail_h=th, tail_conv=tc, seq_lens=new_lens)
         return cache, logits
 
+    def prefill_packed(self, params, tokens, cache, *, row_starts, q_offset,
+                       lengths, chunk, image_embeds=None, image_mask=None,
+                       kv_width=None):
+        """Token-packed entry point: unpack [Np] back to the dense
+        [B, chunk] buffer and delegate to ``prefill_chunk`` -- the RG-LRU
+        scan is sequential per row and the attention window is already
+        bounded by the rolling buffer, so packing has no rectangle to
+        delete; this keeps the engine's packed layout uniform across archs,
+        bitwise identical by construction (same static ``chunk`` bucket,
+        gap slots unpack to the same zero pad tokens)."""
+        Np = tokens.shape[0]
+        idx = row_starts[:, None] + jnp.arange(chunk)[None, :]   # [B, chunk]
+        dense = jnp.where(jnp.arange(chunk)[None, :] < lengths[:, None],
+                          tokens[jnp.clip(idx, 0, Np - 1)], 0)
+        return self.prefill_chunk(params, dense, cache, q_offset=q_offset,
+                                  lengths=lengths, image_embeds=image_embeds,
+                                  image_mask=image_mask, kv_width=kv_width)
+
     # -- decode ------------------------------------------------------------------
     def decode_step(self, params, tokens, cache):
         cfg = self.cfg

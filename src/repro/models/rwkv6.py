@@ -377,6 +377,25 @@ class RWKV6:
                      seq_lens=new_lens)
         return cache, last @ params["head"]
 
+    def prefill_packed(self, params, tokens, cache, *, row_starts, q_offset,
+                       lengths, chunk, image_embeds=None, image_mask=None,
+                       kv_width=None):
+        """Token-packed entry point: unpack the [Np] packed axis back to the
+        dense [B, chunk] buffer and delegate to ``prefill_chunk`` -- the wkv
+        recurrence is sequential per row, so there is no dead-token FLOPs
+        rectangle for packing to delete here (``prefill_chunk`` already runs
+        narrow chunks unpadded); this path exists so the engine can issue ONE
+        packed layout for every arch, bitwise identical by construction
+        (``chunk`` is the same static bucket the padded dispatch would use,
+        and gap slots unpack to the same zero pad tokens)."""
+        Np = tokens.shape[0]
+        idx = row_starts[:, None] + jnp.arange(chunk)[None, :]   # [B, chunk]
+        dense = jnp.where(jnp.arange(chunk)[None, :] < lengths[:, None],
+                          tokens[jnp.clip(idx, 0, Np - 1)], 0)
+        return self.prefill_chunk(params, dense, cache, q_offset=q_offset,
+                                  lengths=lengths, image_embeds=image_embeds,
+                                  image_mask=image_mask, kv_width=kv_width)
+
     def decode_step(self, params, tokens, cache):
         cfg = self.cfg
         B = tokens.shape[0]

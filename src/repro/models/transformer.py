@@ -386,6 +386,116 @@ class DenseTransformer:
                                       cache["seq_lens"])
         return cache, last_logits
 
+    # -- token-packed ragged prefill -------------------------------------------
+    def prefill_packed(self, params, tokens, cache, *, row_starts, q_offset,
+                       lengths, chunk=None, image_embeds=None,
+                       image_mask=None, kv_width=None):
+        """Token-packed variant of ``prefill_chunk``: ``tokens`` is [Np] --
+        every row's chunk tokens concatenated on ONE packed axis, row b at
+        packed positions ``row_starts[b] .. row_starts[b] + lengths[b] - 1``
+        -- so the dispatch's FLOPs scale with the real tokens it carries (a
+        decode row costs 1 packed slot, a 7-token tail chunk costs 7) instead
+        of rows x chunk bucket. Same per-row semantics as prefill_chunk:
+        row b's tokens sit at absolute positions ``q_offset[b] ..``, rows
+        with ``lengths[b] == 0`` are preserved bit-for-bit (they simply own
+        no packed slots), and last_logits[b] reads the row's final valid
+        packed position (garbage for length-0 rows). ``chunk`` (static) is
+        interface parity with the recurrent archs' unpack-and-delegate
+        packed path; dense attention doesn't need it. VLM rows are
+        supported for image-free dispatches only (cross-attention reads each
+        token's cached xk/xv row) -- the engine routes dispatches that carry
+        image embeddings through the padded path."""
+        cfg = self.cfg
+        Np = tokens.shape[0]
+        B = lengths.shape[0]
+        x = params["embed"][tokens][None].astype(cfg.dtype)      # [1, Np, d]
+        row, off, valid = L.packed_row_index(row_starts, lengths, Np)
+        pos = q_offset[row] + off                                # [Np]
+        positions = pos[None]                                    # [1, Np]
+
+        def self_packed(blk, x, kc, vc):
+            h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(blk["attn"], h, cfg, positions)
+            narrow = kv_width is not None and kv_width < kc.shape[1]
+            kw = kc[:, :kv_width] if narrow else kc
+            vw = vc[:, :kv_width] if narrow else vc
+            kw = L.cache_write_packed(kw, k[0], row, pos, valid)
+            vw = L.cache_write_packed(vw, v[0], row, pos, valid)
+            o = L.packed_chunk_attention(q[0], kw, vw, row_starts, q_offset,
+                                         lengths, use_kernel=cfg.use_kernel)
+            if narrow:
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, kw, 0, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, vw, 0, axis=1)
+            else:
+                kc, vc = kw, vw
+            x = x + L.attn_out(blk["attn"], o[None])
+            return self._ffn(blk, x, infer=True), kc, vc
+
+        if self.is_vlm:
+            assert image_embeds is None, \
+                "packed dispatch carries no image rows (engine falls back)"
+
+            def body(x, xs):
+                blk, kc, vc, xk, xv = xs
+
+                def inner(x2, sub):
+                    sblk, kcl, vcl = sub
+                    x2, kcl, vcl = self_packed(sblk, x2, kcl, vcl)
+                    return x2, (kcl, vcl)
+
+                x, (kc, vc) = L.xscan(inner, x, (blk["selfs"], kc, vc))
+                h = L.rms_norm(x, blk["xln"], cfg.norm_eps)
+                H, hd = cfg.n_heads, cfg.head_dim
+                q = (h @ blk["xattn"]["wq"]).reshape(Np, H, hd)
+                o = self._cross_attend_packed(q, xk[row], xv[row])
+                gate = jnp.tanh(blk["xgate"]).astype(x.dtype)
+                x = x + gate * L.attn_out(blk["xattn"], o[None])
+                h = L.rms_norm(x, blk["xln2"], cfg.norm_eps)
+                x = x + L.mlp_apply(blk["xmlp"], h, cfg.activation)
+                return x, (kc, vc, xk, xv)
+
+            x, (kn, vn, xk, xv) = L.xscan(
+                _remat(body, cfg.remat_policy), x,
+                (params["blocks"], cache["k"], cache["v"],
+                 cache["xk"], cache["xv"]))
+            cache = dict(cache, k=kn, v=vn, xk=xk, xv=xv)
+        else:
+            def body(x, xs):
+                blk, kc, vc = xs
+                x, kc, vc = self_packed(blk, x, kc, vc)
+                return x, (kc, vc)
+
+            x, (kn, vn) = L.xscan(
+                _remat(body, cfg.remat_policy), x,
+                (params["blocks"], cache["k"], cache["v"]))
+            cache = dict(cache, k=kn, v=vn)
+
+        x = L.rms_norm(x, params["lnf"], cfg.norm_eps)[0]        # [Np, d]
+        last_idx = jnp.clip(row_starts + jnp.clip(lengths - 1, 0), 0, Np - 1)
+        last = x[last_idx]                                       # [B, d]
+        last_logits = last @ params["head"]
+        if cfg.logits_softcap:
+            last_logits = jnp.tanh(last_logits / cfg.logits_softcap) * cfg.logits_softcap
+        cache["seq_lens"] = jnp.where(lengths > 0, q_offset + lengths,
+                                      cache["seq_lens"])
+        return cache, last_logits
+
+    def _cross_attend_packed(self, q, xk, xv):
+        """Per-packed-token cross-attention onto each token's own row of
+        cached frontend K/V. q: [Np, H, hd]; xk/xv: [Np, T, K, hd]."""
+        import math
+        H = q.shape[1]
+        K = xk.shape[2]
+        if K != H:
+            xk = jnp.repeat(xk, H // K, axis=2)
+            xv = jnp.repeat(xv, H // K, axis=2)
+        s = jnp.einsum("nhd,nthd->nht", q.astype(jnp.float32),
+                       xk.astype(jnp.float32))
+        s = s / math.sqrt(q.shape[-1])
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("nht,nthd->nhd", p,
+                          xv.astype(jnp.float32)).astype(q.dtype)
+
     # -- decode ---------------------------------------------------------------
     def decode_step(self, params, tokens, cache):
         """tokens: [B] int32 -> (cache, logits [B, V])."""

@@ -26,18 +26,24 @@ class LLMQuery:
     slo_class: Optional[str] = None
     # stream=True opens the syscall's incremental token channel: iterate
     # LLMSyscall.stream() while it decodes; join() still returns the full
-    # (bit-equal) response afterwards.
+    # (bit-equal) response afterwards. stream_buffer bounds the channel --
+    # a consumer lagging past it (or gone) cancels the producer instead of
+    # queueing unboundedly (None = DEFAULT_STREAM_BUFFER).
     stream: bool = False
+    stream_buffer: Optional[int] = None
     query_class: str = "llm"
 
     def to_syscall(self, agent_name: str,
                    tenant_id: str = DEFAULT_TENANT) -> LLMSyscall:
-        return LLMSyscall(agent_name, {
+        rd = {
             "prompt": self.prompt, "max_new_tokens": self.max_new_tokens,
             "temperature": self.temperature, "eos_id": self.eos_id,
             "action_type": self.action_type, "slo_class": self.slo_class,
-            "stream": self.stream},
-            priority=self.priority, tenant_id=tenant_id)
+            "stream": self.stream}
+        if self.stream_buffer is not None:
+            rd["stream_buffer"] = self.stream_buffer
+        return LLMSyscall(agent_name, rd,
+                          priority=self.priority, tenant_id=tenant_id)
 
 
 @dataclasses.dataclass

@@ -90,7 +90,7 @@ class ContextSnapshot:
 
 class _Slot:
     __slots__ = ("active", "prefilling", "seq_id", "prompt", "generated",
-                 "counter", "max_new", "eos_id", "sink")
+                 "counter", "max_new", "eos_id", "sink", "prefilled")
 
     def __init__(self):
         self.active = False
@@ -101,6 +101,10 @@ class _Slot:
         self.counter = 0
         self.max_new = 0
         self.eos_id = -1
+        self.prefilled = 0        # prompt tokens this admission actually
+                                  # prefilled (prefix-cache hits subtract):
+                                  # what tenant token metering settles
+                                  # alongside generated tokens
         self.sink = None          # per-token callback (streaming syscalls):
                                   # called once per token appended to
                                   # `generated`, so a drained stream is
@@ -137,6 +141,11 @@ class _EngineJits:
     # fixed chunk-size buckets for batched chunked prefill: one compiled
     # program per chunk size (per max_slots shape), shared across replicas
     PREFILL_CHUNKS = (32, 64, 128, 256)
+
+    # total-token buckets for the packed ragged dispatch: the packed axis is
+    # padded up to the next power of two so jit specialization stays bounded
+    # (a handful of programs instead of one per total-token count)
+    PACKED_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
 
     def __init__(self, cfg, temperature: float):
         self.model = model = build_model(cfg)
@@ -192,6 +201,22 @@ class _EngineJits:
             return model.prefill_chunk(params, tokens, cache,
                                        q_offset=q_offset, lengths=lengths,
                                        kv_width=kv)
+
+        @functools.partial(jax.jit, static_argnames=("kv", "chunk"))
+        def prefill_packed(params, tokens, cache, row_starts, q_offset,
+                           lengths, kv, chunk):
+            """Token-packed ragged chunk dispatch: ``tokens`` [Np] carries
+            every participating row's chunk tokens concatenated (row r at
+            packed positions row_starts[r] .. row_starts[r]+lengths[r]-1),
+            so the model pays FLOPs for the real tokens in the dispatch --
+            a decode row costs 1 packed slot, not a C-wide rectangle.
+            ``chunk`` (static) is the padded bucket the dispatch would have
+            used: the recurrent archs unpack to it internally (their packed
+            path delegates), dense attention ignores it."""
+            return model.prefill_packed(params, tokens, cache,
+                                        row_starts=row_starts,
+                                        q_offset=q_offset, lengths=lengths,
+                                        chunk=chunk, kv_width=kv)
 
         @functools.partial(jax.jit, static_argnames=("kv",))
         def mixed_decode(params, tokens, cache, active_mask, kv):
@@ -252,6 +277,7 @@ class _EngineJits:
             return jax.tree.map(r, piece, zero, baxes)
 
         self.decode = decode
+        self.prefill_packed = prefill_packed
         self.insert = jax.jit(insert)
         self.extract = jax.jit(extract)
         self.prefill_chunk = prefill_chunk
@@ -314,7 +340,8 @@ class ServingEngine:
                  page_size: int = 16, hbm_pages: Optional[int] = None,
                  params=None, prefix_cache=None, serial_prefill: bool = False,
                  prefill_chunk_cap: Optional[int] = None, engine_id: int = 0,
-                 page_store=None, mixed_step: Optional[bool] = None):
+                 page_store=None, mixed_step: Optional[bool] = None,
+                 packed_step: Optional[bool] = None):
         self.cfg = cfg
         self.engine_id = engine_id   # pool position; tags prefix-cache
                                      # entries for affinity routing
@@ -327,6 +354,14 @@ class ServingEngine:
         # the PR-2 interleaved chunk-then-decode pair for differential tests.
         self.mixed = (not serial_prefill) if mixed_step is None \
             else bool(mixed_step)
+        # token-packed ragged dispatch: when a chunk dispatch's real tokens
+        # fit a smaller packed bucket than rows x chunk, issue them on one
+        # packed [total_tokens] axis instead of the padded [kb, C] rectangle.
+        # Default ON (bitwise-identical layout change); packed_step=False is
+        # the escape hatch AND the differential baseline the equivalence
+        # harness compares against.
+        self.packed = (not serial_prefill) if packed_step is None \
+            else bool(packed_step)
         self.prefill_chunk_cap = prefill_chunk_cap   # smaller cap = tighter
                                                # decode-stall bound while a
                                                # long prompt admits
@@ -376,7 +411,12 @@ class ServingEngine:
                       # mixed_steps counts unified dispatches, and
                       # mixed_decode_rows the decode tokens they carried
                       "model_dispatches": 0, "mixed_steps": 0,
-                      "mixed_decode_rows": 0}
+                      "mixed_decode_rows": 0,
+                      # token-packed dispatch: packed_tokens are the real
+                      # tokens issued on the flat axis, packed_padded_tokens
+                      # the padded [kb, C] cost they would have paid
+                      "packed_dispatches": 0, "packed_tokens": 0,
+                      "packed_padded_tokens": 0}
         self._build_jits()
         self._init_paging_layout()
 
@@ -450,6 +490,7 @@ class ServingEngine:
         self._prefill_img_jit = js.prefill_img
         self._prefill_chunk_jit = js.prefill_chunk
         self._prefill_chunk_img_jit = js.prefill_chunk_img
+        self._prefill_packed_jit = js.prefill_packed
         self._mixed_decode_jit = js.mixed_decode
         self._gather_jit = js.gather_rows
         self._scatter_jit = js.scatter_rows
@@ -543,6 +584,7 @@ class ServingEngine:
                 s.max_new = max_new
                 s.eos_id = r.get("eos_id", -1)
                 s.sink = r.get("sink")
+                s.prefilled = P   # prefix-hit paths below subtract
             seq_key = r.get("seq_key")
             if seq_key is None:
                 seq_key = jax.random.key(
@@ -579,6 +621,7 @@ class ServingEngine:
                 finally:
                     self._unpin_hit(hit)
                 self._activate_slot(slot, cache1, jnp.asarray(hit.logits))
+                self.slots[slot].prefilled = 0
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_saved_tokens"] += hit.seq_len
             elif hit is not None and not self.serial_prefill:
@@ -596,6 +639,7 @@ class ServingEngine:
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_saved_tokens"] += hit.seq_len
                 self.stats["prefix_extend_tokens"] += P - hit.seq_len
+                self.slots[slot].prefilled = P - hit.seq_len
                 self._enqueue_prefill(slot, prompt, done=hit.seq_len,
                                       fresh=False)
             elif self.serial_prefill:
@@ -1005,9 +1049,38 @@ class ServingEngine:
                 self.params, jnp.asarray(buf), piece, jnp.asarray(offsets),
                 jnp.asarray(lengths), img, imask, kv=kv)
         else:
-            piece, logits = self._prefill_chunk_jit(
-                self.params, jnp.asarray(buf), piece, jnp.asarray(offsets),
-                jnp.asarray(lengths), kv=kv)
+            # token-packed ragged dispatch: when the real tokens fit a
+            # packed bucket smaller than the [kb, C] rectangle, issue them
+            # on one flat axis -- a decode row costs 1 token, a 7-token
+            # tail chunk costs 7, not C. Row segments are aligned to the
+            # Pallas block_q (8) when the kernel path is on so block rows
+            # never straddle two sequences; the gap slots carry zero pad
+            # tokens that the per-row length mask kills.
+            align = 8 if self.cfg.use_kernel else 1
+            row_starts = np.zeros((kb,), np.int32)
+            cur = 0
+            for r in range(kb):
+                row_starts[r] = cur
+                cur += -(-int(lengths[r]) // align) * align
+            Npb = next((b for b in _EngineJits.PACKED_BUCKETS
+                        if b >= max(cur, 1)), None)
+            if self.packed and Npb is not None and Npb < kb * C:
+                flat = np.zeros((Npb,), np.int32)
+                for r in range(kb):
+                    n = int(lengths[r])
+                    if n:
+                        flat[row_starts[r]:row_starts[r] + n] = buf[r, :n]
+                piece, logits = self._prefill_packed_jit(
+                    self.params, jnp.asarray(flat), piece,
+                    jnp.asarray(row_starts), jnp.asarray(offsets),
+                    jnp.asarray(lengths), kv=kv, chunk=C)
+                self.stats["packed_dispatches"] += 1
+                self.stats["packed_tokens"] += int(lengths.sum())
+                self.stats["packed_padded_tokens"] += kb * C
+            else:
+                piece, logits = self._prefill_chunk_jit(
+                    self.params, jnp.asarray(buf), piece,
+                    jnp.asarray(offsets), jnp.asarray(lengths), kv=kv)
         if idx is None:
             self.cache = piece
         else:
@@ -1176,6 +1249,9 @@ class ServingEngine:
             s.sink = sink   # snapshots never carry the channel: already-
                             # streamed tokens live in `generated`, only NEW
                             # tokens flow (exactly-once across migrations)
+            s.prefilled = 0   # a resume re-materializes state it already
+                              # paid for at first admission: tenant token
+                              # metering must not double-charge the prompt
         key = jax.random.wrap_key_data(jnp.asarray(snap.seq_key_data))
         self.seq_keys = self.seq_keys.at[slot].set(key)
         if snap.kind == "logits":

@@ -1,6 +1,27 @@
+import gc
 import os
 import sys
+
+import pytest
 
 # tests must see exactly 1 device (the dry-run sets its own flags in-process)
 os.environ.pop("XLA_FLAGS", None)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_mmaps():
+    """Release compiled executables at module boundaries.
+
+    Every XLA CPU executable pins dozens of small LLVM JIT mappings and
+    jax keeps them alive in its jit caches forever; across the full suite
+    the process crosses ``vm.max_map_count`` (65530 default) and mmap
+    starts failing with ENOMEM -- which surfaces as LLVM "Cannot allocate
+    memory" errors and a segfault, not a clean Python error. Clearing
+    per module keeps the map count bounded by the fattest single module;
+    the persistent compilation cache (repro.xla_cache) turns the
+    resulting recompiles into cheap disk deserializes."""
+    yield
+    import jax
+    jax.clear_caches()
+    gc.collect()

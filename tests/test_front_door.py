@@ -53,17 +53,43 @@ class TestQuotas:
         assert u["inflight"] == 0 and u["quota_rejections"] == 1
 
     def test_token_budget_binds_and_settles_actuals(self, kernel):
-        kernel.register_tenant("qa-tok", token_budget=40)
+        # the budget meters BOTH directions: prompt (prefill work) + decode.
+        # distinct prompts per call keep prefix-cache refunds out of the
+        # arithmetic (they get their own test below)
+        kernel.register_tenant("qa-tok", token_budget=64)
         s = AgentSession(kernel, "tok", tenant="qa-tok")
-        assert len(s.llm_chat(PROMPT, max_new_tokens=32)["tokens"]) == 32
+        p1 = list(range(101, 109))
+        r1 = s.llm_chat(p1, max_new_tokens=32)
+        assert len(r1["tokens"]) == 32
+        assert r1["usage"] == {"new_tokens": 32, "prompt_tokens": 8}
         u = kernel.access.tenant_usage("qa-tok")
-        assert u["tokens_spent"] == 32 and u["tokens_reserved"] == 0
-        # 32 spent + 32 requested > 40 -> rejected naming the budget
-        sc = s.submit(LLMQuery(prompt=PROMPT, max_new_tokens=32))
+        # settled at actuals: 8 prefilled + 32 generated
+        assert u["tokens_spent"] == 40 and u["tokens_reserved"] == 0
+        # 40 spent + (8 prompt + 32 new) requested > 64 -> rejected
+        sc = s.submit(LLMQuery(prompt=list(range(111, 119)),
+                               max_new_tokens=32))
         with pytest.raises(RuntimeError, match="token_budget"):
             sc.join(timeout=10)
-        # 32 spent + 8 requested <= 40 -> admitted
-        assert len(s.llm_chat(PROMPT, max_new_tokens=8)["tokens"]) == 8
+        # 40 spent + (8 + 8) requested <= 64 -> admitted
+        p3 = list(range(121, 129))
+        assert len(s.llm_chat(p3, max_new_tokens=8)["tokens"]) == 8
+        assert kernel.access.tenant_usage("qa-tok")["tokens_spent"] == 56
+
+    def test_prefix_hit_refunds_prompt_tokens(self, kernel):
+        """The reservation charges the full prompt, but settlement meters
+        ACTUAL prefill work: an exact prefix-cache hit re-prefills nothing,
+        so the second identical call settles prompt_tokens=0."""
+        kernel.register_tenant("qa-prefix", token_budget=10_000)
+        s = AgentSession(kernel, "pfx", tenant="qa-prefix")
+        prompt = list(range(201, 211))
+        r1 = s.llm_chat(prompt, max_new_tokens=8)
+        assert r1["usage"]["prompt_tokens"] == len(prompt)
+        spent1 = kernel.access.tenant_usage("qa-prefix")["tokens_spent"]
+        assert spent1 == len(prompt) + 8
+        r2 = s.llm_chat(prompt, max_new_tokens=8)
+        assert r2["usage"]["prompt_tokens"] == 0
+        spent2 = kernel.access.tenant_usage("qa-prefix")["tokens_spent"]
+        assert spent2 == spent1 + 8   # only the generated tokens
 
     def test_page_quota_binds(self, kernel):
         pager = kernel.pool.cores[0].engine.pager
@@ -249,6 +275,69 @@ class TestStreaming:
         with pytest.raises(RuntimeError, match="stream=True"):
             next(sc.stream())
         sc.join(timeout=60)
+
+    def test_stream_buffer_is_bounded(self, kernel):
+        s = AgentSession(kernel, "cap")
+        sc = s.submit(LLMQuery(prompt=PROMPT, max_new_tokens=4, stream=True,
+                               stream_buffer=2))
+        assert sc._stream_q.maxsize == 2
+        assert list(sc.stream(timeout=120)) == sc.join(timeout=60)["tokens"]
+        sc2 = s.submit(LLMQuery(prompt=PROMPT, max_new_tokens=4, stream=True))
+        assert sc2._stream_q.maxsize == 256   # DEFAULT_STREAM_BUFFER
+        sc2.join(timeout=60)
+
+    def test_backpressure_cancels_undrained_stream(self):
+        """A consumer that never drains fills the bounded channel; overflow
+        escalates to cooperative cancel, and the worker frees the slot,
+        pages and tenant quota charge -- no tokens decode into the void."""
+        k = AIOSKernel(arch="tiny", scheduler="batched", quantum=64,
+                       engine_kw={"max_slots": 2, "max_len": 256})
+        k.register_tenant("bp", max_concurrent=4)
+        with k:
+            s = AgentSession(k, "ghost", tenant="bp")
+            sc = s.submit(LLMQuery(prompt=PROMPT, max_new_tokens=200,
+                                   stream=True, stream_buffer=4))
+            assert _wait_status(sc, "error", timeout=60) == "error"
+            assert sc.error == "cancelled"
+            assert sc.cancelled and sc.stream_overflows >= 1
+            eng = k.pool.cores[0].engine
+            deadline = time.time() + 10
+            while eng.free_slot_count() != eng.max_slots and \
+                    time.time() < deadline:
+                time.sleep(0.01)
+            assert eng.free_slot_count() == eng.max_slots
+            assert eng.pager.free_pages == eng.pager.num_pages
+            assert k.access.tenant_usage("bp")["inflight"] == 0
+            # END marker still lands on the full channel: a late drain sees
+            # the failure instead of hanging
+            with pytest.raises(RuntimeError, match="cancelled"):
+                list(sc.stream(timeout=5))
+            # the pool still serves new work
+            assert s.llm_chat(PROMPT, max_new_tokens=4)["finished"]
+
+    def test_abandoned_stream_iterator_cancels(self):
+        """Breaking out of stream() (consumer disconnect) cancels the
+        producer via the generator's finally block."""
+        k = AIOSKernel(arch="tiny", scheduler="batched", quantum=64,
+                       engine_kw={"max_slots": 2, "max_len": 256})
+        k.register_tenant("ab", max_concurrent=4)
+        with k:
+            s = AgentSession(k, "walker", tenant="ab")
+            sc = s.submit(LLMQuery(prompt=PROMPT, max_new_tokens=200,
+                                   stream=True))
+            it = sc.stream(timeout=120)
+            next(it)
+            it.close()          # consumer walks away mid-stream
+            assert sc.cancelled
+            assert _wait_status(sc, "error", timeout=60) == "error"
+            assert sc.error == "cancelled"
+            eng = k.pool.cores[0].engine
+            deadline = time.time() + 10
+            while eng.free_slot_count() != eng.max_slots and \
+                    time.time() < deadline:
+                time.sleep(0.01)
+            assert eng.free_slot_count() == eng.max_slots
+            assert k.access.tenant_usage("ab")["inflight"] == 0
 
 
 # ---------------------------------------------------------------------------

@@ -177,6 +177,66 @@ def test_chunk_attention_mixed_row_lengths(window):
                                   np.asarray(base)[1, 0])
 
 
+@pytest.mark.parametrize("window", [0, 24])
+def test_packed_chunk_attention_matches_ref(window):
+    """Token-packed ragged dispatch: rows of mixed length (full chunk,
+    decode token, inactive, unaligned tail) concatenated on one packed axis
+    with block_q-aligned row starts; Pallas (interpret) vs the packed ref."""
+    ks = jax.random.split(jax.random.key(22), 3)
+    B, S, H, K, hd, bq = 4, 96, 4, 2, 16, 8
+    qlens = np.array([16, 1, 0, 5], np.int32)
+    starts = np.zeros(B, np.int32)
+    cur = 0
+    for b in range(B):                    # align row segments to block_q
+        starts[b] = cur
+        cur += -(-int(qlens[b]) // bq) * bq
+    Np = max(cur, bq)
+    q = _rand(ks[0], (Np, H, hd), jnp.float32)
+    kc = _rand(ks[1], (B, S, K, hd), jnp.float32)
+    vc = _rand(ks[2], (B, S, K, hd), jnp.float32)
+    offs = jnp.array([10, 40, 0, 63], jnp.int32)
+    out = ops.packed_chunk_attention(
+        q, kc, vc, jnp.asarray(starts), offs, jnp.asarray(qlens),
+        window=window, backend="interpret", block_q=bq, block_k=32)
+    exp = ref.packed_chunk_attention_ref(
+        q, kc, vc, jnp.asarray(starts), offs, jnp.asarray(qlens),
+        window=window)
+    # contract: live packed positions match; alignment-gap slots inside a
+    # live block may hold garbage in the kernel (the unpack discards them)
+    # and are zeros in the ref
+    gap = np.ones(Np, bool)
+    for b in range(B):
+        gap[starts[b]:starts[b] + qlens[b]] = False
+    np.testing.assert_allclose(np.asarray(out, np.float32)[~gap],
+                               np.asarray(exp, np.float32)[~gap],
+                               atol=TOL[jnp.float32], rtol=TOL[jnp.float32])
+    assert np.all(np.asarray(exp)[gap] == 0)
+
+
+def test_packed_equals_padded_chunk_rows():
+    """The packed layout is a re-indexing, not a different computation:
+    each row's packed slice must equal the corresponding padded
+    chunk_attention row over the same cache."""
+    ks = jax.random.split(jax.random.key(23), 3)
+    B, C, S, H, K, hd = 3, 16, 96, 4, 2, 16
+    qlens = jnp.array([C, 1, 7], jnp.int32)
+    starts = jnp.array([0, C, C + 1], jnp.int32)       # dense, align=1
+    Np = C + 1 + 7
+    qpad = _rand(ks[0], (B, C, H, hd), jnp.float32)
+    kc = _rand(ks[1], (B, S, K, hd), jnp.float32)
+    vc = _rand(ks[2], (B, S, K, hd), jnp.float32)
+    offs = jnp.array([10, 40, 0], jnp.int32)
+    qflat = jnp.concatenate([qpad[b, :qlens[b]] for b in range(B)])
+    assert qflat.shape[0] == Np
+    packed = ref.packed_chunk_attention_ref(qflat, kc, vc, starts, offs,
+                                            qlens)
+    padded = ref.chunk_attention_ref(qpad, kc, vc, offs, qlens)
+    for b in range(B):
+        np.testing.assert_array_equal(
+            np.asarray(packed)[starts[b]:starts[b] + qlens[b]],
+            np.asarray(padded)[b, :qlens[b]])
+
+
 def test_chunk_attention_ignores_stale_cache_tail():
     """Property: output only depends on cache positions <= each query's
     absolute position (stale garbage beyond the written prefix is masked)."""

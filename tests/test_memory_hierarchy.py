@@ -109,6 +109,175 @@ class TestPageStore:
 
 
 # ---------------------------------------------------------------------------
+# quantized page tiers: int8 off-device precision as a tier property
+# ---------------------------------------------------------------------------
+class TestQuantizedTiers:
+    LAYOUT = "q|len64"
+
+    def _mk(self, **kw):
+        kw.setdefault("kv_quant", "int8")
+        st = _store(**kw)
+        st.register_layout(self.LAYOUT, [1, None], [(1, 64, 2), (1,)],
+                           [np.float32, np.int32])
+        return st
+
+    def _kv(self, seed, n=48):
+        kv = np.zeros((1, 64, 2), np.float32)
+        kv[0, :n] = np.random.default_rng(seed).normal(size=(n, 2))
+        return kv
+
+    def test_host_landing_quantizes_and_dequantizes_on_read(self):
+        st = self._mk()
+        kv = self._kv(0)
+        h = st.put(self.LAYOUT, [kv, np.array([48], np.int32)], seq_len=48)
+        assert st.stats["quantized_pages"] == 3
+        assert st.stats["quant_saved_bytes"] > 0
+        # int8 host residency: actual bytes well under the attributed fp
+        # size the handle accounts with (scales ride along)
+        assert st.host_used() < sum(p.nbytes for p in st.table.pages())
+        got = st.leaves(h)[0]
+        # per-channel symmetric int8: bounded error, not bit-equality
+        err = np.abs(got - kv).max()
+        assert 0 < err < 0.05
+        # the unpaged leaf (no time axis -> never quantized) stays exact
+        np.testing.assert_array_equal(
+            st.leaves(h)[1], np.array([48], np.int32))
+        h.release()
+        assert len(st.table) == 0
+
+    def test_dedup_and_refcounts_hold_across_quantized_pages(self):
+        """CoW identity is keyed on the ORIGINAL fp bytes: a second put of
+        the same content dedupes onto the already-quantized host pages, and
+        release/refcount semantics are unchanged by the tier precision."""
+        st = self._mk()
+        kv = self._kv(1)
+        h1 = st.put(self.LAYOUT, [kv, np.array([48], np.int32)], seq_len=48)
+        quantized_once = st.stats["quantized_pages"]
+        kv2 = kv.copy()
+        kv2[0, 48:64] = np.random.default_rng(2).normal(size=(16, 2))
+        h2 = st.put(self.LAYOUT, [kv2, np.array([64], np.int32)], seq_len=64)
+        assert st.stats["dedup_hits"] == 3
+        shared = [st.table.get(p) for p in h1.page_ids]
+        assert all(p.refs == 2 for p in shared)
+        assert all(p.scales is not None for p in shared)
+        # dedup re-referenced the existing int8 pages: no re-quantization
+        assert st.stats["quantized_pages"] == quantized_once + 1
+        # both handles read through the same quantized pages consistently
+        np.testing.assert_array_equal(st.leaves(h1)[0][0, :48],
+                                      st.leaves(h2)[0][0, :48])
+        h1.release()
+        assert all(p.refs == 1 for p in shared)
+        h2.release()
+        assert len(st.table) == 0
+
+    def test_demote_promote_roundtrip_through_disk(self):
+        """int8 pages flushed to the v2 disk blob and promoted back read
+        identically to their pre-demotion host form (quantize once: the
+        disk round trip adds NO further error)."""
+        storage = StorageManager(tempfile.mkdtemp(prefix="kvq-"))
+        st = self._mk(storage=storage)
+        kv = self._kv(3)
+        h = st.put(self.LAYOUT, [kv, np.array([48], np.int32)], seq_len=48)
+        before = st.leaves(h)[0]
+        assert st.demote_handle(h)
+        assert st.metrics()["disk_pages"] >= 3
+        after = st.leaves(h)[0]            # promote from the v2 blob
+        assert st.stats["promotions"] >= 3
+        np.testing.assert_array_equal(before, after)
+        assert np.abs(after - kv).max() < 0.05
+        h.release()
+
+    def test_device_tier_stays_full_precision(self):
+        """Device-resident pages are never quantized -- precision is a
+        property of the tier, and demotion under budget pressure is the
+        quantization point."""
+        st = self._mk(device_pages=2)
+        kv = self._kv(4, n=64)
+        h = st.put(self.LAYOUT, [kv, np.array([64], np.int32)], seq_len=64,
+                   device=True)
+        # 4 pages into a 2-page device budget: LRU pages demoted+quantized,
+        # the survivors still fp on device
+        assert st.stats["demotions_host"] >= 2
+        assert st.stats["quantized_pages"] >= 2
+        on_dev = [p for p in st.table.pages() if p.tier == "device"]
+        assert on_dev and all(p.scales is None for p in on_dev)
+        got = st.leaves(h)[0]
+        assert np.abs(got - kv).max() < 0.05
+        h.release()
+
+    def test_kv_quant_off_is_bit_exact(self):
+        storage = StorageManager(tempfile.mkdtemp(prefix="kvoff-"))
+        st = self._mk(storage=storage, kv_quant="off")
+        kv = self._kv(5)
+        h = st.put(self.LAYOUT, [kv, np.array([48], np.int32)], seq_len=48)
+        assert st.demote_handle(h)
+        np.testing.assert_array_equal(st.leaves(h)[0], kv)
+        assert st.stats["quantized_pages"] == 0
+        assert st.metrics()["kv_quant"] == "off"
+
+
+# ---------------------------------------------------------------------------
+# prefix-probe gate: O(1) reject before the manifest scan
+# ---------------------------------------------------------------------------
+class TestPrefixProbeGate:
+    LAY = "gate|64"
+
+    def _mk(self, root, **kw):
+        st = KVPageStore(page_size=16, storage=StorageManager(root), **kw)
+        st.register_layout(self.LAY, [1], [(1, 64, 2)], [np.float32])
+        return st
+
+    def test_nonmatching_probe_is_gated_matching_rehydrates(self):
+        root = tempfile.mkdtemp(prefix="kvgate-")
+        st = self._mk(root)
+        kv = np.zeros((1, 64, 2), np.float32)
+        kv[0, :32] = np.random.default_rng(6).normal(size=(32, 2))
+        prompt = np.arange(100, 132, dtype=np.int32)
+        snap = SimpleNamespace(pages=st.put(self.LAY, [kv], seq_len=32),
+                               prompt=prompt, seq_len=32,
+                               logits=np.zeros(8, np.float32), origin=0)
+        assert st.persist_prefix(snap)
+        # fresh store, same root ("another process"): first probe builds
+        # the gate from the manifest index
+        fresh = self._mk(root)
+        miss = np.arange(500, 532, dtype=np.int32)   # shares no lead tokens
+        assert fresh.rehydrate_prefix(miss) is None
+        assert fresh.stats["gated_probes"] == 1
+        assert fresh.metrics()["gated_probes"] == 1
+        # the gate is exact -- no false negatives: the real prefix (plus a
+        # divergent tail) still rehydrates, without a gated count
+        hit = np.concatenate([prompt, np.array([7, 9], np.int32)])
+        entry = fresh.rehydrate_prefix(hit)
+        assert entry is not None
+        np.testing.assert_array_equal(entry.pages.leaves()[0], kv)
+        assert fresh.stats["gated_probes"] == 1
+        # a probe matching only the first gate_tokens lead tokens passes
+        # the gate (not counted) but misses in the full scan
+        near = np.concatenate([prompt[:st.gate_tokens],
+                               np.arange(900, 910, dtype=np.int32)])
+        assert fresh.rehydrate_prefix(near) is None
+        assert fresh.stats["gated_probes"] == 1
+
+    def test_short_probe_never_false_negative(self):
+        """A probe shorter than gate_tokens must still match manifests via
+        their clipped keys (clip lengths adapt per entry)."""
+        root = tempfile.mkdtemp(prefix="kvgate2-")
+        st = self._mk(root, gate_tokens=16)
+        kv = np.zeros((1, 64, 2), np.float32)
+        kv[0, :16] = np.random.default_rng(7).normal(size=(16, 2))
+        prompt = np.arange(40, 56, dtype=np.int32)
+        snap = SimpleNamespace(pages=st.put(self.LAY, [kv], seq_len=16),
+                               prompt=prompt, seq_len=16,
+                               logits=np.zeros(8, np.float32), origin=0)
+        assert st.persist_prefix(snap)
+        fresh = self._mk(root, gate_tokens=16)
+        entry = fresh.rehydrate_prefix(
+            np.concatenate([prompt, np.array([3], np.int32)]))
+        assert entry is not None
+        assert fresh.stats["gated_probes"] == 0
+
+
+# ---------------------------------------------------------------------------
 # engine level: paged snapshots, prefix CoW, bit-exactness vs legacy
 # ---------------------------------------------------------------------------
 class TestEnginePaged:

@@ -103,18 +103,24 @@ def _make_schedule(seed, n_events=9):
 # ---------------------------------------------------------------------------
 
 class _Run:
-    """Replay one schedule on one (arch, mode, paged) engine pair."""
+    """Replay one schedule on one (arch, mode, paged) engine pair.
+    ``packed`` steers the token-packed ragged dispatch (None = engine
+    default: on for non-serial modes); ``kv_quant`` sets the page store's
+    off-device precision tier."""
 
-    def __init__(self, arch, mode, paged, temperature):
+    def __init__(self, arch, mode, paged, temperature, packed=None,
+                 kv_quant="off"):
         cfg = _cfg(arch)
-        self.store = KVPageStore(page_size=16, device_pages=8192) \
+        self.store = KVPageStore(page_size=16, device_pages=8192,
+                                 kv_quant=kv_quant) \
             if paged else None
         self.pc = PrefixCache()
         kw = dict(max_slots=SLOTS, max_len=MAX_LEN, rng_seed=0,
                   temperature=temperature, params=_params(arch),
                   prefix_cache=self.pc, page_store=self.store,
                   serial_prefill=(mode == "serial"),
-                  mixed_step=(False if mode == "chunked" else None))
+                  mixed_step=(False if mode == "chunked" else None),
+                  packed_step=packed)
         self.main = ServingEngine(cfg, engine_id=0, **kw)
         self.twin = ServingEngine(cfg, engine_id=1, **kw)
         self.live = {}       # name -> [engine, slot]
@@ -247,6 +253,94 @@ def test_equivalence_property(arch, seed):
 
 
 # ---------------------------------------------------------------------------
+# new grid axes: {packed on/off} x {kv_quant off/int8}
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_packed_dispatch_token_bit_exact(arch):
+    """The token-packed ragged dispatch is a pure LAYOUT change: identical
+    token streams to the padded [kb, C] dispatch on the same schedule, and
+    the packed path actually fires (decode rows cost 1 token, tail chunks
+    their true length)."""
+    temperature, events = _make_schedule(5)   # admit-heavy: co-batched chunks
+    ref = _Run(arch, "mixed", True, temperature, packed=False).run(events)
+    run = _Run(arch, "mixed", True, temperature, packed=True)
+    got = run.run(events)
+    assert got == ref, arch
+    assert run.main.stats["packed_dispatches"] > 0
+    assert run.main.stats["packed_tokens"] < \
+        run.main.stats["packed_padded_tokens"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_kv_quant_int8_greedy_token_exact(arch):
+    """int8 page tiers under a greedy schedule WITH migration (snapshots
+    land on the host tier, i.e. quantized): token streams stay equal to the
+    fp store; kv_quant=off stays bit-exact by construction. Archs with no
+    full-width KV leaves (pure-recurrent) drop the page store and pass
+    trivially."""
+    rng = np.random.default_rng(42)
+    p1 = rng.integers(1, 200, 20).astype(np.int32)
+    p2 = rng.integers(1, 200, 7).astype(np.int32)
+    # migrations AFTER decode ticks: the snapshot covers generated tokens
+    # beyond the cached prefix, so its boundary pages are new content that
+    # lands (quantized) on the host tier instead of deduping onto the
+    # device-resident prefix pages
+    events = [
+        ("admit", [("fresh", p1), ("fresh", p2)], True, 12),
+        ("tick", 6),
+        ("migrate", 0, "logits"),
+        ("tick", 3),
+        ("migrate", 0, "logits"),
+        ("admit", [("exact", 0)], True, 6),
+    ]
+    ref = _Run(arch, "mixed", True, 0.0, kv_quant="off").run(events)
+    run = _Run(arch, "mixed", True, 0.0, kv_quant="int8")
+    got = run.run(events)
+    assert got == ref, arch
+    if run.main.page_store is not None:
+        assert run.store.stats["quantized_pages"] > 0
+
+
+@pytest.mark.parametrize("arch", ["tiny", "moonshot-v1-16b-a3b"])
+def test_kv_quant_exactness_delta_report(arch):
+    """Quantified exactness of one int8 suspend/resume round-trip: greedy
+    next-token equality, with the logit max-abs-err printed (the harness's
+    exactness report) and bounded."""
+    cfg = _cfg(arch)
+
+    def _roundtrip(kv_quant):
+        store = KVPageStore(page_size=16, device_pages=8192,
+                            kv_quant=kv_quant)
+        eng = ServingEngine(cfg, max_slots=2, max_len=MAX_LEN, rng_seed=0,
+                            params=_params(arch), page_store=store)
+        rng = np.random.default_rng(2)
+        prompt = rng.integers(1, 200, 24).astype(np.int32)
+        slot = eng.add_sequence(prompt, max_new=16)
+        for _ in range(4):
+            eng.serve_step()
+        snap = eng.snapshot(slot, kind="logits")   # put -> host tier
+        eng.free(slot)
+        slot2 = eng.restore(snap)
+        snap.release()
+        while not eng.is_done(slot2):
+            eng.serve_step()
+        toks = eng.result(slot2)
+        return store, toks, np.asarray(eng._last_logits[slot2], np.float64)
+
+    store_fp, toks_fp, logits_fp = _roundtrip("off")
+    store_q, toks_q, logits_q = _roundtrip("int8")
+    assert store_fp.stats["quantized_pages"] == 0
+    assert store_q.stats["quantized_pages"] > 0
+    delta = float(np.max(np.abs(logits_fp - logits_q)))
+    print(f"\n[kv_quant=int8] {arch}: greedy tokens equal="
+          f"{toks_fp == toks_q} logit max-abs-err={delta:.3e} "
+          f"saved={store_q.stats['quant_saved_bytes']}B")
+    assert toks_fp == toks_q, arch     # greedy token equality
+    assert delta < 0.5, delta          # bounded logit drift
+
+
+# ---------------------------------------------------------------------------
 # per-row chunk-mask unit level (the generalized no-op invariant)
 # ---------------------------------------------------------------------------
 
@@ -350,6 +444,121 @@ class TestPerRowChunkMask:
                                   np.asarray(logits_chunk)), step
             _assert_rows_equal(cache, cache_chunk, axes, [0, 1, 2],
                                (arch, f"step {step}"))
+
+
+# ---------------------------------------------------------------------------
+# packed-layout edge rows (model level)
+# ---------------------------------------------------------------------------
+
+def _pack(buf, lens, align=1):
+    """Pack the live tokens of a padded [B, C] buffer onto one flat axis,
+    rounding each row segment up to ``align`` (the kernel path's block_q)."""
+    starts = np.zeros(len(lens), np.int32)
+    cur = 0
+    for b, n in enumerate(lens):
+        starts[b] = cur
+        cur += -(-int(n) // align) * align
+    flat = np.zeros(max(cur, 1), np.int32)
+    for b, n in enumerate(lens):
+        flat[starts[b]:starts[b] + int(n)] = buf[b, :int(n)]
+    return flat, starts
+
+
+class TestPackedLayout:
+    """``prefill_packed`` is BITWISE ``prefill_chunk`` on the same rows:
+    logits of every live row and every cache leaf. Covers the edge rows the
+    ragged layout introduces -- length-0 inactive rows, C==1 pure-decode
+    rows, short tail chunks, alignment gaps -- and the narrow-chunk window
+    wraparound of the rolling-buffer/recurrent models."""
+
+    def _compare(self, arch, lens_list, C, align=1):
+        cfg = _cfg(arch)
+        model = build_model(cfg)
+        params = _params(arch)
+        B = len(lens_list)
+        cache, _ = model.init_cache(B, MAX_LEN)
+        rng = np.random.default_rng(7)
+        # distinct per-row offsets: each row continues a short prefix
+        pre = np.array([5, 3, 9, 1, 2, 6, 4, 8][:B], np.int32)
+        buf0 = np.zeros((B, 16), np.int32)
+        for b in range(B):
+            buf0[b, :pre[b]] = rng.integers(1, 200, pre[b])
+        cache, _ = model.prefill_chunk(
+            params, jnp.asarray(buf0), cache,
+            q_offset=jnp.zeros((B,), jnp.int32),
+            lengths=jnp.asarray(pre), kv_width=None)
+        lens = np.asarray(lens_list, np.int32)
+        buf = np.zeros((B, C), np.int32)
+        for b in range(B):
+            buf[b, :lens[b]] = rng.integers(1, 200, lens[b])
+        pad_cache, pad_logits = model.prefill_chunk(
+            params, jnp.asarray(buf), cache, q_offset=jnp.asarray(pre),
+            lengths=jnp.asarray(lens), kv_width=None)
+        flat, starts = _pack(buf, lens, align=align)
+        pk_cache, pk_logits = model.prefill_packed(
+            params, jnp.asarray(flat), cache,
+            row_starts=jnp.asarray(starts), q_offset=jnp.asarray(pre),
+            lengths=jnp.asarray(lens), chunk=C, kv_width=None)
+        for b in range(B):
+            if lens[b]:
+                assert np.array_equal(np.asarray(pad_logits)[b],
+                                      np.asarray(pk_logits)[b]), (arch, b)
+        for i, (x, y) in enumerate(zip(jax.tree.leaves(pad_cache),
+                                       jax.tree.leaves(pk_cache))):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), (arch, i)
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_edge_rows_bitwise(self, arch):
+        # full chunk, decode row, inactive row, short tail -- one dispatch
+        self._compare(arch, [32, 1, 0, 7], C=32)
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_pure_decode_c1(self, arch):
+        # every live row is a length-1 decode row at chunk=1 (with one
+        # inactive row): the densest packing the engine emits
+        self._compare(arch, [1, 1, 0, 1], C=1)
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_aligned_packing_gaps(self, arch):
+        # block_q-aligned segments leave pad gaps between rows: the
+        # row_starts-based row derivation must kill the gap tokens
+        self._compare(arch, [7, 1, 0, 3], C=8, align=8)
+
+    @pytest.mark.parametrize("arch", ["rwkv6-1.6b", "recurrentgemma-2b"])
+    def test_narrow_chunk_wraparound(self, arch):
+        """Rolling buffers wrap modulo the window and recurrent carries
+        evolve every step: repeated narrow packed steps must stay bitwise
+        equal to the padded chunk path across multiple wraps
+        (recurrentgemma smoke window = 16, run ~2.5 windows)."""
+        cfg = _cfg(arch)
+        model = build_model(cfg)
+        params = _params(arch)
+        B, P = 3, 13
+        cache, _ = model.init_cache(B, MAX_LEN)
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(1, 200, (B, P)), jnp.int32)
+        cache, logits = model.prefill(params, toks, cache,
+                                      lengths=jnp.full((B,), P, jnp.int32))
+        pk_cache, pk_logits = cache, logits
+        for step in range(40):
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            offs = jnp.asarray(np.full((B,), P + step, np.int32))
+            ones = jnp.ones((B,), jnp.int32)
+            cache, logits = model.prefill_chunk(
+                params, nxt[:, None], cache, q_offset=offs, lengths=ones,
+                kv_width=None)
+            nxt_p = jnp.argmax(pk_logits, -1).astype(jnp.int32)
+            assert np.array_equal(np.asarray(nxt), np.asarray(nxt_p)), step
+            pk_cache, pk_logits = model.prefill_packed(
+                params, nxt_p, pk_cache,
+                row_starts=jnp.asarray(np.arange(B, dtype=np.int32)),
+                q_offset=offs, lengths=ones, chunk=1, kv_width=None)
+            assert np.array_equal(np.asarray(logits),
+                                  np.asarray(pk_logits)), step
+            for i, (x, y) in enumerate(zip(jax.tree.leaves(cache),
+                                           jax.tree.leaves(pk_cache))):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), \
+                    (step, i)
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,11 @@ Four signals, swept over burst sizes and prompt lengths:
 * packed -- the token-packed ragged layout vs the padded [rows x chunk]
   dispatch at two chunk-occupancy ratios (decode-heavy ~15%, prefill-heavy
   ~60%): wall per mixed tick, measured occupancy, token equality.
+* trace overhead -- the SAME mixed workload on an untraced engine vs one
+  with the full observability layer (tracer tick spans + profiler ring)
+  enabled: per-tick cost must stay under the 5% acceptance bound. With
+  ``trace_out`` set, a traced pool run also exports its Chrome-trace JSON
+  (the TRACE_pool.json CI artifact).
 
 Every mode also checks exactness: the tokens emitted after batched prefill
 and after mixed stepping must equal the serial path's.
@@ -229,8 +234,65 @@ def _packed_metrics(params, *, max_len=256, repeats=3) -> List[Dict]:
     return rows
 
 
+def _trace_overhead(params, *, max_len=256, steps=40, repeats=4) -> Dict:
+    """Observability cost on the hot path (acceptance bound: <5% per mixed
+    tick): the same workload -- 7 decoding runners while a long prompt
+    admits -- on an untraced engine vs one recording every tick into the
+    profiler ring AND emitting tracer tick spans. Decode-only serve_steps
+    are timed too (the per-token path where the recorder must not
+    allocate). Both engines run identical sequences (greedy, same seeds),
+    so the delta is purely the recorder."""
+    from repro.obs import TickProfiler, Tracer
+
+    res = {}
+    for mode in ("off", "on"):
+        okw = ({"tracer": Tracer(), "profiler": TickProfiler()}
+               if mode == "on" else {})
+        eng = ServingEngine(TINY, max_slots=8, max_len=max_len,
+                            params=params, prefill_chunk_cap=64, **okw)
+        runners = [eng.add_sequence(_prompts(1, 64, 60 + i)[0],
+                                    max_new=max_len - 80)
+                   for i in range(7)]
+        eng.serve_step()
+        # warm the admission shapes outside the timing
+        warm = eng.add_sequence(_prompts(1, 160, 9)[0], max_new=1,
+                                eager=False)
+        while eng.prefill_pending():
+            eng.serve_step()
+        eng.free(warm)
+        best_mixed = best_decode = None
+        for rep in range(repeats):
+            slot = eng.add_sequence(_prompts(1, 160, 10 + rep)[0],
+                                    max_new=1, eager=False)
+            ticks, t0 = 0, time.monotonic()
+            while eng.prefill_pending():
+                eng.serve_step()
+                ticks += 1
+            jax.block_until_ready(eng.next_tokens)
+            dt = (time.monotonic() - t0) / max(ticks, 1)
+            best_mixed = dt if best_mixed is None else min(best_mixed, dt)
+            eng.free(slot)
+            t0 = time.monotonic()
+            for _ in range(steps):
+                eng.serve_step()
+            jax.block_until_ready(eng.next_tokens)
+            dd = (time.monotonic() - t0) / steps
+            best_decode = dd if best_decode is None else min(best_decode, dd)
+        for s in runners:
+            eng.free(s)
+        res[mode] = {"mixed_tick_ms": round(best_mixed * 1e3, 4),
+                     "decode_tick_ms": round(best_decode * 1e3, 4)}
+    out = dict(res)
+    for k in ("mixed", "decode"):
+        out[f"{k}_overhead_pct"] = round(
+            100.0 * (res["on"][f"{k}_tick_ms"] - res["off"][f"{k}_tick_ms"])
+            / max(res["off"][f"{k}_tick_ms"], 1e-9), 1)
+    return out
+
+
 def run(burst_sizes=(1, 2, 4, 8), prompt_lens=(96, 224), max_len: int = 512,
-        pool_cores: int = 2, repeats: int = 3, quiet: bool = False) -> Dict:
+        pool_cores: int = 2, repeats: int = 3, quiet: bool = False,
+        trace_out: str = None) -> Dict:
     params = shared_params()
     serial = ServingEngine(TINY, max_slots=max(burst_sizes), max_len=max_len,
                            params=params, serial_prefill=True)
@@ -372,6 +434,20 @@ def run(burst_sizes=(1, 2, 4, 8), prompt_lens=(96, 224), max_len: int = 512,
     packed_rows = _packed_metrics(params, repeats=max(repeats, 3))
     exact &= all(r["exact"] for r in packed_rows)
 
+    # observability cost on the mixed tick (acceptance: <5% when enabled)
+    obs = _trace_overhead(params, repeats=max(repeats, 3) + 1)
+
+    # traced pool run: export the Chrome-trace artifact Perfetto loads
+    trace_events = None
+    if trace_out:
+        kernel = make_aios_kernel(scheduler="batched", quantum=64,
+                                  max_slots=max(burst_sizes), max_len=max_len,
+                                  num_cores=pool_cores, trace=True)
+        with kernel:
+            warm_cores(kernel)
+            _pool_trial(kernel, _prompts(4, prompt_lens[0], 4242))
+        trace_events = kernel.export_trace(trace_out)
+
     big = [r for r in pool_summary if r["burst"] >= 4]
     summary = {
         "exact_match": 1.0 if exact else 0.0,
@@ -386,7 +462,12 @@ def run(burst_sizes=(1, 2, 4, 8), prompt_lens=(96, 224), max_len: int = 512,
         "guard_overhead_recovered_pct": uni["guard_overhead_recovered_pct"],
         "packed": packed_rows,
         "packed_min_occupancy": min(r["occupancy"] for r in packed_rows),
+        "trace_overhead": obs,
+        "trace_overhead_pct": obs["mixed_overhead_pct"],
     }
+    if trace_events is not None:
+        summary["trace_events"] = trace_events
+        summary["trace_out"] = trace_out
     if not quiet:
         for r in rows:
             print(f"[prefill/engine] burst={r['burst']:2d} L={r['prompt_len']}"
@@ -410,6 +491,15 @@ def run(burst_sizes=(1, 2, 4, 8), prompt_lens=(96, 224), max_len: int = 512,
                   f"{r['occupancy']} tick {r['padded_tick_ms']}ms -> "
                   f"{r['packed_tick_ms']}ms ({r['packed_tick_speedup']}x) "
                   f"exact={r['exact']}")
+        print(f"[prefill/obs] mixed tick {obs['off']['mixed_tick_ms']}ms -> "
+              f"{obs['on']['mixed_tick_ms']}ms traced "
+              f"({obs['mixed_overhead_pct']}% overhead) | decode "
+              f"{obs['off']['decode_tick_ms']}ms -> "
+              f"{obs['on']['decode_tick_ms']}ms "
+              f"({obs['decode_overhead_pct']}%)")
+        if trace_events is not None:
+            print(f"[prefill/obs] trace: {trace_events} events -> "
+                  f"{trace_out}")
         print(f"[prefill] exact={bool(exact)} | pool burst>=4: "
               f"{summary['speedup_burst4plus_pool']}x wall, "
               f"{summary['dispatch_reduction_burst4plus']}x dispatch | "

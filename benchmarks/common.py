@@ -128,7 +128,7 @@ class DirectRuntime:
 def make_aios_kernel(scheduler="rr", quantum=16, max_slots=8, max_len=256,
                      num_cores=1, prefix_cache=True, control=False,
                      control_kw=None, paged_kv=True, root_dir=None,
-                     kv_kw=None) -> AIOSKernel:
+                     kv_kw=None, trace=False) -> AIOSKernel:
     ekw = {"max_slots": max_slots, "max_len": max_len}
     if not prefix_cache:
         ekw["prefix_cache"] = None   # explicit None survives the kernel's
@@ -136,7 +136,8 @@ def make_aios_kernel(scheduler="rr", quantum=16, max_slots=8, max_len=256,
     k = AIOSKernel(arch="tiny", scheduler=scheduler, quantum=quantum,
                    num_cores=num_cores, shared_params=shared_params(),
                    engine_kw=ekw, control=control, control_kw=control_kw,
-                   paged_kv=paged_kv, root_dir=root_dir, kv_kw=kv_kw)
+                   paged_kv=paged_kv, root_dir=root_dir, kv_kw=kv_kw,
+                   trace=trace)
     register_builtin_tools(k.tools)
     return k
 

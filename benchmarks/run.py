@@ -38,7 +38,8 @@ def main(argv=None) -> None:
         ("prefill", bench_prefill.run,
          {"burst_sizes": (1, 4) if quick else (1, 2, 4, 8),
           "prompt_lens": (96,) if args.smoke else (96, 224),
-          "repeats": 2 if quick else 3}),
+          "repeats": 2 if quick else 3,
+          "trace_out": os.path.join(args.out, "TRACE_pool.json")}),
         ("context_switch(T7)", bench_context_switch.run, {}),
         ("prefix_cache", bench_prefix_cache.run,
          {"agents": 2 if quick else 3,
@@ -85,6 +86,7 @@ def _derive(name: str, out: dict) -> str:
                 f"stall={out['decode_stall_reduction']}x;"
                 f"tick_dispatch={out['step_dispatch_reduction']}x;"
                 f"guard={out['guard_overhead_recovered_pct']}%;"
+                f"obs={out['trace_overhead_pct']}%;"
                 + "packed=" + "|".join(
                     f"{r['scenario']}:{r['packed_tick_speedup']}x@occ"
                     f"{r['occupancy']}" for r in out["packed"]))

@@ -40,9 +40,10 @@ class ControlPlane:
                  rebalancer_kw: Optional[dict] = None,
                  affinity_kw: Optional[dict] = None,
                  admission_kw: Optional[dict] = None,
+                 telemetry_kw: Optional[dict] = None,
                  slo_registry=None):
         self.num_cores = num_cores
-        self.bus = TelemetryBus(num_cores)
+        self.bus = TelemetryBus(num_cores, **(telemetry_kw or {}))
         self.policy = policy or SLOPolicy(registry=slo_registry)
         if slo_registry is not None and self.policy.registry is None:
             # explicit policy + registry: targets resolve per tenant first

@@ -33,9 +33,16 @@ class TelemetryBus:
     GAUGES = ("free_slots", "free_pages", "backlog", "prefill_debt",
               "running", "resident_kv_bytes")
 
-    def __init__(self, num_cores: int, window: int = 512):
+    def __init__(self, num_cores: int, window: int = 512,
+                 max_series: int = 512):
         self.num_cores = num_cores
         self.window = window
+        # series-count cap: tags are open-ended (per-tenant series appear as
+        # tenants do), so a hostile or churny workload could otherwise grow
+        # the key space without bound. Over-cap series are dropped and
+        # counted, as are events evicted from a full window -- both surface
+        # in the metrics registry as aios_telemetry_*_dropped_total.
+        self.max_series = max_series
         self._lock = threading.Lock()
         # latest gauge sample per core (what the rebalancer reads)
         self._gauges: List[Dict[str, float]] = [
@@ -73,7 +80,14 @@ class TelemetryBus:
         with self._lock:
             d = self._events.get(key)
             if d is None:
+                if len(self._events) >= self.max_series:
+                    self.counters["series_dropped"] = \
+                        self.counters.get("series_dropped", 0) + 1
+                    return
                 d = self._events[key] = deque(maxlen=self.window)
+            elif len(d) == d.maxlen:
+                self.counters["events_dropped"] = \
+                    self.counters.get("events_dropped", 0) + 1
             d.append(float(value))
 
     def bump(self, counter: str, n: int = 1) -> None:

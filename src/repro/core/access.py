@@ -10,8 +10,9 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+from typing import Any, Callable, Dict, Optional, Set, Tuple
 
 from repro.control.slo import SLORegistry
 from repro.core.dispatch import resolve_op, syscall_op, unknown_op
@@ -46,14 +47,19 @@ class _TenantUsage:
 
 
 class AccessManager:
-    def __init__(self, intervention_cb: Optional[Callable[[str, str], bool]] = None):
+    def __init__(self, intervention_cb: Optional[Callable[[str, str], bool]] = None,
+                 *, audit_log_cap: int = 4096):
         # privilege group of a (tenant, target agent): who may touch its
         # resources. Grants never cross tenants.
         self._groups: Dict[Tuple[str, str], Set[str]] = {}
         self._lock = threading.Lock()
         # default policy: require explicit approval (deny when no callback)
         self._intervene = intervention_cb
-        self.audit_log: List[Dict[str, Any]] = []
+        # bounded audit ring: a long-running kernel's log cannot grow
+        # without limit; evictions count in ``audit_dropped`` (surfaced as
+        # aios_audit_dropped_total in the metrics registry)
+        self.audit_log: deque = deque(maxlen=max(1, int(audit_log_cap)))
+        self.audit_dropped = 0
         # tenant front door: quotas + usage + per-tenant SLO targets
         self._quotas: Dict[str, TenantQuota] = {}
         self._usage: Dict[str, _TenantUsage] = {}
@@ -62,6 +68,8 @@ class AccessManager:
     def _log(self, **kw):
         kw["time"] = time.time()
         kw.setdefault("tenant", DEFAULT_TENANT)
+        if len(self.audit_log) == self.audit_log.maxlen:
+            self.audit_dropped += 1
         self.audit_log.append(kw)
 
     # -- tenants -----------------------------------------------------------------------
@@ -245,4 +253,5 @@ class AccessManager:
                 "quota_rejections": sum(u.quota_rejections
                                         for u in self._usage.values()),
                 "audit_entries": len(self.audit_log),
+                "audit_dropped": self.audit_dropped,
             }

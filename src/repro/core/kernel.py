@@ -20,6 +20,7 @@ from repro.core.syscall import (AccessSyscall, LLMSyscall, MemorySyscall,
                                 StorageSyscall, Syscall, ToolSyscall)
 from repro.core.tools import ToolManager
 from repro.memory import KVPageStore
+from repro.obs import MetricsRegistry, TickProfiler, Tracer
 from repro.serving.engine import ServingEngine
 
 SCHEDULERS = {"fifo": FIFOScheduler, "rr": RRScheduler,
@@ -67,7 +68,20 @@ class AIOSKernel:
                  control_kw: Optional[Dict[str, Any]] = None,
                  paged_kv: bool = True,
                  kv_kw: Optional[Dict[str, Any]] = None,
+                 trace: bool = False,
+                 trace_kw: Optional[Dict[str, Any]] = None,
+                 profile: bool = True,
                  shared_params=None):
+        # kernel-wide observability (repro.obs): ``trace=True`` threads a
+        # Tracer through the scheduler, engines, page store and access
+        # path -- every syscall gets a root span closed exactly once on
+        # settle; ``profile`` hangs a per-core TickProfiler off each
+        # engine. Both are ~free when off (single attribute checks on the
+        # hot paths). The MetricsRegistry always exists: ``metrics()`` is
+        # a view over it, and ``registry.prometheus_text()`` is the
+        # scrape surface.
+        self.tracer = Tracer(**(trace_kw or {})) if trace else None
+        self.registry = MetricsRegistry()
         self.root_dir = root_dir or tempfile.mkdtemp(prefix="aios-")
         self.storage = useStorageManager(self.root_dir)
         self.memory = useMemoryManager(self.storage, **(memory_kw or {}))
@@ -83,6 +97,7 @@ class AIOSKernel:
             kvkw = dict(kv_kw or {})
             kvkw.setdefault("page_size", (engine_kw or {}).get("page_size", 16))
             self.kv_store = useKVPageStore(storage=self.storage, **kvkw)
+            self.kv_store.tracer = self.tracer
         self.context = useContextManager(self.storage, mode=context_mode,
                                          page_store=self.kv_store)
         self.tools = useToolManager()
@@ -95,8 +110,14 @@ class AIOSKernel:
         # prefill snapshot from any core restores on every core
         ekw.setdefault("prefix_cache", self.context.prefix_cache)
         ekw.setdefault("page_store", self.kv_store)
+        ekw.setdefault("tracer", self.tracer)
         cores = [useLLM(cfg, self.context, core_id=i, **ekw)
                  for i in range(num_cores)]
+        if profile:
+            # per-core ring buffers (each engine is owned by one worker
+            # thread -- sharing one profiler would race the write index)
+            for c in cores:
+                c.engine.profiler = TickProfiler()
         self.pool = LLMCorePool(cores)
         # pool control plane (repro.control): SLO classes + mid-quantum
         # preemption, proactive rebalancing, prefix-affinity routing.
@@ -113,14 +134,50 @@ class AIOSKernel:
                                         self.context.prefix_cache,
                                         **ckw)
         sched_cls = SCHEDULERS[scheduler]
-        skw: Dict[str, Any] = {"access": self.access}
+        skw: Dict[str, Any] = {"access": self.access, "tracer": self.tracer}
         if scheduler in ("rr", "batched"):
             skw["quantum"] = quantum
         if self.control is not None:
             skw["control"] = self.control
         self.scheduler: BaseScheduler = sched_cls(
             self.pool, self.memory, self.storage, self.tools, **skw)
+        self._register_metrics(profile)
         self._started = False
+
+    def _register_metrics(self, profile: bool):
+        """Re-register every manager's legacy ``metrics()`` under its
+        kernel key (``metrics()`` below is a view over these), plus lazy
+        gauges for the ring-buffer drop counters the bounded audit log /
+        telemetry series / trace buffer maintain."""
+        reg = self.registry
+        reg.register_provider("", self.scheduler.metrics)
+        reg.register_provider("context", lambda: dict(self.context.stats))
+        if self.context.prefix_cache is not None:
+            reg.register_provider(
+                "prefix_cache", lambda: dict(self.context.prefix_cache.stats))
+        reg.register_provider("memory", lambda: dict(self.memory.stats))
+        reg.register_provider("tools", lambda: dict(self.tools.stats))
+        reg.register_provider(
+            "engine", lambda: [dict(c.engine.stats) for c in self.pool.cores])
+        reg.register_provider("access", self.access.metrics)
+        if self.kv_store is not None:
+            reg.register_provider("kv_store", self.kv_store.metrics)
+        if self.control is not None:
+            reg.register_provider("control", self.control.metrics)
+        if profile:
+            reg.register_provider("profiler", self.profiler_summary)
+        if self.tracer is not None:
+            reg.register_provider("trace", self.tracer.metrics)
+            reg.gauge_func("aios_trace_events_dropped_total",
+                           lambda: self.tracer.dropped)
+        reg.gauge_func("aios_audit_dropped_total",
+                       lambda: self.access.audit_dropped)
+        if self.control is not None:
+            bus = self.control.bus
+            reg.gauge_func("aios_telemetry_events_dropped_total",
+                           lambda: bus.counters.get("events_dropped", 0))
+            reg.gauge_func("aios_telemetry_series_dropped_total",
+                           lambda: bus.counters.get("series_dropped", 0))
 
     # -- lifecycle ----------------------------------------------------------------
     def start(self):
@@ -145,6 +202,8 @@ class AIOSKernel:
         """Dispatch a syscall. Access syscalls run inline (paper Fig. 3);
         everything else goes through the scheduler's central queues."""
         if isinstance(sc, AccessSyscall):
+            if self.tracer is not None:
+                self.tracer.attach(sc).phase("admit")
             sc.mark_queued()
             sc.mark_running()
             try:
@@ -172,16 +231,22 @@ class AIOSKernel:
 
     # -- metrics ------------------------------------------------------------------------
     def metrics(self) -> Dict[str, Any]:
-        m = dict(self.scheduler.metrics())
-        m["context"] = dict(self.context.stats)
-        if self.context.prefix_cache is not None:
-            m["prefix_cache"] = dict(self.context.prefix_cache.stats)
-        m["memory"] = dict(self.memory.stats)
-        m["tools"] = dict(self.tools.stats)
-        m["engine"] = [dict(c.engine.stats) for c in self.pool.cores]
-        m["access"] = self.access.metrics()
-        if self.kv_store is not None:
-            m["kv_store"] = self.kv_store.metrics()
-        if self.control is not None:
-            m["control"] = self.control.metrics()
-        return m
+        """The legacy metrics dict, now assembled as a VIEW over the
+        registry's providers (same keys and shapes as before; new
+        ``profiler``/``trace`` keys appear only when those subsystems are
+        on)."""
+        return self.registry.legacy_view()
+
+    def profiler_summary(self) -> List[Dict[str, Any]]:
+        """Per-core tick histograms (p50/p90 wall time, shapes, occupancy,
+        packed-vs-padded token savings) from each engine's ring buffer."""
+        return [c.engine.profiler.summary()
+                if getattr(c.engine, "profiler", None) is not None else {}
+                for c in self.pool.cores]
+
+    def export_trace(self, path: str) -> int:
+        """Write the Chrome-trace JSON (open in Perfetto / chrome://tracing).
+        Returns the event count. Requires ``trace=True``."""
+        if self.tracer is None:
+            raise RuntimeError("kernel booted without trace=True")
+        return self.tracer.export(path)

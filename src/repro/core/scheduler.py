@@ -51,12 +51,13 @@ class BaseScheduler:
 
     def __init__(self, llm_core_pool, memory_manager, storage_manager,
                  tool_manager, *, log: Optional[Callable[[str], None]] = None,
-                 access=None):
+                 access=None, tracer=None):
         self.pool = llm_core_pool
         self.memory = memory_manager
         self.storage = storage_manager
         self.tools = tool_manager
         self.access = access      # tenant front door (quotas + cross-agent ACL)
+        self.tracer = tracer      # repro.obs.Tracer or None (tracing off)
         self.log = log or (lambda m: None)
         self.llm_queue = self._make_queue()
         self.mem_queue: "queue.Queue" = queue.Queue()
@@ -91,13 +92,23 @@ class BaseScheduler:
         """Tenant quota gate (paper §3.8): every submission passes through
         the access manager before touching a queue. Over-quota tenants get a
         fast structured rejection naming the binding quota; charged usage is
-        released by the syscall's done-callback on any settle path."""
+        released by the syscall's done-callback on any settle path.
+
+        This is also where a tracing kernel opens the syscall's root span:
+        every later lifecycle hop (queue/run/requeue phases, settle) lands
+        on the trace attached here, and the done-callback armed by
+        ``Tracer.attach`` closes the root exactly once on ANY settle path --
+        including the quota rejection a few lines down."""
+        if self.tracer is not None:
+            self.tracer.attach(sc).phase("admit")
         if self.access is None:
             return True
         tokens, pages = self._quota_demand(sc)
         reason = self.access.admit_syscall(sc, tokens_needed=tokens,
                                            pages_needed=pages)
         if reason is not None:
+            if sc.trace is not None:
+                sc.trace.event("quota_reject", reason=reason[:120])
             sc.mark_queued()
             sc.fail(reason)
             self._record(sc)
@@ -372,6 +383,8 @@ class BatchedScheduler(BaseScheduler):
                 and self.control.should_shed(syscall)):
             syscall.mark_queued()
             rate = getattr(syscall, "_shed_rate", 1.0)   # the deciding value
+            if syscall.trace is not None:
+                syscall.trace.event("shed", miss_rate=round(rate, 3))
             syscall.fail("admission controller: best_effort load shed "
                          f"(interactive SLO miss rate {rate:.2f} >= "
                          f"{self.control.admission_miss_rate:.2f})")
@@ -453,6 +466,8 @@ class BatchedScheduler(BaseScheduler):
         with self._inflight_lock:
             self._inflight[core_idx] += 1
         sc._core_idx = core_idx      # placement trace (benchmarks/telemetry)
+        if sc.trace is not None:
+            sc.trace.event("dispatch", core=core_idx)
         self._core_queues[core_idx].put(sc)
 
     def _undispatch(self, core_idx: int, sc: Syscall):
@@ -653,6 +668,9 @@ class BatchedScheduler(BaseScheduler):
                 return               # target filled up since the plan tick
             ctx_id = core._suspend(sc, victim, pinned=True)
             sc.suspend(ctx_id)
+            if sc.trace is not None:
+                sc.trace.event("migrate", src=core_idx, dst=dst,
+                               cost=round(float(cost), 1))
             self.control.on_exit(core_idx, sc, "migrated")
             with self._inflight_lock:
                 self._inflight[core_idx] -= 1
@@ -724,6 +742,9 @@ class BatchedScheduler(BaseScheduler):
                         vsc = running[victim]
                         ctx_id = core._suspend(vsc, victim)
                         vsc.suspend(ctx_id)
+                        if vsc.trace is not None:
+                            vsc.trace.event("preempt", core=core_idx,
+                                            below_rank=rank)
                         self.control.note_preempted(core_idx, vsc)
                         self.control.on_exit(core_idx, vsc, "suspended")
                         self._undispatch(core_idx, vsc)

@@ -88,7 +88,8 @@ class StorageManager:
         self._locks_guard = threading.Lock()
         self._stores: Dict[str, VectorStore] = {}
         self._kv_lock = threading.Lock()   # manifest-index read-modify-write
-        self.stats = {"writes": 0, "reads": 0, "rollbacks": 0, "shares": 0}
+        self.stats = {"writes": 0, "reads": 0, "rollbacks": 0, "shares": 0,
+                      "legacy_migrations": 0}
 
     # -- path / lock helpers -----------------------------------------------------------
     def _abs(self, path: str) -> str:
@@ -108,13 +109,62 @@ class StorageManager:
     def _versions_dir(self, path: str) -> str:
         return self._abs(os.path.join(".versions", self.get_file_hash(path)))
 
+    # -- tenant namespacing --------------------------------------------------------------
+    # Syscall-visible paths live under tenants/<tenant>/... and collections
+    # under "tenant::name" -- the storage mirror of the memory manager's
+    # tenant::agent block keying (ROADMAP follow-on (o)): two tenants using
+    # the same relative path or collection name can never collide, and the
+    # cross-tenant ACL check stays the only doorway between trees
+    # (``target_tenant``, once granted, namespaces into the TARGET's tree).
+    # Direct method calls (engine spill, the KV disk tier, module code) are
+    # not rewritten -- namespacing is a property of the syscall surface.
+    TENANT_ROOT = "tenants"
+
+    @staticmethod
+    def _safe_tenant(tenant: str) -> str:
+        return re.sub(r"[^A-Za-z0-9._-]", "_", str(tenant)) or "_"
+
+    def tenant_path(self, tenant: str, path: str) -> str:
+        return os.path.join(self.TENANT_ROOT, self._safe_tenant(tenant), path)
+
+    def _migrate_legacy(self, path: str, ns_path: str):
+        """Adopt a pre-namespacing file on its first namespaced touch: move
+        the legacy root-relative file and its version history under the
+        tenant prefix, so existing storage roots keep their data when a
+        kernel with namespacing boots over them."""
+        try:
+            legacy_abs, ns_abs = self._abs(path), self._abs(ns_path)
+        except PermissionError:
+            return      # the op itself rejects the jailed path
+        if os.path.exists(ns_abs) or not os.path.isfile(legacy_abs):
+            return
+        with self.get_file_lock(path), self.get_file_lock(ns_path):
+            if os.path.exists(ns_abs) or not os.path.isfile(legacy_abs):
+                return  # raced with another migrator
+            os.makedirs(os.path.dirname(ns_abs), exist_ok=True)
+            os.replace(legacy_abs, ns_abs)
+            old_vd, new_vd = self._versions_dir(path), self._versions_dir(ns_path)
+            if os.path.isdir(old_vd) and not os.path.exists(new_vd):
+                shutil.move(old_vd, new_vd)
+            self.stats["legacy_migrations"] += 1
+
     # -- syscall dispatch ----------------------------------------------------------------
     def execute_storage_syscall(self, sc: StorageSyscall) -> Dict[str, Any]:
-        op = sc.request_data["operation"]
-        params = sc.request_data.get("params", {})
+        rd = sc.request_data
+        op = rd["operation"]
+        params = dict(rd.get("params", {}))
         fn = resolve_op(self, op)
         if fn is None:
             return unknown_op(self, op)
+        tenant = rd.get("target_tenant") or sc.tenant_id
+        for key in ("file_path", "dir_path"):
+            if params.get(key) is not None:
+                ns = self.tenant_path(tenant, params[key])
+                if key == "file_path":
+                    self._migrate_legacy(params[key], ns)
+                params[key] = ns
+        if params.get("collection_name"):
+            params["collection_name"] = f"{tenant}::{params['collection_name']}"
         return fn(**params)
 
     # -- file operations -------------------------------------------------------------------

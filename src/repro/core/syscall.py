@@ -56,6 +56,8 @@ class Syscall:
         self.quanta_used = 0
         self.context_id: Optional[str] = None   # set when suspended
         self.cancelled = False                  # cooperative cancel flag
+        self.trace = None                       # SyscallTrace when the kernel
+                                                # traces (repro.obs); None = off
         self._done_callbacks: List[Callable[["Syscall"], None]] = []
         self._settle_lock = threading.Lock()
 
@@ -63,16 +65,24 @@ class Syscall:
     def mark_queued(self):
         self.status = "queued"
         self.queued_time = time.monotonic()
+        if self.trace is not None:
+            self.trace.phase("queue")
 
     def mark_running(self):
         if self.start_time is None:
             self.start_time = time.monotonic()
         self.status = "running"
+        if self.trace is not None:
+            self.trace.phase("run", core=getattr(self, "_core_idx", None))
 
     def suspend(self, context_id: str):
         self.status = "suspended"
         self.context_id = context_id
         self.quanta_used += 1
+        if self.trace is not None:
+            self.trace.event("suspend", context=context_id,
+                             quanta=self.quanta_used)
+            self.trace.phase("requeue")
 
     def add_done_callback(self, fn: Callable[["Syscall"], None]):
         """Run ``fn(self)`` exactly once when the syscall settles (complete or
@@ -122,6 +132,8 @@ class Syscall:
         if self.event.is_set():
             return False
         self.cancelled = True
+        if self.trace is not None:
+            self.trace.event("cancel_requested")
         return True
 
     def join(self, timeout: Optional[float] = None) -> Any:
@@ -191,6 +203,8 @@ class LLMSyscall(Syscall):
     def push_token(self, token: int):
         if self.first_token_time is None:
             self.first_token_time = time.monotonic()
+            if self.trace is not None:     # once per stream, not per token
+                self.trace.event("first_token")
         if self._stream_q is None:
             return
         try:

@@ -41,6 +41,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.memory.pagetable import KVPage, PageTable
+from repro.obs.trace import PID_MEMORY as _PID_MEMORY
 from repro.serving.paging import PageAllocator
 
 # int8 per-channel scales are stored bf16 (fp32 exponent range, 2 bytes --
@@ -182,6 +183,8 @@ class KVPageStore:
                                    # (tracked for visibility; only paged
                                    # bytes can demote under the watermark)
         self._clock = 0
+        self.tracer = None   # repro.obs.Tracer (set by the kernel); tier
+                             # moves emit instants on the memory lane
         self.stats = {
             "put_handles": 0, "put_pages": 0, "put_bytes": 0, "dedup_hits": 0,
             "dedup_saved_bytes": 0, "released_handles": 0, "freed_pages": 0,
@@ -278,6 +281,10 @@ class KVPageStore:
         self.stats["quantized_pages"] += 1
         self.stats["quant_saved_bytes"] += page.nbytes - \
             self._data_bytes(page)
+        if self.tracer is not None:
+            self.tracer.instant("quantize", _PID_MEMORY, 0,
+                                {"pid": page.pid, "bytes": page.nbytes,
+                                 "now": self._data_bytes(page)})
 
     def _make_page(self, pid: str, slices: List[np.ndarray], width: int,
                    origin: Optional[int], want_device: bool,
@@ -321,6 +328,10 @@ class KVPageStore:
         page.tier = "host"
         self._host_used += self._data_bytes(page)
         self.stats["demotions_host"] += 1
+        if self.tracer is not None:
+            self.tracer.instant("demote_host", _PID_MEMORY, 0,
+                                {"pid": page.pid,
+                                 "bytes": self._data_bytes(page)})
 
     def _flush(self, page: KVPage) -> bool:
         """Write the page's disk blob. Versioned format: v2 is a dict
@@ -355,6 +366,9 @@ class KVPageStore:
         page.scales = None
         page.tier = "disk"
         self.stats["demotions_disk"] += 1
+        if self.tracer is not None:
+            self.tracer.instant("demote_disk", _PID_MEMORY, 0,
+                                {"pid": page.pid, "bytes": page.nbytes})
         return True
 
     def _free(self, page: KVPage) -> None:
@@ -532,6 +546,10 @@ class KVPageStore:
         page.tier = "host"
         self._host_used += self._data_bytes(page)
         self.stats["promotions"] += 1
+        if self.tracer is not None:
+            self.tracer.instant("promote", _PID_MEMORY, 0,
+                                {"pid": page.pid,
+                                 "bytes": self._data_bytes(page)})
 
     def release(self, handle: PagedKV) -> None:
         """Drop a holder's references (idempotent per handle). Refcount-0

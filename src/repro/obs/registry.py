@@ -1,0 +1,307 @@
+"""Unified metrics registry: typed instruments + legacy dict providers.
+
+Two worlds, one surface:
+
+  * **Typed instruments** -- ``Counter`` / ``Gauge`` / ``Histogram``
+    families created through the registry, each sample carrying a label set
+    (tenant, core, slo_class, dispatch kind ...). ``gauge_func`` registers
+    a zero-state lazy gauge (value pulled at collect time), which is how
+    subsystem-internal counters (ring-buffer drop counts, tracer stats)
+    surface without double bookkeeping.
+  * **Legacy providers** -- the managers' existing ``metrics()`` callables
+    re-registered under their kernel key. ``legacy_view()`` reassembles the
+    exact ``AIOSKernel.metrics()`` dict (the provider registered under the
+    empty key merges at top level, everything else nests), so the old dict
+    shape is preserved as a *view* of the registry. ``samples()`` flattens
+    the same providers into labelled Prometheus samples: list providers
+    label entries ``core=i``, per-tenant sub-dicts label ``tenant=...``,
+    per-kind profiler sub-dicts label ``kind=...``, and the control plane's
+    ``p50_wait_<class>`` keys become ``...{quantile=,slo_class=}``.
+
+``prometheus_text()`` renders the whole thing in the Prometheus text
+exposition format; ``serve_metrics`` mounts it on a stdlib HTTP endpoint
+(no dependencies) for ``launch/serve.py --metrics-port``.
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_]")
+
+# dict keys whose sub-keys are label VALUES, not name parts
+_LABEL_KEYS = {"tenants": "tenant", "tenant_p90_wait": "tenant",
+               "kinds": "kind", "counters": "counter"}
+_WAIT_RE = re.compile(r"^p(50|90)_wait_(\w+)$")
+
+
+def _sanitize(part: str) -> str:
+    return _NAME_RE.sub("_", str(part))
+
+
+def _fmt_labels(labels: Dict[str, str]) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
+class _Child:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+
+class _Family:
+    """One named metric family; children keyed by their label values."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._children: Dict[Tuple[Tuple[str, str], ...], _Child] = {}
+        self._lock = threading.Lock()
+
+    def _child(self, labels: Dict[str, Any]) -> _Child:
+        key = tuple(sorted((k, str(v)) for k, v in labels.items()))
+        with self._lock:
+            c = self._children.get(key)
+            if c is None:
+                c = self._children[key] = self._new_child()
+            return c
+
+    def _new_child(self) -> _Child:
+        return _Child()
+
+    def samples(self) -> Iterable[Tuple[str, Dict[str, str], float]]:
+        with self._lock:
+            items = list(self._children.items())
+        for key, c in items:
+            yield self.name, dict(key), c.value
+
+
+class Counter(_Family):
+    kind = "counter"
+
+    def inc(self, n: float = 1, **labels: Any) -> None:
+        self._child(labels).value += n
+
+
+class Gauge(_Family):
+    kind = "gauge"
+
+    def set(self, value: float, **labels: Any) -> None:
+        self._child(labels).value = float(value)
+
+    def inc(self, n: float = 1, **labels: Any) -> None:
+        self._child(labels).value += n
+
+
+class _HistChild:
+    __slots__ = ("counts", "total", "count")
+
+    def __init__(self, nbuckets: int):
+        self.counts = [0] * nbuckets
+        self.total = 0.0
+        self.count = 0
+
+
+class Histogram(_Family):
+    kind = "histogram"
+    DEFAULT_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+                       0.5, 1.0, 2.5, 5.0, 10.0)
+
+    def __init__(self, name: str, help: str = "",
+                 buckets: Optional[Tuple[float, ...]] = None):
+        super().__init__(name, help)
+        self.buckets = tuple(sorted(buckets or self.DEFAULT_BUCKETS))
+
+    def _new_child(self) -> _HistChild:
+        return _HistChild(len(self.buckets))
+
+    def observe(self, value: float, **labels: Any) -> None:
+        c = self._child(labels)
+        for i, le in enumerate(self.buckets):
+            if value <= le:
+                c.counts[i] += 1
+                break
+        c.total += value
+        c.count += 1
+
+    def samples(self):
+        with self._lock:
+            items = list(self._children.items())
+        for key, c in items:
+            labels = dict(key)
+            cum = 0
+            for le, n in zip(self.buckets, c.counts):
+                cum += n
+                yield (f"{self.name}_bucket", dict(labels, le=repr(le)), cum)
+            yield (f"{self.name}_bucket", dict(labels, le="+Inf"), c.count)
+            yield f"{self.name}_sum", labels, c.total
+            yield f"{self.name}_count", labels, c.count
+
+
+class MetricsRegistry:
+    def __init__(self):
+        self._families: Dict[str, _Family] = {}
+        self._lazy: List[Tuple[str, Callable[[], float], Dict[str, str]]] = []
+        self._providers: List[Tuple[str, Callable[[], Any]]] = []
+        self._lock = threading.Lock()
+
+    # -- typed instruments --------------------------------------------------------
+    def _family(self, cls, name: str, help: str, **kw) -> _Family:
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is None:
+                fam = self._families[name] = cls(name, help, **kw)
+            elif not isinstance(fam, cls):
+                raise TypeError(f"metric {name!r} already registered as "
+                                f"{fam.kind}")
+            return fam
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._family(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._family(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Optional[Tuple[float, ...]] = None) -> Histogram:
+        return self._family(Histogram, name, help, buckets=buckets)
+
+    def gauge_func(self, name: str, fn: Callable[[], float],
+                   **labels: Any) -> None:
+        """Lazy gauge: ``fn()`` is evaluated at collect time. The canonical
+        way to expose a counter some subsystem already maintains (audit /
+        telemetry / trace ring-buffer drops)."""
+        with self._lock:
+            self._lazy.append((name, fn,
+                               {k: str(v) for k, v in labels.items()}))
+
+    # -- legacy dict providers ------------------------------------------------------
+    def register_provider(self, key: str, fn: Callable[[], Any]) -> None:
+        """Re-register an existing ``metrics()`` callable. ``key`` is the
+        kernel-metrics dict key it used to live under; the empty key merges
+        at top level (the scheduler's own metrics)."""
+        with self._lock:
+            self._providers = [(k, f) for k, f in self._providers if k != key]
+            self._providers.append((key, fn))
+
+    def legacy_view(self) -> Dict[str, Any]:
+        """The exact legacy ``kernel.metrics()`` dict, reassembled from the
+        registered providers."""
+        with self._lock:
+            providers = list(self._providers)
+        out: Dict[str, Any] = {}
+        for key, fn in providers:
+            v = fn()
+            if key == "":
+                out.update(v)
+            else:
+                out[key] = v
+        return out
+
+    # -- flattening to labelled samples ----------------------------------------------
+    def _flatten(self, prefix: str, obj: Any, labels: Dict[str, str],
+                 out: List[Tuple[str, Dict[str, str], float]]) -> None:
+        if isinstance(obj, bool):
+            return
+        if isinstance(obj, (int, float)):
+            out.append((prefix, labels, float(obj)))
+            return
+        if isinstance(obj, dict):
+            for k, v in obj.items():
+                if k in _LABEL_KEYS and isinstance(v, dict):
+                    lbl = _LABEL_KEYS[k]
+                    for sub, sv in v.items():
+                        self._flatten(prefix if k in ("tenants", "kinds")
+                                      else f"{prefix}_{_sanitize(k)}",
+                                      sv, dict(labels, **{lbl: str(sub)}),
+                                      out)
+                    continue
+                m = _WAIT_RE.match(str(k))
+                if m:
+                    out.append((f"{prefix}_wait_seconds",
+                                dict(labels, quantile=f"0.{m.group(1)}",
+                                     slo_class=m.group(2)),
+                                float(v)))
+                    continue
+                self._flatten(f"{prefix}_{_sanitize(k)}", v, labels, out)
+            return
+        if isinstance(obj, (list, tuple)):
+            for i, v in enumerate(obj):
+                self._flatten(prefix, v, dict(labels, core=str(i)), out)
+            return
+        # strings and other non-numeric leaves carry no sample
+
+    def samples(self) -> List[Tuple[str, Dict[str, str], float, str]]:
+        out: List[Tuple[str, Dict[str, str], float, str]] = []
+        with self._lock:
+            fams = list(self._families.values())
+            lazy = list(self._lazy)
+            providers = list(self._providers)
+        for fam in fams:
+            for name, labels, value in fam.samples():
+                out.append((name, labels, value, fam.kind))
+        for name, fn, labels in lazy:
+            try:
+                out.append((name, labels, float(fn()), "gauge"))
+            except Exception:  # noqa: BLE001 -- a dead callback drops silently
+                continue
+        for key, fn in providers:
+            flat: List[Tuple[str, Dict[str, str], float]] = []
+            prefix = "aios_" + _sanitize(key or "scheduler")
+            try:
+                self._flatten(prefix, fn(), {}, flat)
+            except Exception:  # noqa: BLE001
+                continue
+            out.extend((n, lb, v, "gauge") for n, lb, v in flat)
+        return out
+
+    def prometheus_text(self) -> str:
+        lines: List[str] = []
+        seen_type: set = set()
+        for name, labels, value, kind in self.samples():
+            base = name
+            for suffix in ("_bucket", "_sum", "_count"):
+                if kind == "histogram" and name.endswith(suffix):
+                    base = name[: -len(suffix)]
+            if base not in seen_type:
+                seen_type.add(base)
+                lines.append(f"# TYPE {base} {kind}")
+            if value == int(value):
+                sval = str(int(value))
+            else:
+                sval = repr(round(value, 9))
+            lines.append(f"{name}{_fmt_labels(labels)} {sval}")
+        return "\n".join(lines) + "\n"
+
+
+def serve_metrics(registry: MetricsRegistry, port: int, host: str = ""):
+    """Mount ``registry.prometheus_text()`` on a daemon-thread HTTP server
+    (stdlib only). Returns the server; call ``.shutdown()`` to stop. Pass
+    ``port=0`` to bind an ephemeral port (``server.server_address[1]``)."""
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    class _Handler(BaseHTTPRequestHandler):
+        def do_GET(self):  # noqa: N802 -- stdlib API
+            body = registry.prometheus_text().encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):  # quiet
+            pass
+
+    server = ThreadingHTTPServer((host, port), _Handler)
+    t = threading.Thread(target=server.serve_forever,
+                         name="aios-metrics-http", daemon=True)
+    t.start()
+    return server

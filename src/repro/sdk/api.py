@@ -146,6 +146,14 @@ class AgentSession:
     def share_file(self, file_path: str):
         return self.send(StorageQuery("sto_share", {"file_path": file_path}))
 
+    # -- observability ---------------------------------------------------------
+    def usage(self) -> Dict[str, int]:
+        """This tenant's live front-door accounting (in-flight syscalls,
+        tokens spent/reserved, KV pages reserved, admissions, quota
+        rejections) -- the per-tenant slice of the kernel's metrics
+        registry, without needing kernel-level access."""
+        return self.kernel.access.tenant_usage(self.tenant)
+
     # -- tools -----------------------------------------------------------------
     def call_tool(self, tool_name: str, params: Dict[str, Any]):
         return self.send(ToolQuery(tool_name, params))

@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -34,6 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import build_model
+from repro.obs.profiler import (KIND_DECODE, KIND_IMAGE, KIND_NAMES,
+                                KIND_PACKED, KIND_PADDED, KIND_SERIAL)
+from repro.obs.trace import PID_ENGINE
 from repro.serving import sampler as smp
 from repro.serving.paging import PageAllocator
 
@@ -341,8 +345,15 @@ class ServingEngine:
                  params=None, prefix_cache=None, serial_prefill: bool = False,
                  prefill_chunk_cap: Optional[int] = None, engine_id: int = 0,
                  page_store=None, mixed_step: Optional[bool] = None,
-                 packed_step: Optional[bool] = None):
+                 packed_step: Optional[bool] = None, tracer=None,
+                 profiler=None):
         self.cfg = cfg
+        # observability (repro.obs): both default OFF and cost one attribute
+        # check per tick when off; per tick -- never per token -- when on
+        self.tracer = tracer         # shared Tracer (engine tick spans)
+        self.profiler = profiler     # per-engine TickProfiler ring
+        if tracer is not None:
+            tracer.name_track(PID_ENGINE, engine_id, f"core{engine_id}")
         self.engine_id = engine_id   # pool position; tags prefix-cache
                                      # entries for affinity routing
         self.serial_prefill = serial_prefill   # True: legacy one-sequence-
@@ -624,6 +635,11 @@ class ServingEngine:
                 self.slots[slot].prefilled = 0
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_saved_tokens"] += hit.seq_len
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "prefix_hit", PID_ENGINE, self.engine_id,
+                        {"seq_id": r.get("seq_id"), "saved": hit.seq_len,
+                         "exact": True})
             elif hit is not None and not self.serial_prefill:
                 # suffix extension: restore the prefix, then chunk-prefill
                 # only prompt[hit.seq_len:] (ONE chunked-prefill job, not
@@ -639,6 +655,11 @@ class ServingEngine:
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_saved_tokens"] += hit.seq_len
                 self.stats["prefix_extend_tokens"] += P - hit.seq_len
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "prefix_hit", PID_ENGINE, self.engine_id,
+                        {"seq_id": r.get("seq_id"), "saved": hit.seq_len,
+                         "extend": P - hit.seq_len, "exact": False})
                 self.slots[slot].prefilled = P - hit.seq_len
                 self._enqueue_prefill(slot, prompt, done=hit.seq_len,
                                       fresh=False)
@@ -824,6 +845,7 @@ class ServingEngine:
         is the "no image" context (cross-attention contributes exactly 0),
         bit-identical to the chunked path's freshly reset xk/xv rows."""
         P = len(tokens)
+        _t0 = self._obs_t0()
         Spad = min(_bucket(P), self.max_len)
         buf = np.zeros((1, Spad), np.int32)
         buf[0, :P] = tokens
@@ -844,6 +866,8 @@ class ServingEngine:
         if cacheable and self.prefix_cache is not None:
             self._cache_prefix(tokens, cache1, logits[0])
         self._activate_slot(slot, cache1, logits[0])
+        if _t0:
+            self._obs_tick(KIND_SERIAL, _t0, _t0, 1, 1, Spad, Spad, P, Spad)
 
     def _activate_slot(self, slot: int, cache1, logits_vec):
         """Insert a ready batch-1 cache into `slot` and sample its pending
@@ -905,6 +929,33 @@ class ServingEngine:
         piece = self._extract_jit(self.cache, slot)
         self._cache_prefix(tokens, piece, jnp.asarray(self._last_logits[slot]))
 
+    # -- observability ----------------------------------------------------------------
+    def _obs_t0(self) -> float:
+        """Tick start stamp when any observer is attached, else 0.0 (the
+        single-branch fast path for untraced engines)."""
+        if self.profiler is None and self.tracer is None:
+            return 0.0
+        return time.perf_counter()
+
+    def _obs_tick(self, kind: int, t0: float, t_build: float, rows: int,
+                  kb: int, chunk: int, kv: int, tokens: int,
+                  padded: int) -> None:
+        """Close one tick sample: ring-buffer scalar stores for the profiler
+        plus (when tracing) one engine-lane span. Wall time is host-observed;
+        the engine syncs on the NEXT tick's pending-token read, so
+        steady-state tick walls are honest without adding a device sync."""
+        t1 = time.perf_counter()
+        if self.profiler is not None:
+            self.profiler.record(kind, t1 - t0, t_build - t0, rows, kb,
+                                 chunk, kv, int(tokens), int(padded))
+        tr = self.tracer
+        if tr is not None:
+            dur = (t1 - t0) * 1e6
+            tr.complete("tick", PID_ENGINE, self.engine_id,
+                        tr.now_us() - dur, dur,
+                        {"kind": KIND_NAMES[kind], "rows": rows, "kb": kb,
+                         "chunk": chunk, "kv": kv, "tokens": int(tokens)})
+
     # -- decode / unified serve ------------------------------------------------------
     def step(self) -> Dict[int, int]:
         """One decode step for all active slots: feed each slot's pending
@@ -915,6 +966,8 @@ class ServingEngine:
         active = self.active_slots()
         if not active:
             return {}
+        _t0 = self._obs_t0()
+        kvb = self.max_len
         mask_np = np.zeros(self.max_slots, bool)
         mask_np[active] = True
         mask = jnp.asarray(mask_np)
@@ -927,7 +980,7 @@ class ServingEngine:
                           1 + max(len(self.slots[i].prompt) +
                                   len(self.slots[i].generated)
                                   for i in active))
-            kv = next(b for b in self.kv_buckets if b >= max_end)
+            kv = kvb = next(b for b in self.kv_buckets if b >= max_end)
             self.cache, logits = self._mixed_decode_jit(
                 self.params, tokens, self.cache, mask, kv=kv)
             self.stats["mixed_steps"] += 1
@@ -953,6 +1006,10 @@ class ServingEngine:
         self.stats["decode_steps"] += 1
         self.stats["model_dispatches"] += 1
         self.stats["tokens"] += len(active)
+        if _t0:
+            self._obs_tick(KIND_DECODE, _t0, _t0, len(active),
+                           self.max_slots, 1, kvb, len(active),
+                           self.max_slots)
         return emitted
 
     def serve_step(self) -> Dict[int, int]:
@@ -992,6 +1049,9 @@ class ServingEngine:
         active = self.active_slots() if decode is None else list(decode)
         if not jobs and not active:
             return {}
+        _t0 = self._obs_t0()
+        _t_build = _t0
+        _kind = KIND_PADDED
         if jobs:
             rem = max(len(j.tokens) - j.done for j in jobs)
             C = next((b for b in self.prefill_chunks if b >= rem),
@@ -1045,6 +1105,9 @@ class ServingEngine:
         img, imask = self._stack_images(
             [(row_of[j.slot], j) for j in jobs], kb)
         if img is not None:
+            _kind = KIND_IMAGE
+            if _t0:
+                _t_build = time.perf_counter()
             piece, logits = self._prefill_chunk_img_jit(
                 self.params, jnp.asarray(buf), piece, jnp.asarray(offsets),
                 jnp.asarray(lengths), img, imask, kv=kv)
@@ -1065,11 +1128,14 @@ class ServingEngine:
             Npb = next((b for b in _EngineJits.PACKED_BUCKETS
                         if b >= max(cur, 1)), None)
             if self.packed and Npb is not None and Npb < kb * C:
+                _kind = KIND_PACKED
                 flat = np.zeros((Npb,), np.int32)
                 for r in range(kb):
                     n = int(lengths[r])
                     if n:
                         flat[row_starts[r]:row_starts[r] + n] = buf[r, :n]
+                if _t0:
+                    _t_build = time.perf_counter()
                 piece, logits = self._prefill_packed_jit(
                     self.params, jnp.asarray(flat), piece,
                     jnp.asarray(row_starts), jnp.asarray(offsets),
@@ -1078,6 +1144,8 @@ class ServingEngine:
                 self.stats["packed_tokens"] += int(lengths.sum())
                 self.stats["packed_padded_tokens"] += kb * C
             else:
+                if _t0:
+                    _t_build = time.perf_counter()
                 piece, logits = self._prefill_chunk_jit(
                     self.params, jnp.asarray(buf), piece,
                     jnp.asarray(offsets), jnp.asarray(lengths), kv=kv)
@@ -1152,6 +1220,9 @@ class ServingEngine:
                 done_set = {j.slot for _, j in fin}
                 self._prefill_queue = [jj for jj in self._prefill_queue
                                        if jj.slot not in done_set]
+        if _t0:
+            self._obs_tick(_kind, _t0, _t_build, len(part), kb, C, kv,
+                           int(lengths.sum()), kb * C)
         return emitted
 
     def probe_failed_load(self, prompt) -> None:

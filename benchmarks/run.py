@@ -89,7 +89,10 @@ def _derive(name: str, out: dict) -> str:
                 f"obs={out['trace_overhead_pct']}%;"
                 + "packed=" + "|".join(
                     f"{r['scenario']}:{r['packed_tick_speedup']}x@occ"
-                    f"{r['occupancy']}" for r in out["packed"]))
+                    f"{r['occupancy']}" for r in out["packed"])
+                + f";spec=k{out['spec']['best_k']}:"
+                f"{out['spec_accepted_per_dispatch']}tok/disp@accept"
+                f"{out['spec_acceptance_rate']}")
     if name.startswith("context_switch"):
         ok = all(r["exact_match"] == 1.0 for r in rows)
         return f"exact_match_all={'1.0' if ok else 'FAIL'}"

@@ -159,6 +159,15 @@ class AIOSKernel:
         reg.register_provider("tools", lambda: dict(self.tools.stats))
         reg.register_provider(
             "engine", lambda: [dict(c.engine.stats) for c in self.pool.cores])
+
+        def _spec_acceptance():
+            drafted = accepted = 0
+            for c in self.pool.cores:
+                drafted += c.engine.stats.get("spec_draft_tokens", 0)
+                accepted += c.engine.stats.get("spec_accepted_tokens", 0)
+            return accepted / drafted if drafted else 0.0
+
+        reg.gauge_func("aios_spec_acceptance_rate", _spec_acceptance)
         reg.register_provider("access", self.access.metrics)
         if self.kv_store is not None:
             reg.register_provider("kv_store", self.kv_store.metrics)

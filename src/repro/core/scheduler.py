@@ -788,10 +788,14 @@ class BatchedScheduler(BaseScheduler):
                 running.clear()
                 used.clear()
                 continue
+            # token-accurate quantum accounting: a speculative tick commits
+            # several tokens for one slot in one dispatch -- charge them all,
+            # or a spec-accelerated stream outruns its fair-share quantum
+            commits = getattr(engine, "last_tick_commits", None) or {}
             for slot in list(running):
                 sc = running[slot]
                 if slot in emitted:
-                    used[slot] += 1
+                    used[slot] += commits.get(slot, 1)
                 if engine.is_done(slot):
                     resp = core._finish(sc, slot)
                     sc.complete(resp)

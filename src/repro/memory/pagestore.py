@@ -59,11 +59,17 @@ class PageLayout:
     in the residual); shapes/dtypes describe the full batch-1 leaves."""
 
     __slots__ = ("key", "time_axes", "shapes", "dtypes", "paged_idx",
-                 "residual_idx", "bytes_per_token")
+                 "residual_idx", "bytes_per_token", "truncatable")
 
     def __init__(self, key: str, time_axes: Sequence[Optional[int]],
-                 shapes: Sequence[Tuple[int, ...]], dtypes: Sequence[Any]):
+                 shapes: Sequence[Tuple[int, ...]], dtypes: Sequence[Any],
+                 truncatable: bool = False):
         self.key = key
+        # a page-boundary cut of this layout is a valid shorter context:
+        # true for pure positional K/V (token t's pages depend only on
+        # tokens <= t), false when residual leaves carry running state
+        # (recurrent carries, rolling windows) that no page cut can rewind
+        self.truncatable = bool(truncatable)
         self.time_axes = list(time_axes)
         self.shapes = [tuple(s) for s in shapes]
         self.dtypes = list(dtypes)
@@ -192,17 +198,19 @@ class KVPageStore:
             "promotions": 0, "persisted_entries": 0, "rehydrated_entries": 0,
             "device_rejections": 0, "gc_swept_blobs": 0, "gc_runs": 0,
             "quantized_pages": 0, "quant_saved_bytes": 0, "gated_probes": 0,
+            "truncated_rehydrates": 0,
         }
 
     # -- layouts -----------------------------------------------------------------
     def register_layout(self, key: str, time_axes: Sequence[Optional[int]],
                         shapes: Sequence[Tuple[int, ...]],
-                        dtypes: Sequence[Any]) -> PageLayout:
+                        dtypes: Sequence[Any],
+                        truncatable: bool = False) -> PageLayout:
         with self.table.lock:
             lay = self._layouts.get(key)
             if lay is None:
                 lay = self._layouts[key] = PageLayout(key, time_axes, shapes,
-                                                     dtypes)
+                                                      dtypes, truncatable)
             return lay
 
     def layout(self, key: str) -> Optional[PageLayout]:
@@ -677,7 +685,17 @@ class KVPageStore:
         """Longest persisted prefix of ``tokens`` (>= min_tokens), rebuilt
         from the disk manifest: known pages are re-referenced in place,
         unknown ones enter the table at the disk tier and load lazily on
-        first restore."""
+        first restore.
+
+        Falls back to SUB-prefix re-hydration when no whole manifest fits:
+        a persisted entry that *extends* the probe (stored ``[probe...,
+        more]``) shares its leading pages with the probe up to a page
+        boundary, so the first ``floor(len(probe)/page_size)`` pages are
+        reused as a truncated entry. Truncated entries carry no last-token
+        logits (the stored logits follow a longer context) and a stale
+        residual seq_lens -- the admission path re-prefills from the
+        truncation point and rewrites the slot's seq_len, so neither is
+        ever consumed."""
         if not self.persist_enabled:
             return None
         tok = np.ascontiguousarray(np.asarray(tokens, np.int32))
@@ -702,18 +720,52 @@ class KVPageStore:
                 needle = needles[n] = tok[:n].tobytes().hex()
             if needle == key:
                 best_key, best_n = key, n
+        trunc = 0
         if best_key is None:
-            return None
+            # page-boundary truncation: a stored prompt sharing the probe's
+            # first t tokens (t = the largest page boundary inside their
+            # common prefix) donates its first t/page_size pages. Keys are
+            # 8 hex chars per token, so key[:8t] == hex(tok[:t]) tests the
+            # share without decoding. Gate note: t >= min_tokens >=
+            # gate_tokens, so viable donors always pass the gate above.
+            ps = self.page_size
+            best_t = max(int(min_tokens), 1) - 1
+            for key, n in index:
+                hi = (min(len(tok), n) // ps) * ps
+                for t in range(hi, best_t, -ps):
+                    if t >= n:
+                        continue   # whole-manifest prefix: exact scan's job
+                    needle = needles.get(t)
+                    if needle is None:
+                        needle = needles[t] = tok[:t].tobytes().hex()
+                    if key.startswith(needle):
+                        best_key, best_t = key, t
+                        break
+            if best_key is None:
+                return None
+            trunc = best_t
         blob = self.storage.kv_manifest_load(best_key)
         if blob is None:
             return None
         man = pickle.loads(blob)
-        if man["layout_key"] not in self._layouts:
+        lay = self._layouts.get(man["layout_key"])
+        if lay is None:
             return None   # no engine with this layout in this process
+        meta_pages = man["pages"]
+        seq_len, prompt, logits = man["seq_len"], man["prompt"], man["logits"]
+        if trunc:
+            if not lay.truncatable:
+                return None   # residual state can't rewind to the boundary
+            npg = trunc // self.page_size
+            meta_pages = meta_pages[:npg]
+            if len(meta_pages) < npg or \
+                    any(w != self.page_size for _, _, w, _ in meta_pages):
+                return None   # donor pages don't tile the boundary
+            seq_len, prompt, logits = trunc, prompt[:trunc], None
         with self.table.lock:
             page_ids = []
             nbytes = 0
-            for pid, pnb, width, origin in man["pages"]:
+            for pid, pnb, width, origin in meta_pages:
                 page = self.table.get(pid)
                 if page is None:
                     page = KVPage(pid, None, pnb, width, origin, "disk")
@@ -724,12 +776,14 @@ class KVPageStore:
                 page_ids.append(pid)
                 nbytes += pnb
             handle = PagedKV(self, man["layout_key"], page_ids,
-                             list(man["residual"]), man["seq_len"],
+                             list(man["residual"]), seq_len,
                              nbytes + sum(a.nbytes for a in man["residual"]))
             self._residual_bytes += sum(a.nbytes for a in man["residual"])
         self.stats["rehydrated_entries"] += 1
-        return PagedPrefixEntry(man["prompt"], man["seq_len"], handle,
-                                man["logits"], man["origin"])
+        if trunc:
+            self.stats["truncated_rehydrates"] += 1
+        return PagedPrefixEntry(prompt, seq_len, handle,
+                                logits, man["origin"])
 
     def gc_orphan_blobs(self, grace_s: float = 60.0) -> Dict[str, int]:
         """Reclaim orphan page blobs (ROADMAP follow-on (k)): manifest

@@ -69,6 +69,10 @@ class RecurrentGemma:
     # buffer, so a fresh prompt's rows must be reset before its first chunk
     stateful_prefill = True
     reset_fresh_rows = True
+    # RG-LRU state and the rolling attention buffer advance destructively
+    # per token (no positional rewind), so rejected drafts cannot roll back
+    # via seq_lens truncation -- spec decoding gates out
+    supports_spec_decode = False
 
     def __init__(self, cfg):
         self.cfg = cfg

@@ -99,6 +99,10 @@ class RWKV6:
     # prompt's rows must be zeroed before its first chunk
     stateful_prefill = True
     reset_fresh_rows = True
+    # wkv/shift state mutates in place per consumed token with no
+    # positional indexing, so rejected speculative drafts cannot be rolled
+    # back by seq_lens truncation -- spec decoding gates out
+    supports_spec_decode = False
 
     def __init__(self, cfg):
         self.cfg = cfg

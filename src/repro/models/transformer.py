@@ -54,6 +54,13 @@ class DenseTransformer:
     # covers stale cache rows), so a fresh prompt needs no state reset
     stateful_prefill = False
 
+    # speculative decoding needs rollback = seq_lens truncation: stale K/V
+    # beyond seq_len is masked by the causal/q_offset attention masks and
+    # overwritten when the position is re-reached, so rejecting drafted
+    # tokens costs nothing. True for every causal-attention arch; recurrent
+    # and rolling-buffer archs (state mutated in place per token) gate out.
+    supports_spec_decode = True
+
     def __init__(self, cfg):
         self.cfg = cfg
         self.is_vlm = cfg.family == "vlm" and cfg.cross_attn_every > 0
@@ -280,7 +287,8 @@ class DenseTransformer:
 
     # -- chunked prefill -------------------------------------------------------
     def prefill_chunk(self, params, tokens, cache, *, q_offset, lengths,
-                      image_embeds=None, image_mask=None, kv_width=None):
+                      image_embeds=None, image_mask=None, kv_width=None,
+                      logits_upto=None):
         """Batched chunked prefill AND decode in one dispatch: consume chunk
         ``tokens`` [B, C] with row b at absolute positions
         ``q_offset[b] .. q_offset[b] + lengths[b] - 1``, attending over the
@@ -304,6 +312,13 @@ class DenseTransformer:
         last_logits[b] is the logits at the chunk's final valid position
         (garbage when lengths[b] == 0 -- callers keep the logits of the
         finishing chunk).
+
+        logits_upto (static): when set, additionally return per-position
+        logits for the first ``logits_upto`` chunk positions of every row
+        ([B, logits_upto, V]) -- the verify surface for speculative
+        decoding, where a decode row carries [pending, draft_1..draft_m]
+        and the engine needs the model's distribution at EACH position to
+        run acceptance. Return becomes (cache, last_logits, pos_logits).
         """
         cfg = self.cfg
         B, C = tokens.shape
@@ -384,12 +399,18 @@ class DenseTransformer:
             last_logits = jnp.tanh(last_logits / cfg.logits_softcap) * cfg.logits_softcap
         cache["seq_lens"] = jnp.where(lengths > 0, q_offset + lengths,
                                       cache["seq_lens"])
+        if logits_upto is not None:
+            pos_logits = x[:, :logits_upto] @ params["head"]
+            if cfg.logits_softcap:
+                pos_logits = jnp.tanh(pos_logits / cfg.logits_softcap) \
+                    * cfg.logits_softcap
+            return cache, last_logits, pos_logits
         return cache, last_logits
 
     # -- token-packed ragged prefill -------------------------------------------
     def prefill_packed(self, params, tokens, cache, *, row_starts, q_offset,
                        lengths, chunk=None, image_embeds=None,
-                       image_mask=None, kv_width=None):
+                       image_mask=None, kv_width=None, logits_upto=None):
         """Token-packed variant of ``prefill_chunk``: ``tokens`` is [Np] --
         every row's chunk tokens concatenated on ONE packed axis, row b at
         packed positions ``row_starts[b] .. row_starts[b] + lengths[b] - 1``
@@ -401,10 +422,15 @@ class DenseTransformer:
         no packed slots), and last_logits[b] reads the row's final valid
         packed position (garbage for length-0 rows). ``chunk`` (static) is
         interface parity with the recurrent archs' unpack-and-delegate
-        packed path; dense attention doesn't need it. VLM rows are
-        supported for image-free dispatches only (cross-attention reads each
-        token's cached xk/xv row) -- the engine routes dispatches that carry
-        image embeddings through the padded path."""
+        packed path; dense attention doesn't need it. VLM rows ride packed
+        dispatches too: cross-attention gathers each packed token's own
+        cached xk/xv row, and when ``image_embeds`` [B, T, d] is given the
+        rows selected by ``image_mask`` recompute their frontend K/V first
+        (image K/V is position-independent, so the padded and packed
+        layouts write identical xk/xv). ``logits_upto`` (static) mirrors
+        prefill_chunk: also return [B, logits_upto, V] per-position logits
+        gathered from each row's packed slots (the speculative-decode
+        verify surface); return becomes (cache, last_logits, pos_logits)."""
         cfg = self.cfg
         Np = tokens.shape[0]
         B = lengths.shape[0]
@@ -432,8 +458,10 @@ class DenseTransformer:
             return self._ffn(blk, x, infer=True), kc, vc
 
         if self.is_vlm:
-            assert image_embeds is None, \
-                "packed dispatch carries no image rows (engine falls back)"
+            has_img = lengths > 0
+            if image_mask is not None:
+                has_img &= image_mask
+            upd = has_img[:, None, None, None]
 
             def body(x, xs):
                 blk, kc, vc, xk, xv = xs
@@ -445,8 +473,15 @@ class DenseTransformer:
 
                 x, (kc, vc) = L.xscan(inner, x, (blk["selfs"], kc, vc))
                 h = L.rms_norm(x, blk["xln"], cfg.norm_eps)
-                H, hd = cfg.n_heads, cfg.head_dim
+                H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
                 q = (h @ blk["xattn"]["wq"]).reshape(Np, H, hd)
+                if image_embeds is not None:
+                    # recompute image K/V for masked rows (identical to the
+                    # padded layout: position-independent), keep the rest
+                    xkn = (image_embeds @ blk["xattn"]["wk"]).reshape(B, -1, K, hd)
+                    xvn = (image_embeds @ blk["xattn"]["wv"]).reshape(B, -1, K, hd)
+                    xk = jnp.where(upd, xkn.astype(xk.dtype), xk)
+                    xv = jnp.where(upd, xvn.astype(xv.dtype), xv)
                 o = self._cross_attend_packed(q, xk[row], xv[row])
                 gate = jnp.tanh(blk["xgate"]).astype(x.dtype)
                 x = x + gate * L.attn_out(blk["xattn"], o[None])
@@ -478,6 +513,14 @@ class DenseTransformer:
             last_logits = jnp.tanh(last_logits / cfg.logits_softcap) * cfg.logits_softcap
         cache["seq_lens"] = jnp.where(lengths > 0, q_offset + lengths,
                                       cache["seq_lens"])
+        if logits_upto is not None:
+            idx = jnp.clip(row_starts[:, None]
+                           + jnp.arange(logits_upto)[None, :], 0, Np - 1)
+            pos_logits = x[idx] @ params["head"]                 # [B, u, V]
+            if cfg.logits_softcap:
+                pos_logits = jnp.tanh(pos_logits / cfg.logits_softcap) \
+                    * cfg.logits_softcap
+            return cache, last_logits, pos_logits
         return cache, last_logits
 
     def _cross_attend_packed(self, q, xk, xv):

@@ -30,8 +30,9 @@ KIND_PACKED = 1     # mixed tick on the packed [total_tokens] axis
 KIND_PADDED = 2     # mixed tick on the padded [kb, C] rectangle
 KIND_IMAGE = 3      # mixed tick with image rows (always padded)
 KIND_SERIAL = 4     # serial one-sequence prefill (legacy baseline)
+KIND_SPEC = 5       # mixed tick carrying speculative draft rows
 
-KIND_NAMES = ("decode", "packed", "padded", "image", "serial")
+KIND_NAMES = ("decode", "packed", "padded", "image", "serial", "spec")
 
 
 class TickProfiler:

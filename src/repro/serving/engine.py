@@ -36,7 +36,8 @@ import numpy as np
 
 from repro.models import build_model
 from repro.obs.profiler import (KIND_DECODE, KIND_IMAGE, KIND_NAMES,
-                                KIND_PACKED, KIND_PADDED, KIND_SERIAL)
+                                KIND_PACKED, KIND_PADDED, KIND_SERIAL,
+                                KIND_SPEC)
 from repro.obs.trace import PID_ENGINE
 from repro.serving import sampler as smp
 from repro.serving.paging import PageAllocator
@@ -47,6 +48,28 @@ def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
         if n <= b:
             return b
     return ((n + 4095) // 4096) * 4096
+
+
+def _ngram_draft(ctx: np.ndarray, k: int, n_max: int) -> List[int]:
+    """Prompt-lookup / n-gram self-drafting: match the longest suffix n-gram
+    of ``ctx`` (n_max down to 1) against the earlier context and propose up
+    to ``k`` tokens that followed its most RECENT occurrence. Pure host
+    numpy over one sequence's tokens -- no second model, no device work;
+    agent traffic (tool-call loops, templated JSON, ReAct scaffolding) is
+    repetitive enough that these drafts verify at high acceptance rates."""
+    L = len(ctx)
+    for n in range(min(n_max, L - 1), 0, -1):
+        pat = ctx[L - n:]
+        hay = ctx[:L - 1]        # windows that still have a continuation
+        if len(hay) < n:
+            continue
+        win = np.lib.stride_tricks.sliding_window_view(hay, n)
+        hits = np.nonzero((win == pat).all(axis=1))[0]
+        if len(hits) == 0:
+            continue
+        i = int(hits[-1])
+        return ctx[i + n:i + n + k].tolist()
+    return []
 
 
 @dataclasses.dataclass
@@ -94,7 +117,8 @@ class ContextSnapshot:
 
 class _Slot:
     __slots__ = ("active", "prefilling", "seq_id", "prompt", "generated",
-                 "counter", "max_new", "eos_id", "sink", "prefilled")
+                 "counter", "max_new", "eos_id", "sink", "prefilled",
+                 "pending_override")
 
     def __init__(self):
         self.active = False
@@ -113,6 +137,11 @@ class _Slot:
                                   # called once per token appended to
                                   # `generated`, so a drained stream is
                                   # bit-equal to the blocking result
+        self.pending_override = None   # text-kind restore under spec decode:
+                                  # the snapshot's pending token is adopted
+                                  # verbatim instead of re-drawn (a rejected-
+                                  # draft residual draw is not reproducible
+                                  # by the plain sampler)
 
 
 class _PendingPrefill:
@@ -222,6 +251,46 @@ class _EngineJits:
                                         q_offset=q_offset, lengths=lengths,
                                         chunk=chunk, kv_width=kv)
 
+        @functools.partial(jax.jit, static_argnames=("kv", "upto"))
+        def prefill_chunk_spec(params, tokens, cache, q_offset, lengths, kv,
+                               upto):
+            """Chunk dispatch that ALSO returns per-position logits for the
+            first ``upto`` chunk positions of every row -- the speculative
+            verify surface: a decode row carrying [pending, d_1..d_m] gets
+            the model's distribution after each consumed token, so the
+            engine can accept a draft prefix and resample at the first
+            rejection in one dispatch."""
+            return model.prefill_chunk(params, tokens, cache,
+                                       q_offset=q_offset, lengths=lengths,
+                                       kv_width=kv, logits_upto=upto)
+
+        @functools.partial(jax.jit,
+                           static_argnames=("kv", "chunk", "upto"))
+        def prefill_packed_spec(params, tokens, cache, row_starts, q_offset,
+                                lengths, kv, chunk, upto):
+            """Packed-axis twin of ``prefill_chunk_spec``: per-position
+            verify logits gathered from each row's packed slots."""
+            return model.prefill_packed(params, tokens, cache,
+                                        row_starts=row_starts,
+                                        q_offset=q_offset, lengths=lengths,
+                                        chunk=chunk, kv_width=kv,
+                                        logits_upto=upto)
+
+        @functools.partial(jax.jit, static_argnames=("kv", "chunk"))
+        def prefill_packed_img(params, tokens, cache, row_starts, q_offset,
+                               lengths, image_embeds, image_mask, kv, chunk):
+            """Packed ragged dispatch carrying stacked frontend embeddings:
+            masked rows recompute their image K/V (identical bytes to the
+            padded layout -- image K/V is position-independent), so VLM
+            image bursts keep the packed token savings instead of falling
+            back to the [kb, C] rectangle."""
+            return model.prefill_packed(params, tokens, cache,
+                                        row_starts=row_starts,
+                                        q_offset=q_offset, lengths=lengths,
+                                        chunk=chunk, kv_width=kv,
+                                        image_embeds=image_embeds,
+                                        image_mask=image_mask)
+
         @functools.partial(jax.jit, static_argnames=("kv",))
         def mixed_decode(params, tokens, cache, active_mask, kv):
             """Pure-decode tick of the unified serve path: every active slot
@@ -286,6 +355,9 @@ class _EngineJits:
         self.extract = jax.jit(extract)
         self.prefill_chunk = prefill_chunk
         self.prefill_chunk_img = prefill_chunk_img
+        self.prefill_chunk_spec = prefill_chunk_spec
+        self.prefill_packed_spec = prefill_packed_spec
+        self.prefill_packed_img = prefill_packed_img
         self.mixed_decode = mixed_decode
         self.gather_rows = jax.jit(gather_rows)
         self.scatter_rows = jax.jit(scatter_rows)
@@ -295,6 +367,16 @@ class _EngineJits:
         def set_seq_len(cache, slot, value):
             return dict(cache, seq_lens=cache["seq_lens"].at[slot].set(value))
         self.set_len = set_seq_len
+
+        @jax.jit
+        def set_seq_lens(cache, slots, values):
+            """Batched seq_lens write -- the WHOLE speculative rollback:
+            truncating a slot's seq_len to its committed position makes the
+            rejected drafts' K/V unreachable (masked by the q_offset/causal
+            masks, overwritten when the position is re-reached)."""
+            return dict(cache,
+                        seq_lens=cache["seq_lens"].at[slots].set(values))
+        self.set_lens = set_seq_lens
 
         @jax.jit
         def prefill(params, tokens, cache, lengths):
@@ -321,8 +403,15 @@ class _EngineJits:
             logits = smp.mask_padded_vocab(logits, vocab)
             return smp.sample(logits, keys, counters, temp)
 
+        @jax.jit
+        def spec_verify(logits, draft, n_draft, keys, counters):
+            logits = smp.mask_padded_vocab(logits, vocab)
+            return smp.spec_verify(logits, draft, n_draft, keys, counters,
+                                   temp)
+
         self.sample1 = sample1
         self.sample_all = sample_all
+        self.spec_verify = spec_verify
 
 
 _JIT_CACHE: Dict[Any, _EngineJits] = {}
@@ -346,7 +435,8 @@ class ServingEngine:
                  prefill_chunk_cap: Optional[int] = None, engine_id: int = 0,
                  page_store=None, mixed_step: Optional[bool] = None,
                  packed_step: Optional[bool] = None, tracer=None,
-                 profiler=None):
+                 profiler=None, spec_decode: bool = False, spec_k: int = 4,
+                 spec_ngram: int = 3):
         self.cfg = cfg
         # observability (repro.obs): both default OFF and cost one attribute
         # check per tick when off; per tick -- never per token -- when on
@@ -378,6 +468,21 @@ class ServingEngine:
                                                # long prompt admits
         self._jits = _jits_for(cfg, temperature)
         self.model = self._jits.model
+        # speculative multi-token decoding: decode rows generalize from
+        # length-1 to length-(1+m) chunk rows carrying self-drafted tokens,
+        # verified in the SAME mixed dispatch; acceptance is exact-prefix
+        # under greedy and distribution-identical residual sampling under
+        # temperature. Default OFF (the differential baseline); requires the
+        # unified mixed step and a rollback-capable arch (causal attention --
+        # recurrent/rolling-buffer models gate out via supports_spec_decode).
+        self.spec = bool(spec_decode) and self.mixed and \
+            bool(getattr(self.model, "supports_spec_decode", False))
+        self.spec_k = max(1, int(spec_k))        # max drafts per slot/tick
+        self.spec_ngram = max(1, int(spec_ngram))  # longest suffix n-gram
+        self.last_tick_commits: Dict[int, int] = {}   # slot -> tokens
+                                               # committed last tick (the
+                                               # scheduler's token-accurate
+                                               # quantum accounting)
         self.max_slots = max_slots
         self.max_len = max_len
         self.temperature = temperature
@@ -427,7 +532,13 @@ class ServingEngine:
                       # tokens issued on the flat axis, packed_padded_tokens
                       # the padded [kb, C] cost they would have paid
                       "packed_dispatches": 0, "packed_tokens": 0,
-                      "packed_padded_tokens": 0}
+                      "packed_padded_tokens": 0,
+                      # speculative decoding: dispatches that carried draft
+                      # rows, drafts proposed vs accepted, and drafts
+                      # deferred because prefill debt owned the packed
+                      # bucket that tick
+                      "spec_dispatches": 0, "spec_draft_tokens": 0,
+                      "spec_accepted_tokens": 0, "spec_deferred": 0}
         self._build_jits()
         self._init_paging_layout()
 
@@ -467,7 +578,12 @@ class ServingEngine:
             self.page_store.register_layout(
                 self._layout_key, axes,
                 [tuple(leaf.shape) for leaf in leaves],
-                [leaf.dtype for leaf in leaves])
+                [leaf.dtype for leaf in leaves],
+                # page-boundary truncation shares the spec-decode rollback
+                # contract: valid iff position t's cache depends only on
+                # tokens <= t (pure positional K/V, no running carries)
+                truncatable=bool(getattr(self.model, "supports_spec_decode",
+                                         False)))
 
     def resident_bytes(self, slot: int) -> int:
         """KV bytes a slot's reserved pages pin in device memory -- the
@@ -501,13 +617,18 @@ class ServingEngine:
         self._prefill_img_jit = js.prefill_img
         self._prefill_chunk_jit = js.prefill_chunk
         self._prefill_chunk_img_jit = js.prefill_chunk_img
+        self._prefill_chunk_spec_jit = js.prefill_chunk_spec
         self._prefill_packed_jit = js.prefill_packed
+        self._prefill_packed_spec_jit = js.prefill_packed_spec
+        self._prefill_packed_img_jit = js.prefill_packed_img
         self._mixed_decode_jit = js.mixed_decode
         self._gather_jit = js.gather_rows
         self._scatter_jit = js.scatter_rows
         self._reset_jit = js.reset_rows
+        self._set_lens_jit = js.set_lens
         self._sample1_jit = js.sample1
         self._sample_all_jit = js.sample_all
+        self._spec_verify_jit = js.spec_verify
         self._cache_b1, _ = self.model.init_cache(1, self.max_len)
 
     # -- slot management ----------------------------------------------------------
@@ -596,6 +717,7 @@ class ServingEngine:
                 s.eos_id = r.get("eos_id", -1)
                 s.sink = r.get("sink")
                 s.prefilled = P   # prefix-hit paths below subtract
+                s.pending_override = None
             seq_key = r.get("seq_key")
             if seq_key is None:
                 seq_key = jax.random.key(
@@ -621,9 +743,13 @@ class ServingEngine:
             hit = None
             if self.prefix_cache is not None and image_embeds is None:
                 hit = self.prefix_cache.lookup(prompt)
-            if hit is not None and hit.seq_len == P:
+            if hit is not None and hit.seq_len == P and \
+                    hit.logits is not None:
                 # exact hit: restore the cached cache slice + logits, no
-                # prompt tokens left to consume. finally: a failed
+                # prompt tokens left to consume. (A truncated disk
+                # re-hydration carries NO logits -- even a length-exact one
+                # takes the extension path below so its last token
+                # re-prefills and yields them.) finally: a failed
                 # materialization must still drop the lookup's pin
                 try:
                     cache1 = jax.tree.unflatten(
@@ -642,26 +768,36 @@ class ServingEngine:
                          "exact": True})
             elif hit is not None and not self.serial_prefill:
                 # suffix extension: restore the prefix, then chunk-prefill
-                # only prompt[hit.seq_len:] (ONE chunked-prefill job, not
+                # only prompt[done:] (ONE chunked-prefill job, not
                 # token-scan decode chunks). Safe for VLM rows too: the
                 # inserted piece carries the conversation's own image K/V.
+                # done is clamped to P-1 so a logits-free hit (truncated
+                # re-hydration) re-prefills at least its last token -- a
+                # deterministic identical K/V rewrite that yields the
+                # last-position logits activation needs.
                 try:
                     cache1 = jax.tree.unflatten(
                         self._piece_treedef,
                         [jnp.asarray(x) for x in self._state_leaves(hit)])
                 finally:
                     self._unpin_hit(hit)
+                done = min(int(hit.seq_len), P - 1)
                 self.cache = self._insert_jit(self.cache, cache1, slot)
+                # a truncated entry's residual seq_lens still carries the
+                # LONGER source prefix's length -- pin it to the tokens the
+                # pages actually cover before any attention reads it
+                self.cache = self._set_len_jit(self.cache, slot,
+                                               jnp.int32(done))
                 self.stats["prefix_hits"] += 1
-                self.stats["prefix_saved_tokens"] += hit.seq_len
-                self.stats["prefix_extend_tokens"] += P - hit.seq_len
+                self.stats["prefix_saved_tokens"] += done
+                self.stats["prefix_extend_tokens"] += P - done
                 if self.tracer is not None:
                     self.tracer.instant(
                         "prefix_hit", PID_ENGINE, self.engine_id,
-                        {"seq_id": r.get("seq_id"), "saved": hit.seq_len,
-                         "extend": P - hit.seq_len, "exact": False})
-                self.slots[slot].prefilled = P - hit.seq_len
-                self._enqueue_prefill(slot, prompt, done=hit.seq_len,
+                        {"seq_id": r.get("seq_id"), "saved": done,
+                         "extend": P - done, "exact": False})
+                self.slots[slot].prefilled = P - done
+                self._enqueue_prefill(slot, prompt, done=done,
                                       fresh=False)
             elif self.serial_prefill:
                 if hit is not None:     # looked up but not used: unpin
@@ -834,6 +970,18 @@ class ServingEngine:
             snap.release()   # warm pages must not linger in the store
             _drain([slot])
             ran += 1
+            # speculative pass (best-effort): a repetitive prompt makes the
+            # n-gram drafter fire, compiling the verify programs (the spec
+            # tick routes packed vs padded by the same bucket logic as live
+            # traffic, so whichever variant production would hit warms)
+            if self.spec:
+                pat = np.tile(prompt(4), lens[0] // 4 + 1)[:lens[0]]
+                slot = self.add_sequence(pat.astype(np.int32),
+                                         max_new=2 * self.spec_k + 4)
+                while not self.is_done(slot):
+                    self.serve_step()
+                self.free(slot)
+                ran += 1
         finally:
             self.prefix_cache = pc
         return ran
@@ -879,13 +1027,21 @@ class ServingEngine:
     def _activate_in_place(self, slot: int, logits_vec):
         """Sample `slot`'s pending token from its last-position logits (the
         cache row is already in place -- chunked prefill writes it directly)
-        and mark the slot ready to decode."""
+        and mark the slot ready to decode. A restore that stashed a
+        ``pending_override`` (text-kind snapshot under speculative decoding)
+        adopts that token verbatim instead -- the snapshot's pending may be
+        a rejected-draft residual draw the plain sampler cannot replay."""
         s = self.slots[slot]
         s.prefilling = False
-        pending = self._sample1_jit(logits_vec, self.seq_keys[slot],
-                                    jnp.int32(s.counter))
-        self.next_tokens = self.next_tokens.at[slot].set(pending)
-        s.counter += 1
+        if s.pending_override is not None:
+            self.next_tokens = self.next_tokens.at[slot].set(
+                jnp.int32(s.pending_override))
+            s.pending_override = None
+        else:
+            pending = self._sample1_jit(logits_vec, self.seq_keys[slot],
+                                        jnp.int32(s.counter))
+            self.next_tokens = self.next_tokens.at[slot].set(pending)
+            s.counter += 1
         self.counters = self.counters.at[slot].set(s.counter)
 
     # -- prefix cache (restore, then chunk-prefill the suffix) --------------------
@@ -963,6 +1119,7 @@ class ServingEngine:
         Returns {slot: token appended this step}. In mixed mode this is the
         degenerate C == 1 chunk dispatch -- no decode program, no whole-tree
         keep-guard (inactive slots are length-0 rows of the per-row mask)."""
+        self.last_tick_commits = {}
         active = self.active_slots()
         if not active:
             return {}
@@ -1019,19 +1176,67 @@ class ServingEngine:
         pair (one chunk dispatch if work is queued, then one guarded decode
         dispatch). Per-sequence token streams are identical either way --
         rows are independent -- which is exactly what the serving-equivalence
-        harness asserts. Returns {slot: decode token appended this tick}."""
+        harness asserts. Returns {slot: LAST decode token appended this
+        tick} (with speculative decoding a slot can commit several --
+        ``last_tick_commits`` has the per-slot counts).
+
+        With ``spec_decode`` on, each decoding slot first proposes up to
+        ``spec_k`` self-drafted tokens (n-gram lookup over its own
+        prompt+generated stream); slots with drafts ride the dispatch as
+        length-(1+m) chunk rows and the whole [pending, drafts] run is
+        verified in that ONE model call. Ticks where no slot drafts keep
+        the shape-stable pure-decode program -- the spec path costs nothing
+        when traffic is not repetitive."""
+        self.last_tick_commits = {}
         if not self.mixed:
             if self.prefill_pending():
                 self.prefill_step()
             return self.step()
         with self._lock:
             jobs = list(self._prefill_queue)
+        if self.spec:
+            active = self.active_slots()
+            if active:
+                drafts = self._propose_drafts(
+                    active, np.asarray(self.next_tokens))
+                if drafts:
+                    return self._mixed_dispatch(jobs, drafts=drafts)
         if not jobs:
             return self.step()     # shape-stable device-routed decode tick
         return self._mixed_dispatch(jobs)
 
+    def _propose_drafts(self, active: List[int],
+                        pend_host: np.ndarray) -> Dict[int, List[int]]:
+        """Self-draft proposals for this tick: per decoding slot, an n-gram
+        lookup over [prompt, generated, pending] proposes up to spec_k
+        continuation tokens. Clamps keep every possible commit legal: no
+        drafting past max_new - 1 (the pending itself is one commit), past
+        the cache edge, or past a pending EOS; a drafted EOS truncates the
+        draft (it may be the last element)."""
+        drafts: Dict[int, List[int]] = {}
+        for slot in active:
+            s = self.slots[slot]
+            pend = int(pend_host[slot])
+            if pend == s.eos_id:
+                continue
+            budget = min(self.spec_k,
+                         s.max_new - len(s.generated) - 1,
+                         self.max_len - (len(s.prompt) + len(s.generated)
+                                         + 1))
+            if budget <= 0:
+                continue
+            ctx = np.concatenate(
+                [s.prompt, np.asarray(s.generated + [pend], np.int32)])
+            d = _ngram_draft(ctx, budget, self.spec_ngram)
+            if not d:
+                continue
+            if s.eos_id >= 0 and s.eos_id in d:
+                d = d[:d.index(s.eos_id) + 1]
+            drafts[slot] = d
+        return drafts
+
     def _mixed_dispatch(self, jobs: List[_PendingPrefill],
-                        decode=None) -> Dict[int, int]:
+                        decode=None, drafts=None) -> Dict[int, int]:
         """The unified dispatch: prefill rows (one chunk each), decode rows
         (length-1 chunks at their current position -- bit-identical to
         decode_step) and untouched rows (length 0, preserved bit-for-bit by
@@ -1041,6 +1246,13 @@ class ServingEngine:
         modes share this one batch-build/bookkeeping pipeline and cannot
         drift apart.
 
+        ``drafts`` ({slot: [draft tokens]}) generalizes decode rows from
+        length-1 to length-(1+m) chunks: the row carries [pending, d_1..d_m],
+        the model scores every position in this same call, and the verified
+        prefix commits at once. Rejected drafts roll back by seq_len
+        truncation alone -- stale K/V beyond the committed position is
+        masked out and overwritten when the position is genuinely reached.
+
         When the participants fill most of the batch the dispatch runs on
         the full cache -- the shape the legacy decode program also paid,
         minus its whole-tree keep-guard; a small burst on a mostly-idle
@@ -1049,6 +1261,13 @@ class ServingEngine:
         active = self.active_slots() if decode is None else list(decode)
         if not jobs and not active:
             return {}
+        drafts = dict(drafts) if drafts else {}
+        if drafts and any(j.image_embeds is not None for j in jobs):
+            # no image x spec program variants: image ticks are rare and
+            # drafts re-propose next tick, so defer rather than double the
+            # compiled-program grid
+            self.stats["spec_deferred"] += len(drafts)
+            drafts = {}
         _t0 = self._obs_t0()
         _t_build = _t0
         _kind = KIND_PADDED
@@ -1056,8 +1275,19 @@ class ServingEngine:
             rem = max(len(j.tokens) - j.done for j in jobs)
             C = next((b for b in self.prefill_chunks if b >= rem),
                      self.prefill_chunks[-1])
+        elif drafts:
+            # draft-only tick: the chunk axis only needs 1 + m_max slots --
+            # next power of two keeps the program count at log2(spec_k)
+            need = 1 + max(len(d) for d in drafts.values())
+            C = 1
+            while C < need:
+                C *= 2
         else:
             C = 1
+        for slot in list(drafts):   # a draft never outgrows the chunk row
+            drafts[slot] = drafts[slot][:C - 1]
+            if not drafts[slot]:
+                del drafts[slot]
         part = [j.slot for j in jobs] + active
         kb = 1
         while kb < len(part):
@@ -1071,6 +1301,33 @@ class ServingEngine:
             spare = [i for i in range(self.max_slots) if i not in set(idx)]
             idx += spare[:kb - len(idx)]
             row_of = {s: r for r, s in enumerate(part)}
+        if drafts and jobs and self.packed:
+            # draft-length budget vs prefill debt: when the tick carries
+            # prefill chunks, drafts ride free only if they don't push the
+            # packed token axis into a LARGER bucket -- prefill throughput
+            # (the paid-for debt) outranks speculative upside
+            al = 8 if self.cfg.use_kernel else 1
+
+            def _ptot(with_drafts: bool) -> int:
+                tot = 0
+                for j in jobs:
+                    n = min(len(j.tokens) - j.done, C)
+                    tot += -(-n // al) * al
+                for slot in active:
+                    n = 1 + (len(drafts.get(slot, ()))
+                             if with_drafts else 0)
+                    tot += -(-n // al) * al
+                return tot
+
+            b0 = next((b for b in _EngineJits.PACKED_BUCKETS
+                       if b >= max(_ptot(False), 1)), None)
+            b1 = next((b for b in _EngineJits.PACKED_BUCKETS
+                       if b >= max(_ptot(True), 1)), None)
+            if b0 is not None and b0 < kb * C and b1 != b0:
+                self.stats["spec_deferred"] += len(drafts)
+                drafts = {}
+        spec = bool(drafts)
+        upto = min(C, self.spec_k + 1) if spec else None
         buf = np.zeros((kb, C), np.int32)
         lengths = np.zeros((kb,), np.int32)
         offsets = np.zeros((kb,), np.int32)
@@ -1089,8 +1346,11 @@ class ServingEngine:
         for slot in active:
             r = row_of[slot]
             s = self.slots[slot]
+            d = drafts.get(slot, ())
             buf[r, 0] = pend_host[slot]
-            lengths[r] = 1
+            if d:
+                buf[r, 1:1 + len(d)] = d
+            lengths[r] = 1 + len(d)
             offsets[r] = len(s.prompt) + len(s.generated)
         max_end = min(self.max_len, int((offsets + lengths).max()))
         kv = next(b for b in self.kv_buckets if b >= max_end)
@@ -1104,51 +1364,71 @@ class ServingEngine:
                                     jnp.asarray(fresh))
         img, imask = self._stack_images(
             [(row_of[j.slot], j) for j in jobs], kb)
+        # token-packed ragged dispatch: when the real tokens fit a
+        # packed bucket smaller than the [kb, C] rectangle, issue them
+        # on one flat axis -- a decode row costs 1 token, a 7-token
+        # tail chunk costs 7, not C. Row segments are aligned to the
+        # Pallas block_q (8) when the kernel path is on so block rows
+        # never straddle two sequences; the gap slots carry zero pad
+        # tokens that the per-row length mask kills. Image rows join the
+        # packed axis too (their TEXT tokens pack; the frontend embeddings
+        # stay a per-row dense tensor -- padded-within-packed).
+        align = 8 if self.cfg.use_kernel else 1
+        row_starts = np.zeros((kb,), np.int32)
+        cur = 0
+        for r in range(kb):
+            row_starts[r] = cur
+            cur += -(-int(lengths[r]) // align) * align
+        Npb = next((b for b in _EngineJits.PACKED_BUCKETS
+                    if b >= max(cur, 1)), None)
+        use_packed = self.packed and Npb is not None and Npb < kb * C
+        pos_logits = None
+        if use_packed:
+            flat = np.zeros((Npb,), np.int32)
+            for r in range(kb):
+                n = int(lengths[r])
+                if n:
+                    flat[row_starts[r]:row_starts[r] + n] = buf[r, :n]
+        if _t0:
+            _t_build = time.perf_counter()
         if img is not None:
             _kind = KIND_IMAGE
-            if _t0:
-                _t_build = time.perf_counter()
-            piece, logits = self._prefill_chunk_img_jit(
-                self.params, jnp.asarray(buf), piece, jnp.asarray(offsets),
-                jnp.asarray(lengths), img, imask, kv=kv)
-        else:
-            # token-packed ragged dispatch: when the real tokens fit a
-            # packed bucket smaller than the [kb, C] rectangle, issue them
-            # on one flat axis -- a decode row costs 1 token, a 7-token
-            # tail chunk costs 7, not C. Row segments are aligned to the
-            # Pallas block_q (8) when the kernel path is on so block rows
-            # never straddle two sequences; the gap slots carry zero pad
-            # tokens that the per-row length mask kills.
-            align = 8 if self.cfg.use_kernel else 1
-            row_starts = np.zeros((kb,), np.int32)
-            cur = 0
-            for r in range(kb):
-                row_starts[r] = cur
-                cur += -(-int(lengths[r]) // align) * align
-            Npb = next((b for b in _EngineJits.PACKED_BUCKETS
-                        if b >= max(cur, 1)), None)
-            if self.packed and Npb is not None and Npb < kb * C:
-                _kind = KIND_PACKED
-                flat = np.zeros((Npb,), np.int32)
-                for r in range(kb):
-                    n = int(lengths[r])
-                    if n:
-                        flat[row_starts[r]:row_starts[r] + n] = buf[r, :n]
-                if _t0:
-                    _t_build = time.perf_counter()
-                piece, logits = self._prefill_packed_jit(
+            if use_packed:
+                piece, logits = self._prefill_packed_img_jit(
                     self.params, jnp.asarray(flat), piece,
                     jnp.asarray(row_starts), jnp.asarray(offsets),
-                    jnp.asarray(lengths), kv=kv, chunk=C)
-                self.stats["packed_dispatches"] += 1
-                self.stats["packed_tokens"] += int(lengths.sum())
-                self.stats["packed_padded_tokens"] += kb * C
+                    jnp.asarray(lengths), img, imask, kv=kv, chunk=C)
             else:
-                if _t0:
-                    _t_build = time.perf_counter()
-                piece, logits = self._prefill_chunk_jit(
+                piece, logits = self._prefill_chunk_img_jit(
                     self.params, jnp.asarray(buf), piece,
-                    jnp.asarray(offsets), jnp.asarray(lengths), kv=kv)
+                    jnp.asarray(offsets), jnp.asarray(lengths), img, imask,
+                    kv=kv)
+        elif spec:
+            _kind = KIND_SPEC
+            if use_packed:
+                piece, logits, pos_logits = self._prefill_packed_spec_jit(
+                    self.params, jnp.asarray(flat), piece,
+                    jnp.asarray(row_starts), jnp.asarray(offsets),
+                    jnp.asarray(lengths), kv=kv, chunk=C, upto=upto)
+            else:
+                piece, logits, pos_logits = self._prefill_chunk_spec_jit(
+                    self.params, jnp.asarray(buf), piece,
+                    jnp.asarray(offsets), jnp.asarray(lengths), kv=kv,
+                    upto=upto)
+        elif use_packed:
+            _kind = KIND_PACKED
+            piece, logits = self._prefill_packed_jit(
+                self.params, jnp.asarray(flat), piece,
+                jnp.asarray(row_starts), jnp.asarray(offsets),
+                jnp.asarray(lengths), kv=kv, chunk=C)
+        else:
+            piece, logits = self._prefill_chunk_jit(
+                self.params, jnp.asarray(buf), piece,
+                jnp.asarray(offsets), jnp.asarray(lengths), kv=kv)
+        if use_packed:
+            self.stats["packed_dispatches"] += 1
+            self.stats["packed_tokens"] += int(lengths.sum())
+            self.stats["packed_padded_tokens"] += kb * C
         if idx is None:
             self.cache = piece
         else:
@@ -1167,9 +1447,14 @@ class ServingEngine:
             self.stats["batched_prefill_tokens"] += int(
                 sum(n for _, _, n in job_rows))
         # one sampling dispatch for finishing-prefill rows AND decode rows:
-        # per-row key/counter math identical to the legacy samplers
-        sample_rows = [r for r, _ in fin] + [row_of[s] for s in active]
-        sample_slots = [j.slot for _, j in fin] + active
+        # per-row key/counter math identical to the legacy samplers. Spec
+        # ticks split the two (decode rows verify against per-position
+        # logits instead of sampling one token).
+        sample_rows = [r for r, _ in fin]
+        sample_slots = [j.slot for _, j in fin]
+        if not spec:
+            sample_rows += [row_of[s] for s in active]
+            sample_slots += active
         emitted: Dict[int, int] = {}
         if sample_rows:
             sl = jnp.asarray(sample_slots, jnp.int32)
@@ -1182,19 +1467,27 @@ class ServingEngine:
             for _, j in fin:
                 s = self.slots[j.slot]
                 s.prefilling = False
-                s.counter += 1
+                if s.pending_override is not None:
+                    # text-kind restore under spec: adopt the snapshot's
+                    # pending verbatim (see _activate_in_place)
+                    self.next_tokens = self.next_tokens.at[j.slot].set(
+                        jnp.int32(s.pending_override))
+                    s.pending_override = None
+                else:
+                    s.counter += 1
                 new_counters.append(s.counter)
-            for slot in active:
-                s = self.slots[slot]
-                t = int(pend_host[slot])
-                s.generated.append(t)
-                if s.sink is not None:
-                    s.sink(t)
-                s.counter += 1
-                new_counters.append(s.counter)
-                emitted[slot] = t
-                self.pager.grow(f"slot{slot}",
-                                len(s.prompt) + len(s.generated) + 1)
+            if not spec:
+                for slot in active:
+                    s = self.slots[slot]
+                    t = int(pend_host[slot])
+                    s.generated.append(t)
+                    if s.sink is not None:
+                        s.sink(t)
+                    s.counter += 1
+                    new_counters.append(s.counter)
+                    emitted[slot] = t
+                    self.pager.grow(f"slot{slot}",
+                                    len(s.prompt) + len(s.generated) + 1)
             self.counters = self.counters.at[sl].set(
                 jnp.asarray(new_counters, jnp.int32))
             # keep per-slot last-position logits fresh (harvest_prefix reads
@@ -1205,9 +1498,70 @@ class ServingEngine:
                 self._last_logits = jnp.zeros(
                     (self.max_slots, logits.shape[-1]), logits.dtype)
             self._last_logits = self._last_logits.at[sl].set(picked)
+        if spec:
+            # speculative commit: one verify dispatch scores every decode
+            # row's [pending, d_1..d_m] run; the accepted prefix (plus the
+            # pending itself) commits in order, the next pending comes out
+            # of the same call, and seq_lens truncation erases the rest
+            srows = jnp.asarray([row_of[s] for s in active], jnp.int32)
+            ssl = jnp.asarray(active, jnp.int32)
+            m_arr = np.zeros((len(active),), np.int32)
+            dbuf = np.zeros((len(active), upto - 1), np.int32)
+            for i, slot in enumerate(active):
+                d = drafts.get(slot, ())
+                m_arr[i] = len(d)
+                if d:
+                    dbuf[i, :len(d)] = d
+            n_acc_d, pend_d = self._spec_verify_jit(
+                pos_logits[srows], jnp.asarray(dbuf), jnp.asarray(m_arr),
+                self.seq_keys[ssl], self.counters[ssl])
+            n_acc = np.asarray(n_acc_d)
+            self.next_tokens = self.next_tokens.at[ssl].set(pend_d)
+            new_counters = []
+            new_lens = []
+            tot_commit = 0
+            for i, slot in enumerate(active):
+                s = self.slots[slot]
+                d = drafts.get(slot, ())
+                commit = [int(pend_host[slot])] + list(d[:int(n_acc[i])])
+                for t in commit:
+                    s.generated.append(t)
+                    if s.sink is not None:
+                        s.sink(t)
+                s.counter += len(commit)   # draws consumed: n_acc + 1
+                new_counters.append(s.counter)
+                emitted[slot] = commit[-1]
+                self.last_tick_commits[slot] = len(commit)
+                tot_commit += len(commit)
+                new_lens.append(len(s.prompt) + len(s.generated))
+                self.pager.grow(f"slot{slot}",
+                                len(s.prompt) + len(s.generated) + 1)
+            self.counters = self.counters.at[ssl].set(
+                jnp.asarray(new_counters, jnp.int32))
+            # ROLLBACK: the model wrote seq_len = offset + 1 + m; truncate
+            # every spec row to its committed position
+            self.cache = self._set_lens_jit(
+                self.cache, ssl, jnp.asarray(new_lens, jnp.int32))
+            if (self._last_logits is None or
+                    self._last_logits.shape != (self.max_slots,
+                                                logits.shape[-1])):
+                self._last_logits = jnp.zeros(
+                    (self.max_slots, logits.shape[-1]), logits.dtype)
+            self._last_logits = self._last_logits.at[ssl].set(
+                pos_logits[srows, n_acc_d])
+            self.stats["spec_dispatches"] += 1
+            self.stats["spec_draft_tokens"] += int(m_arr.sum())
+            self.stats["spec_accepted_tokens"] += int(n_acc.sum())
+            self.stats["tokens"] += tot_commit
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "spec", PID_ENGINE, self.engine_id,
+                    {"rows": len(active), "drafted": int(m_arr.sum()),
+                     "accepted": int(n_acc.sum())})
         if active:
             self.stats["decode_steps"] += 1
-            self.stats["tokens"] += len(active)
+            if not spec:
+                self.stats["tokens"] += len(active)
             self.stats["mixed_decode_rows"] += len(active)
         if self.prefix_cache is not None:
             for r, j in fin:
@@ -1323,6 +1677,7 @@ class ServingEngine:
             s.prefilled = 0   # a resume re-materializes state it already
                               # paid for at first admission: tenant token
                               # metering must not double-charge the prompt
+            s.pending_override = None
         key = jax.random.wrap_key_data(jnp.asarray(snap.seq_key_data))
         self.seq_keys = self.seq_keys.at[slot].set(key)
         if snap.kind == "logits":
@@ -1334,7 +1689,14 @@ class ServingEngine:
             s.counter = snap.counter
             self.counters = self.counters.at[slot].set(snap.counter)
         else:  # text-based: re-prefill prompt + generated prefix, re-draw pending
-            s.counter = snap.counter - 1   # pending token is re-drawn
+            if self.spec and snap.pending_token is not None:
+                # a spec stream's pending may be a rejected-draft residual
+                # draw: not reproducible by the plain sampler, so the
+                # snapshot's token is adopted verbatim after the re-prefill
+                s.counter = snap.counter
+                s.pending_override = int(snap.pending_token)
+            else:
+                s.counter = snap.counter - 1   # pending token is re-drawn
             self.counters = self.counters.at[slot].set(s.counter)
             ctx = np.concatenate([snap.prompt,
                                   np.asarray(snap.generated, np.int32)]) \

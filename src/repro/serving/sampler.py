@@ -28,3 +28,75 @@ def sample(logits, seq_keys, counters, temperature: float = 0.0):
     keys = jax.vmap(jax.random.fold_in)(seq_keys, counters)
     g = jax.vmap(lambda k, s: jax.random.gumbel(k, s.shape))(keys, logits)
     return jnp.argmax(logits / temperature + g, axis=-1).astype(jnp.int32)
+
+
+# Salt folded into the per-position key to derive the acceptance uniform;
+# the gumbel resample keeps the UNsalted key -- the exact key ``sample``
+# would use at that counter, which is what makes the all-accept bonus draw
+# bitwise-identical to the token a non-speculative stream would emit.
+_SPEC_ACCEPT_SALT = 0x51EC
+
+
+def spec_verify(logits, draft, n_draft, seq_keys, counters,
+                temperature: float = 0.0):
+    """Speculative-sampling acceptance for self-drafted (point-mass) drafts.
+
+    One spec row carries [pending, d_1 .. d_m]: ``logits`` [R, Cs, V] is the
+    model's distribution AFTER each consumed position (logits[:, i] follows
+    d_i, with d_0 = the pending token), ``draft`` [R, Cs-1] the proposed
+    tokens (right-padded), ``n_draft`` [R] the real draft count m per row,
+    and ``counters`` [R] the sequence's next sampling counter c0 (the draw
+    that would produce the token after pending). Returns ``(n_acc, pending)``:
+    the accepted draft prefix length and the next pending token.
+
+    Greedy (temperature <= 0): accept while d_i == argmax(logits[:, i]);
+    pending = argmax at the first mismatch (or after d_m) -- bitwise equal
+    to running ``sample`` one position at a time.
+
+    Temperature: per-position key k_i = fold_in(seq_key, c0 + i). Accept
+    d_i iff uniform(fold_in(k_i, salt)) < p_i(d_i) where p_i =
+    softmax(logits[:, i]/T): a point-mass proposal accepts with probability
+    exactly p(d). On the first rejection the pending resamples from the
+    residual (p_i with d_i removed, renormalized) via gumbel-argmax over
+    the d_i-masked scores using k_i; with all m accepted, the bonus draw is
+    the UNmasked gumbel-argmax at k_m -- precisely ``sample``'s draw at
+    counter c0 + m. Marginal at every position is exactly p_i, so the
+    output stream is distribution-identical to non-speculative sampling
+    (and reduces to it bitwise when m = 0)."""
+    R, Cs, V = logits.shape
+    m_max = Cs - 1
+    steps = jnp.arange(m_max, dtype=jnp.int32)[None, :]          # [1, m_max]
+    real = steps < n_draft[:, None]                              # [R, m_max]
+    rows = jnp.arange(R)
+
+    if temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # [R, Cs]
+        ok = (tok[:, :m_max] == draft) & real
+        n_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+        return n_acc.astype(jnp.int32), tok[rows, n_acc]
+
+    pos = counters[:, None] + jnp.arange(Cs, dtype=jnp.int32)[None, :]
+    keys = jax.vmap(lambda k, p: jax.vmap(
+        lambda pp: jax.random.fold_in(k, pp))(p))(seq_keys, pos)  # [R, Cs]
+    gum = jax.vmap(jax.vmap(lambda k: jax.random.gumbel(k, (V,))))(keys)
+    scores = logits / temperature + gum                          # [R, Cs, V]
+    cand = jnp.argmax(scores, axis=-1).astype(jnp.int32)         # [R, Cs]
+
+    if m_max == 0:
+        return jnp.zeros((R,), jnp.int32), cand[:, 0]
+
+    u = jax.vmap(jax.vmap(lambda k: jax.random.uniform(
+        jax.random.fold_in(k, _SPEC_ACCEPT_SALT))))(keys[:, :m_max])
+    p = jax.nn.softmax(logits[:, :m_max] / temperature, axis=-1)
+    p_d = jnp.take_along_axis(p, draft[..., None], axis=-1)[..., 0]
+    ok = (u < p_d) & real
+    n_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+    n_acc = n_acc.astype(jnp.int32)
+
+    resid = jnp.where(
+        jax.nn.one_hot(draft, V, dtype=bool), -jnp.inf, scores[:, :m_max])
+    rej = jnp.argmax(resid, axis=-1).astype(jnp.int32)           # [R, m_max]
+    pend_rej = rej[rows, jnp.clip(n_acc, 0, m_max - 1)]
+    pend_acc = cand[rows, n_acc]
+    pending = jnp.where(n_acc >= n_draft, pend_acc, pend_rej)
+    return n_acc, pending.astype(jnp.int32)

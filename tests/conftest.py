@@ -25,3 +25,26 @@ def _bound_jit_mmaps():
     import jax
     jax.clear_caches()
     gc.collect()
+
+
+def _map_count() -> int:
+    try:
+        with open(f"/proc/{os.getpid()}/maps", "rb") as f:
+            return sum(1 for _ in f)
+    except OSError:          # non-linux: no visibility, rely on the
+        return 0             # module-boundary clear alone
+
+
+@pytest.fixture(autouse=True)
+def _bound_jit_mmaps_within_module():
+    """Emergency valve for a single FAT module: the module-boundary clear
+    above can't help when one module alone compiles enough programs to
+    cross the map ceiling mid-module (test_serving_equivalence grew past
+    it once the spec-decode axis landed). Checking /proc maps per test is
+    ~free; clearing only near the ceiling keeps warm jit caches for the
+    99% case."""
+    yield
+    if _map_count() > 45_000:
+        import jax
+        jax.clear_caches()
+        gc.collect()

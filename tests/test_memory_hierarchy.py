@@ -3,6 +3,7 @@ demotion (device -> host -> disk), cross-process prefix re-hydration,
 bit-exactness of the page-store path vs the legacy blob path, and the
 control-plane features built on page identity (fractional affinity, the
 migration victim cost model, the SLO admission controller, p90 planning)."""
+import os
 import tempfile
 from types import SimpleNamespace
 
@@ -215,6 +216,50 @@ class TestQuantizedTiers:
         assert st.stats["quantized_pages"] == 0
         assert st.metrics()["kv_quant"] == "off"
 
+    WIDE = "qp|64x128"
+
+    def _mk_wide(self, root, kv_quant):
+        st = _store(storage=StorageManager(root), kv_quant=kv_quant)
+        st.register_layout(self.WIDE, [1], [(1, 64, 128)], [np.float32])
+        return st
+
+    def _persist_bytes(self, root, kv_quant):
+        """Persist one 48-token prefix under ``kv_quant`` and return
+        (fresh-store-on-same-root, kv, page-blob bytes on disk)."""
+        st = self._mk_wide(root, kv_quant)
+        kv = np.zeros((1, 64, 128), np.float32)
+        kv[0, :48] = np.random.default_rng(6).normal(size=(48, 128))
+        snap = SimpleNamespace(
+            pages=st.put(self.WIDE, [kv], seq_len=48, device=True),
+            prompt=np.arange(200, 248, dtype=np.int32), seq_len=48,
+            logits=np.zeros(8, np.float32), origin=0)
+        assert st.persist_prefix(snap)
+        pages_dir = os.path.join(root, ".blobs", "kvpages")
+        nbytes = sum(os.path.getsize(os.path.join(pages_dir, f))
+                     for f in os.listdir(pages_dir))
+        fresh = self._mk_wide(root, kv_quant)
+        return fresh, kv, nbytes
+
+    def test_quantize_on_persist_rehydrates_int8_blobs(self):
+        """Quantize-on-persist round trip across 'processes': the disk
+        blobs a device-tier persist writes are int8 (re-hydration I/O sees
+        the byte savings, not just demotion), and a fresh store on the same
+        root reads them back within the one-step quantization tolerance."""
+        fresh, kv, int8_bytes = self._persist_bytes(
+            tempfile.mkdtemp(prefix="kvqp-"), "int8")
+        _, _, fp_bytes = self._persist_bytes(
+            tempfile.mkdtemp(prefix="kvfp-"), "off")
+        assert int8_bytes < 0.7 * fp_bytes   # ~1.84x smaller paged leaf
+        entry = fresh.rehydrate_prefix(
+            np.arange(200, 250, dtype=np.int32))
+        assert entry is not None and entry.seq_len == 48
+        got = entry.pages.leaves()[0]
+        err = np.abs(got - kv).max()
+        assert 0 < err < 0.05                # int8 came off disk, not fp
+        assert fresh.stats["rehydrated_entries"] == 1
+        loaded = [fresh.table.get(p) for p in entry.pages.page_ids]
+        assert all(p.scales is not None for p in loaded)
+
 
 # ---------------------------------------------------------------------------
 # prefix-probe gate: O(1) reject before the manifest scan
@@ -275,6 +320,96 @@ class TestPrefixProbeGate:
             np.concatenate([prompt, np.array([3], np.int32)]))
         assert entry is not None
         assert fresh.stats["gated_probes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# sub-prefix re-hydration: page-boundary truncation of longer donors
+# ---------------------------------------------------------------------------
+class TestTruncatedRehydrate:
+    LAY = "trunc|64"
+
+    def _mk(self, root, truncatable=True):
+        st = KVPageStore(page_size=16, storage=StorageManager(root))
+        st.register_layout(self.LAY, [1], [(1, 64, 2)], [np.float32],
+                           truncatable=truncatable)
+        return st
+
+    def _persist(self, st, n=48):
+        kv = np.zeros((1, 64, 2), np.float32)
+        kv[0, :n] = np.random.default_rng(9).normal(size=(n, 2))
+        prompt = np.arange(300, 300 + n, dtype=np.int32)
+        snap = SimpleNamespace(pages=st.put(self.LAY, [kv], seq_len=n),
+                               prompt=prompt, seq_len=n,
+                               logits=np.zeros(8, np.float32), origin=0)
+        assert st.persist_prefix(snap)
+        return kv, prompt
+
+    def test_shorter_probe_truncates_at_page_boundary(self):
+        """A persisted 48-token prefix serves a probe that diverges at
+        token 40: the donor's first 2 pages (32 tokens -- the largest page
+        boundary inside the shared region) come back as a truncated entry
+        with no logits (they followed the longer context)."""
+        root = tempfile.mkdtemp(prefix="kvtr-")
+        kv, prompt = self._persist(self._mk(root))
+        fresh = self._mk(root)
+        probe = np.concatenate([prompt[:40],
+                                np.arange(700, 708, dtype=np.int32)])
+        entry = fresh.rehydrate_prefix(probe)
+        assert entry is not None
+        assert entry.seq_len == 32 and len(entry.prompt) == 32
+        assert entry.logits is None
+        np.testing.assert_array_equal(entry.pages.leaves()[0][0, :32],
+                                      kv[0, :32])
+        assert fresh.stats["truncated_rehydrates"] == 1
+        # a whole-manifest prefix match still beats truncation
+        exact = np.concatenate([prompt, np.array([5], np.int32)])
+        e2 = fresh.rehydrate_prefix(exact)
+        assert e2 is not None and e2.seq_len == 48
+        assert e2.logits is not None
+        assert fresh.stats["truncated_rehydrates"] == 1
+
+    def test_stateful_layout_never_truncates(self):
+        """Layouts whose residual state can't rewind to a page boundary
+        (registered truncatable=False -- the same contract that gates
+        speculative rollback) must miss rather than serve a cut donor."""
+        root = tempfile.mkdtemp(prefix="kvtr2-")
+        _, prompt = self._persist(self._mk(root, truncatable=False))
+        fresh = self._mk(root, truncatable=False)
+        probe = np.concatenate([prompt[:40],
+                                np.arange(700, 708, dtype=np.int32)])
+        assert fresh.rehydrate_prefix(probe) is None
+        assert fresh.stats["truncated_rehydrates"] == 0
+        # exact whole-prefix re-hydration is unaffected by the gate
+        assert fresh.rehydrate_prefix(
+            np.concatenate([prompt, [5]]).astype(np.int32)) is not None
+
+    def test_engine_end_to_end_matches_cold_prefill(self):
+        """Cross-process flow: engine A persists a 48-token prompt; engine
+        B (fresh store, same root) submits a probe sharing 40 lead tokens.
+        B re-prefills only from the 32-token cut and its tokens equal a
+        cold engine's."""
+        root = tempfile.mkdtemp(prefix="kvtr3-")
+
+        def mk_eng():
+            # same rng_seed everywhere: it seeds the model params, and the
+            # donor's pages are only valid under the donor's weights
+            st = _store(storage=StorageManager(root))
+            return st, ServingEngine(TINY, max_slots=2, max_len=128,
+                                     rng_seed=3,
+                                     prefix_cache=PrefixCache(page_store=st),
+                                     page_store=st)
+        rng = np.random.default_rng(10)
+        prompt = rng.integers(1, TINY.vocab - 1, 48).astype(np.int32)
+        st1, eng1 = mk_eng()
+        _drain(eng1, eng1.add_sequence(prompt, max_new=4))
+        assert st1.stats["persisted_entries"] >= 1
+        probe = np.concatenate(
+            [prompt[:40], rng.integers(1, TINY.vocab - 1, 8)]).astype(np.int32)
+        st2, eng2 = mk_eng()
+        got = _drain(eng2, eng2.add_sequence(probe, max_new=8))
+        assert st2.stats["truncated_rehydrates"] == 1
+        cold = ServingEngine(TINY, max_slots=2, max_len=128, rng_seed=3)
+        assert got == _drain(cold, cold.add_sequence(probe, max_new=8))
 
 
 # ---------------------------------------------------------------------------

@@ -109,7 +109,7 @@ class _Run:
     off-device precision tier."""
 
     def __init__(self, arch, mode, paged, temperature, packed=None,
-                 kv_quant="off"):
+                 kv_quant="off", spec=False, spec_k=4):
         cfg = _cfg(arch)
         self.store = KVPageStore(page_size=16, device_pages=8192,
                                  kv_quant=kv_quant) \
@@ -120,7 +120,7 @@ class _Run:
                   prefix_cache=self.pc, page_store=self.store,
                   serial_prefill=(mode == "serial"),
                   mixed_step=(False if mode == "chunked" else None),
-                  packed_step=packed)
+                  packed_step=packed, spec_decode=spec, spec_k=spec_k)
         self.main = ServingEngine(cfg, engine_id=0, **kw)
         self.twin = ServingEngine(cfg, engine_id=1, **kw)
         self.live = {}       # name -> [engine, slot]
@@ -338,6 +338,209 @@ def test_kv_quant_exactness_delta_report(arch):
           f"saved={store_q.stats['quant_saved_bytes']}B")
     assert toks_fp == toks_q, arch     # greedy token equality
     assert delta < 0.5, delta          # bounded logit drift
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: greedy bit-equality, arch gating, acceptance law
+# ---------------------------------------------------------------------------
+
+SPEC_ARCHS = ["tiny", "moonshot-v1-16b-a3b"]          # causal transformers
+SPEC_GATED = ["rwkv6-1.6b", "recurrentgemma-2b"]      # stateful: no rollback
+
+
+def _spec_schedule(seed):
+    """Repetitive agent-style traffic -- templated prompts built from a
+    small motif pool (the n-gram drafter's bread and butter) -- with prefix
+    reuse and mid-stream migration (both snapshot kinds) in the mix, so a
+    pending rejected-draft residual token crosses an engine boundary."""
+    rng = np.random.default_rng(seed)
+    motifs = [rng.integers(1, 200, 4).astype(np.int32) for _ in range(3)]
+
+    def prompt():
+        parts = [motifs[int(rng.integers(0, len(motifs)))]
+                 for _ in range(int(rng.integers(3, 9)))]
+        return np.concatenate(parts)[:44]
+
+    return [
+        ("admit", [("fresh", prompt()), ("fresh", prompt())], False, 12),
+        ("tick", 3),
+        ("migrate", int(rng.integers(0, 10 ** 6)), "text"),
+        ("admit", [("grown", 0, prompt()[:8]), ("fresh", prompt())],
+         True, 10),
+        ("tick", 2),
+        ("migrate", int(rng.integers(0, 10 ** 6)), "logits"),
+        ("admit", [("exact", 1)], False, 8),
+    ]
+
+
+@pytest.mark.parametrize("arch", SPEC_ARCHS)
+@pytest.mark.parametrize("seed", [0, 3])
+def test_spec_decode_greedy_bit_exact(arch, seed):
+    """spec_decode on/off is invisible in the greedy token stream: the
+    drafter only proposes what argmax verification would emit anyway, and
+    rejected drafts roll back without a trace -- across chunked prefill
+    co-batching, prefix reuse and mid-stream migration. The spec path must
+    actually fire AND accept (repetitive traffic guarantees drafts)."""
+    events = _spec_schedule(seed)
+    ref = _Run(arch, "mixed", True, 0.0).run(events)
+    run = _Run(arch, "mixed", True, 0.0, spec=True)
+    got = run.run(events)
+    assert got == ref, (arch, seed)
+    stats = run.main.stats
+    assert stats["spec_dispatches"] > 0, (arch, seed)
+    assert stats["spec_accepted_tokens"] > 0, (arch, seed)
+
+
+@pytest.mark.parametrize("arch", SPEC_GATED)
+def test_spec_decode_gates_stateful_archs(arch):
+    """Stateful archs (in-place recurrent carries / rolling windows) cannot
+    rewind to a rejected position: spec_decode=True must silently gate off
+    and leave the stream untouched."""
+    events = _spec_schedule(0)
+    ref = _Run(arch, "mixed", True, 0.0).run(events)
+    run = _Run(arch, "mixed", True, 0.0, spec=True)
+    got = run.run(events)
+    assert run.main.spec is False
+    assert run.main.stats["spec_dispatches"] == 0
+    assert got == ref, arch
+
+
+def test_spec_decode_temperature_stream_integrity():
+    """Temperature spec streams are distribution-identical, not bitwise
+    (acceptance substitutes drafted tokens for fresh draws), so the
+    engine-level claim is integrity: the schedule converges, every sequence
+    emits, and the streaming channel equals the harvested result token for
+    token (asserted inside _Run.run) -- across migration with a pending
+    residual-corrected token."""
+    events = _spec_schedule(1)
+    run = _Run("tiny", "mixed", True, 0.7, spec=True)
+    out = run.run(events)
+    assert all(len(t) > 0 for t in out.values())
+
+
+def test_spec_decode_eos_in_draft_stops_exactly():
+    """A drafted EOS may commit (it truncates the draft at that point);
+    the stream must stop exactly where the non-spec stream stops."""
+    cfg = _cfg("tiny")
+    pat = np.asarray([5, 9, 13, 7] * 10, np.int32)
+
+    def run(spec):
+        eng = ServingEngine(cfg, max_slots=2, max_len=128, rng_seed=0,
+                            params=_params("tiny"), spec_decode=spec)
+        # eos = the token greedy decoding emits -> stops after 1 token; and
+        # a non-eos run bounded by max_new exercises the max_new clamp
+        slot = eng.add_sequence(pat, max_new=16, eos_id=283)
+        ticks = 0
+        while not eng.is_done(slot):
+            eng.serve_step()
+            ticks += 1
+            assert ticks < 200
+        out = eng.result(slot)
+        eng.free(slot)
+        slot = eng.add_sequence(pat[:-1], max_new=5)
+        while not eng.is_done(slot):
+            eng.serve_step()
+        out2 = eng.result(slot)
+        eng.free(slot)
+        return out, out2
+
+    off, off2 = run(False)
+    on, on2 = run(True)
+    assert on == off
+    assert on2 == off2 and len(on2) == 5
+
+
+class TestSpecVerifySampler:
+    """Unit level for ``sampler.spec_verify``: the speculative-sampling
+    acceptance rule for point-mass (self-drafted) proposals."""
+
+    V = 13
+
+    @staticmethod
+    def _keys(n, base=10):
+        return jax.vmap(jax.random.key)(
+            jnp.arange(base, base + n, dtype=jnp.uint32))
+
+    def test_no_draft_reduces_to_sample_bitwise(self):
+        """m = 0 rows (both Cs == 1 and padded draft columns) emit EXACTLY
+        ``sample``'s draw at the same counter -- the bitwise anchor that
+        makes a spec tick with empty drafts a plain decode tick."""
+        from repro.serving import sampler as smp
+        rng = np.random.default_rng(0)
+        R = 6
+        keys = self._keys(R)
+        counters = jnp.asarray(rng.integers(0, 50, R), jnp.int32)
+        for Cs in (1, 4):
+            logits = jnp.asarray(rng.normal(size=(R, Cs, self.V)) * 2.0,
+                                 jnp.float32)
+            n_acc, pend = smp.spec_verify(
+                logits, jnp.zeros((R, Cs - 1), jnp.int32),
+                jnp.zeros((R,), jnp.int32), keys, counters, temperature=0.7)
+            ref = smp.sample(logits[:, 0], keys, counters, temperature=0.7)
+            assert np.array_equal(np.asarray(pend), np.asarray(ref)), Cs
+            assert np.all(np.asarray(n_acc) == 0)
+
+    def test_all_accept_bonus_is_samples_draw_bitwise(self):
+        """With every draft accepted, the bonus draw uses the UNsalted key
+        at counter c0+m -- bitwise the token a non-speculative stream would
+        sample there (the property that keeps an all-accept spec stream on
+        the non-spec stream's random trajectory)."""
+        from repro.serving import sampler as smp
+        rng = np.random.default_rng(1)
+        R, m = 4, 3
+        draft = rng.integers(0, self.V, (R, m)).astype(np.int32)
+        logits = np.full((R, m + 1, self.V), -20.0, np.float32)
+        for r in range(R):
+            for i in range(m):
+                logits[r, i, draft[r, i]] = 20.0   # p(d) ~ 1: always accept
+        logits[:, m] = rng.normal(size=(R, self.V)).astype(np.float32)
+        keys = self._keys(R, base=77)
+        counters = jnp.asarray(rng.integers(0, 9, R), jnp.int32)
+        n_acc, pend = smp.spec_verify(
+            jnp.asarray(logits), jnp.asarray(draft),
+            jnp.full((R,), m, jnp.int32), keys, counters, temperature=0.7)
+        assert np.all(np.asarray(n_acc) == m)
+        ref = smp.sample(jnp.asarray(logits[:, m]), keys, counters + m,
+                         temperature=0.7)
+        assert np.array_equal(np.asarray(pend), np.asarray(ref))
+
+    def test_first_position_marginal_is_distribution_identical(self):
+        """Empirical law of the first post-pending token (drafted token if
+        accepted, residual resample otherwise) over many independent keys
+        == softmax(logits/T): the speculative-sampling correctness
+        guarantee, measured."""
+        from repro.serving import sampler as smp
+        V, T, d0, N = 5, 0.7, 3, 4096
+        vec = np.array([1.0, 0.3, -0.5, 2.0, 0.0], np.float32)
+        keys = self._keys(N, base=1000)
+        logits = jnp.broadcast_to(jnp.asarray(vec), (N, 2, V))
+        n_acc, pend = smp.spec_verify(
+            logits, jnp.full((N, 1), d0, jnp.int32),
+            jnp.ones((N,), jnp.int32), keys,
+            jnp.zeros((N,), jnp.int32), temperature=T)
+        tok = np.where(np.asarray(n_acc) >= 1, d0, np.asarray(pend))
+        p = np.exp(vec / T)
+        p /= p.sum()
+        freq = np.bincount(tok, minlength=V) / N
+        assert float(np.max(np.abs(freq - p))) < 0.03, (freq, p)
+        # and acceptance is doing real work: d0 accepted ~ p(d0) of the time
+        acc_rate = float(np.mean(np.asarray(n_acc) >= 1))
+        assert abs(acc_rate - float(p[d0])) < 0.03
+
+    def test_greedy_prefix_rule(self):
+        """Greedy acceptance = longest exact argmax prefix; the pending is
+        the argmax AFTER the last accepted position."""
+        from repro.serving import sampler as smp
+        rng = np.random.default_rng(3)
+        logits = rng.normal(size=(1, 4, self.V)).astype(np.float32)
+        am = np.argmax(logits[0], -1)
+        draft = np.array([[am[0], (am[1] + 1) % self.V, am[2]]], np.int32)
+        n_acc, pend = smp.spec_verify(
+            jnp.asarray(logits), jnp.asarray(draft),
+            jnp.full((1,), 3, jnp.int32), self._keys(1),
+            jnp.zeros((1,), jnp.int32), temperature=0.0)
+        assert int(n_acc[0]) == 1          # d1 matches, d2 mismatches
+        assert int(pend[0]) == am[1]       # argmax at the first mismatch
 
 
 # ---------------------------------------------------------------------------
@@ -620,6 +823,46 @@ class TestVLMMixedBatch:
         assert outs[:3] == ref
         assert outs[3] == runner_ref
         assert mixed.stats["mixed_steps"] > 0
+
+    def test_image_burst_packed_matches_padded_and_fires(self):
+        """Image rows join the token-packed ragged dispatch (their TEXT
+        tokens pack onto the flat axis; frontend embeddings stay per-row
+        dense -- padded-within-packed): token streams must equal the padded
+        image dispatch, and the packed image program must actually run."""
+        cfg = _cfg(self.ARCH)
+        kw = dict(max_slots=SLOTS, max_len=MAX_LEN, rng_seed=0,
+                  params=_params(self.ARCH))
+        pad = ServingEngine(cfg, packed_step=False, **kw)
+        pk = ServingEngine(cfg, packed_step=True, **kw)
+        calls = []
+        orig = pk._prefill_packed_img_jit
+
+        def spy(*a, **k):
+            calls.append(1)
+            return orig(*a, **k)
+
+        pk._prefill_packed_img_jit = spy
+        rng = np.random.default_rng(5)
+        prompts = [rng.integers(1, cfg.vocab - 1, n).astype(np.int32)
+                   for n in (12, 30, 21)]
+        img = [jax.random.normal(
+            jax.random.key(9 + i),
+            (1, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16)
+            for i in range(2)]
+        reqs = [dict(prompt=prompts[0], max_new=8, image_embeds=img[0]),
+                dict(prompt=prompts[1], max_new=8),
+                dict(prompt=prompts[2], max_new=8, image_embeds=img[1])]
+        runner_prompt = rng.integers(1, cfg.vocab - 1, 9).astype(np.int32)
+        outs = {}
+        for eng in (pad, pk):
+            runner = eng.add_sequence(runner_prompt, max_new=12)
+            eng.serve_step()
+            slots = eng.add_sequences([dict(**r) for r in reqs],
+                                      eager=False)
+            outs[eng] = self._drain(eng, slots + [runner])
+        assert outs[pk] == outs[pad]
+        assert calls, "packed image dispatch never fired"
+        assert pk.stats["packed_dispatches"] > 0
 
     def test_text_prompt_after_image_slot_is_clean(self):
         """A text prompt reusing a slot that held an image conversation must

@@ -23,15 +23,25 @@ def main(argv=None) -> None:
                     help="smallest sizes AND only the core-signal benches "
                          "(prefill, prefix_cache, scheduling, kernels)")
     ap.add_argument("--out", default="experiments/bench")
+    ap.add_argument("--replay", metavar="TRACE",
+                    help="replay an existing TRACE_workload.json instead of "
+                         "running the suite: reports replay tokens/s, p90 "
+                         "wait and run-over-run variance")
     args = ap.parse_args(argv)
     quick = args.quick or args.smoke
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks import (bench_agent_success, bench_context_switch,
                             bench_control, bench_kernels, bench_memory,
-                            bench_prefill, bench_prefix_cache,
+                            bench_prefill, bench_prefix_cache, bench_replay,
                             bench_scalability, bench_scheduling,
                             bench_throughput)
+
+    if args.replay:
+        suite = [("replay", bench_replay.run,
+                  {"replay_trace": args.replay, "smoke": quick})]
+        _run_suite(suite, args.out)
+        return
 
     suite = [
         ("kernels(us/call)", bench_kernels.run, {}),
@@ -54,12 +64,18 @@ def main(argv=None) -> None:
         ("scalability(F8)", bench_scalability.run,
          {"agent_counts": [4, 8] if quick else [8, 16, 32, 64]}),
         ("agent_success(T1)", bench_agent_success.run, {}),
+        ("replay", bench_replay.run,
+         {"smoke": quick,
+          "trace_out": os.path.join(args.out, "TRACE_workload.json")}),
     ]
     if args.smoke:
         keep = ("kernels", "prefill", "prefix_cache", "scheduling", "control",
-                "memory")
+                "memory", "replay")
         suite = [s for s in suite if s[0].split("(")[0] in keep]
+    _run_suite(suite, args.out)
 
+
+def _run_suite(suite, out_dir: str) -> None:
     csv_lines = ["name,us_per_call,derived"]
     for name, fn, kw in suite:
         t0 = time.time()
@@ -69,7 +85,7 @@ def main(argv=None) -> None:
         derived = _derive(name, out)
         csv_lines.append(f"{name},{us:.0f},{derived}")
         fname = "BENCH_" + name.split("(")[0] + ".json"
-        with open(os.path.join(args.out, fname), "w") as f:
+        with open(os.path.join(out_dir, fname), "w") as f:
             json.dump(out, f, indent=1)
     print("\n".join(csv_lines))
 
@@ -137,6 +153,12 @@ def _derive(name: str, out: dict) -> str:
     if name.startswith("agent_success"):
         return "|".join(f"{r['framework']}:{r['none_sr']}->{r['aios_sr']}"
                         for r in rows)
+    if name.startswith("replay"):
+        return (f"exact={out['replay_exact']};"
+                f"tok_s={out['tokens_per_s']};"
+                f"p90_wait={out['p90_wait_s']}s;"
+                f"wall_var={out['variance_pct']}%;"
+                f"events={out['events']}")
     return ""
 
 

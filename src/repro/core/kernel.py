@@ -70,6 +70,8 @@ class AIOSKernel:
                  kv_kw: Optional[Dict[str, Any]] = None,
                  trace: bool = False,
                  trace_kw: Optional[Dict[str, Any]] = None,
+                 record: bool = False,
+                 record_kw: Optional[Dict[str, Any]] = None,
                  profile: bool = True,
                  shared_params=None):
         # kernel-wide observability (repro.obs): ``trace=True`` threads a
@@ -81,6 +83,15 @@ class AIOSKernel:
         # a view over it, and ``registry.prometheus_text()`` is the
         # scrape surface.
         self.tracer = Tracer(**(trace_kw or {})) if trace else None
+        # ``record=True`` hooks a WorkloadRecorder at the scheduler front
+        # door: every submission (and cancel) lands in a deterministic
+        # event log exportable via ``export_workload`` and replayable with
+        # ``repro.replay.Replayer`` -- bit-identical token streams run
+        # over run, which is also the chaos harness's substrate.
+        self.recorder = None
+        if record:
+            from repro.replay import WorkloadRecorder
+            self.recorder = WorkloadRecorder(**(record_kw or {}))
         self.registry = MetricsRegistry()
         self.root_dir = root_dir or tempfile.mkdtemp(prefix="aios-")
         self.storage = useStorageManager(self.root_dir)
@@ -134,7 +145,8 @@ class AIOSKernel:
                                         self.context.prefix_cache,
                                         **ckw)
         sched_cls = SCHEDULERS[scheduler]
-        skw: Dict[str, Any] = {"access": self.access, "tracer": self.tracer}
+        skw: Dict[str, Any] = {"access": self.access, "tracer": self.tracer,
+                               "recorder": self.recorder}
         if scheduler in ("rr", "batched"):
             skw["quantum"] = quantum
         if self.control is not None:
@@ -192,12 +204,21 @@ class AIOSKernel:
     def start(self):
         if not self._started:
             self.scheduler.start()
+            # per-process liveness beacon (ROADMAP follow-on (n)): while
+            # this kernel runs, a heartbeat file under the storage root
+            # advertises every KV page its in-RAM table references, so a
+            # sibling process's ``kv_orphan_sweep`` cannot free blobs this
+            # kernel still needs once the mtime grace window lapses.
+            if self.kv_store is not None and self.kv_store.persist_enabled:
+                self.kv_store.start_beacon()
             self._started = True
         return self
 
     def stop(self):
         if self._started:
             self.scheduler.stop()
+            if self.kv_store is not None:
+                self.kv_store.stop_beacon()
             self._started = False
 
     def __enter__(self):
@@ -259,3 +280,11 @@ class AIOSKernel:
         if self.tracer is None:
             raise RuntimeError("kernel booted without trace=True")
         return self.tracer.export(path)
+
+    def export_workload(self, path: str) -> int:
+        """Write the recorded WorkloadTrace JSON (replayable with
+        ``repro.replay.Replayer``). Returns the event count. Requires
+        ``record=True``."""
+        if self.recorder is None:
+            raise RuntimeError("kernel booted without record=True")
+        return self.recorder.trace().save(path)

@@ -30,6 +30,7 @@ class LLMCore:
         self.executed = 0
         self.migrations_out = 0          # contexts handed to another core
         self.migrations_in = 0           # contexts restored from another core
+        self.harvest_errors = 0          # prefix persists lost to storage faults
 
     # -- occupancy ------------------------------------------------------------------
     def free_capacity(self) -> Tuple[int, int]:
@@ -96,7 +97,13 @@ class LLMCore:
         prompt_tokens = getattr(sc, "_prefill_tokens", None)
         if prompt_tokens is None:
             prompt_tokens = len(self.engine.slots[slot].prompt)
-        self.engine.harvest_prefix(slot)   # grown resubmissions extend, not re-prefill
+        try:
+            # grown resubmissions extend, not re-prefill
+            self.engine.harvest_prefix(slot)
+        except Exception:  # noqa: BLE001 -- caching is best-effort: a
+            # storage-tier fault during the persist must not fail (or
+            # retry) a generation that already FINISHED
+            self.harvest_errors += 1
         self.engine.free(slot)
         return {"tokens": tokens, "finished": True,
                 "usage": {"new_tokens": len(tokens),
@@ -123,19 +130,29 @@ class LLMCore:
         t0 = time.monotonic()
         with self._lock:
             slot = self.admit(sc)
-            steps = 0
-            while not self.engine.is_done(slot):
-                if sc.cancelled:
+            try:
+                steps = 0
+                while not self.engine.is_done(slot):
+                    if sc.cancelled:
+                        raise SyscallCancelled(f"pid={sc.pid}")
+                    if quantum is not None and steps >= quantum:
+                        ctx_id = self._suspend(sc, slot)
+                        self.busy_time += time.monotonic() - t0
+                        return False, ctx_id
+                    self.engine.step()
+                    steps += 1
+                resp = self._finish(sc, slot)
+            except Exception:
+                # fault (or cancel) mid-decode: the slot and its HBM pages
+                # must not leak with the dying syscall. free() is
+                # idempotent, so the suspend path (whose snapshot already
+                # freed the slot) never double-releases.
+                try:
                     self.engine.free(slot)
-                    self.busy_time += time.monotonic() - t0
-                    raise SyscallCancelled(f"pid={sc.pid}")
-                if quantum is not None and steps >= quantum:
-                    ctx_id = self._suspend(sc, slot)
-                    self.busy_time += time.monotonic() - t0
-                    return False, ctx_id
-                self.engine.step()
-                steps += 1
-            resp = self._finish(sc, slot)
+                except Exception:  # noqa: BLE001
+                    pass
+                self.busy_time += time.monotonic() - t0
+                raise
         self.busy_time += time.monotonic() - t0
         self.executed += 1
         return True, resp

@@ -51,13 +51,14 @@ class BaseScheduler:
 
     def __init__(self, llm_core_pool, memory_manager, storage_manager,
                  tool_manager, *, log: Optional[Callable[[str], None]] = None,
-                 access=None, tracer=None):
+                 access=None, tracer=None, recorder=None):
         self.pool = llm_core_pool
         self.memory = memory_manager
         self.storage = storage_manager
         self.tools = tool_manager
         self.access = access      # tenant front door (quotas + cross-agent ACL)
         self.tracer = tracer      # repro.obs.Tracer or None (tracing off)
+        self.recorder = recorder  # repro.replay.WorkloadRecorder or None
         self.log = log or (lambda m: None)
         self.llm_queue = self._make_queue()
         self.mem_queue: "queue.Queue" = queue.Queue()
@@ -98,7 +99,13 @@ class BaseScheduler:
         every later lifecycle hop (queue/run/requeue phases, settle) lands
         on the trace attached here, and the done-callback armed by
         ``Tracer.attach`` closes the root exactly once on ANY settle path --
-        including the quota rejection a few lines down."""
+        including the quota rejection a few lines down.
+
+        A recording kernel (``record=True``) logs the submission FIRST --
+        before the quota gate -- so a replayed trace reproduces the whole
+        input stream, rejected arrivals included."""
+        if self.recorder is not None:
+            self.recorder.record_submit(sc)
         if self.tracer is not None:
             self.tracer.attach(sc).phase("admit")
         if self.access is None:
@@ -162,6 +169,20 @@ class BaseScheduler:
         sc.fail("cancelled")
         self._record(sc)
 
+    def _fail_final(self, sc: Syscall, reason: str):
+        """Terminal failure: settle the syscall AND release any suspended
+        context it still holds -- a retry-exhausted or infeasible syscall
+        that was ever suspended owns pinned host pages, and failing it
+        without clearing the context would leak them until process exit."""
+        if sc.context_id is not None:
+            try:
+                self.pool.cores[0].ctx.clear(sc.context_id)
+            except Exception:  # noqa: BLE001 -- context may already be gone
+                pass
+            sc.context_id = None
+        sc.fail(reason)
+        self._record(sc)
+
     def _acl_denial(self, sc: Syscall) -> Optional[Dict[str, Any]]:
         """Cross-agent access gate for memory/storage syscalls naming a
         ``target_agent``/``target_tenant``: the access manager's privilege
@@ -196,9 +217,16 @@ class BaseScheduler:
             sc.mark_running()
             try:
                 resp = self._acl_denial(sc) or handler(sc)
-                sc.complete(resp)
             except Exception as e:  # noqa: BLE001 -- kernel isolates agent errors
                 sc.fail(str(e))
+            else:
+                if sc.cancelled:
+                    # cancelled while the handler ran (e.g. a timed-out
+                    # join during a storage stall): the caller is gone --
+                    # settle as cancelled, not with a response nobody reads
+                    sc.fail("cancelled")
+                else:
+                    sc.complete(resp)
             self._record(sc)
 
     def _mem_worker(self):
@@ -231,9 +259,14 @@ class BaseScheduler:
                 continue
             sc.mark_running()
             try:
-                sc.complete(self.tools.execute_tool_syscall(sc))
+                resp = self.tools.execute_tool_syscall(sc)
             except Exception as e:  # noqa: BLE001
                 sc.fail(str(e))
+            else:
+                if sc.cancelled:    # handler outlived a timed-out join
+                    sc.fail("cancelled")
+                else:
+                    sc.complete(resp)
             self._record(sc)
 
     llm_retries = 2   # fault tolerance: failed cores lose at most one quantum
@@ -252,8 +285,7 @@ class BaseScheduler:
                      f"core{core_idx} fault: {err}")
             self.llm_queue.put(sc)
         else:
-            sc.fail(str(err))
-            self._record(sc)
+            self._fail_final(sc, str(err))
 
     def _llm_worker(self, core_idx: int):
         core = self.pool.cores[core_idx]
@@ -531,8 +563,7 @@ class BatchedScheduler(BaseScheduler):
                     continue
                 reason = self._infeasible_reason(pending)
                 if reason is not None:
-                    pending.fail(reason)
-                    self._record(pending)
+                    self._fail_final(pending, reason)
                     pending = None
                     self._dispatcher_held = 0
                     continue
@@ -574,8 +605,7 @@ class BatchedScheduler(BaseScheduler):
                     continue
                 reason = self._infeasible_reason(sc)
                 if reason is not None:
-                    sc.fail(reason)
-                    self._record(sc)
+                    self._fail_final(sc, reason)
                     continue
                 idx = self._pick_core(sc)
                 if idx is None:
@@ -597,6 +627,25 @@ class BatchedScheduler(BaseScheduler):
         faulted.add(core_idx)
         sc._faulted_cores = faulted
         super()._retry_or_fail(sc, err, core_idx)
+
+    def _fault_slot(self, core_idx: int, core, slot: int, sc: Syscall,
+                    err: Exception, running: Dict[int, Syscall],
+                    used: Dict[int, int]):
+        """Settle a slot whose finish/suspend hand-off raised (e.g. the
+        storage tier failing under a context save): free the slot (the
+        allocator release is idempotent), exit the control plane, and
+        requeue the syscall through the retry path. Without this backstop
+        the exception killed the worker thread itself -- wedging every
+        other running syscall on the core forever."""
+        try:
+            core.engine.free(slot)
+        except Exception:  # noqa: BLE001
+            pass
+        if self.control is not None:
+            self.control.on_exit(core_idx, sc, "fault")
+        self._retry_or_fail(sc, err, core_idx)
+        running.pop(slot, None)
+        used.pop(slot, None)
 
     # -- control-plane actions executed on the worker thread ----------------------------
     def _preempt_victim(self, running: Dict[int, Syscall], engine,
@@ -666,7 +715,14 @@ class BatchedScheduler(BaseScheduler):
             if room <= 0 or not teng.pager.can_admit(
                     self._required_tokens(sc)):
                 return               # target filled up since the plan tick
-            ctx_id = core._suspend(sc, victim, pinned=True)
+            try:
+                ctx_id = core._suspend(sc, victim, pinned=True)
+            except Exception as e:  # noqa: BLE001 -- hand-off fault: the
+                # snapshot may be gone; requeue as a fresh retry so the
+                # generation re-runs instead of completing partial
+                self._fault_slot(core_idx, core, victim, sc, e,
+                                 running, used)
+                return
             sc.suspend(ctx_id)
             if sc.trace is not None:
                 sc.trace.event("migrate", src=core_idx, dst=dst,
@@ -740,7 +796,12 @@ class BatchedScheduler(BaseScheduler):
                     victim = self._preempt_victim(running, engine, rank)
                     if victim is not None:
                         vsc = running[victim]
-                        ctx_id = core._suspend(vsc, victim)
+                        try:
+                            ctx_id = core._suspend(vsc, victim)
+                        except Exception as e:  # noqa: BLE001
+                            self._fault_slot(core_idx, core, victim, vsc, e,
+                                             running, used)
+                            continue
                         vsc.suspend(ctx_id)
                         if vsc.trace is not None:
                             vsc.trace.event("preempt", core=core_idx,
@@ -797,7 +858,13 @@ class BatchedScheduler(BaseScheduler):
                 if slot in emitted:
                     used[slot] += commits.get(slot, 1)
                 if engine.is_done(slot):
-                    resp = core._finish(sc, slot)
+                    try:
+                        resp = core._finish(sc, slot)
+                    except Exception as e:  # noqa: BLE001 -- finish hand-off
+                        # died (engine fault while reading the result)
+                        self._fault_slot(core_idx, core, slot, sc, e,
+                                         running, used)
+                        continue
                     sc.complete(resp)
                     self._record(sc)
                     if self.control is not None:
@@ -811,7 +878,13 @@ class BatchedScheduler(BaseScheduler):
                     # quantum expired AND someone is waiting anywhere in the
                     # pool: yield the slot; the dispatcher may resume this
                     # generation on a different core
-                    ctx_id = core._suspend(sc, slot)
+                    try:
+                        ctx_id = core._suspend(sc, slot)
+                    except Exception as e:  # noqa: BLE001 -- snapshot/save
+                        # fault: requeue as a fresh retry, don't die
+                        self._fault_slot(core_idx, core, slot, sc, e,
+                                         running, used)
+                        continue
                     sc.suspend(ctx_id)
                     if self.control is not None:
                         self.control.on_exit(core_idx, sc, "suspended")

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import contextlib
 import hashlib
+import json
 import os
 import pickle
 import re
@@ -88,6 +89,7 @@ class StorageManager:
         self._locks_guard = threading.Lock()
         self._stores: Dict[str, VectorStore] = {}
         self._kv_lock = threading.Lock()   # manifest-index read-modify-write
+        self._kv_log_len = 0               # lines in the manifest append-log
         self.stats = {"writes": 0, "reads": 0, "rollbacks": 0, "shares": 0,
                       "legacy_migrations": 0}
 
@@ -365,6 +367,14 @@ class StorageManager:
     KV_PAGES_NS = "kvpages"
     KV_MANIFEST_NS = "kvprefix"
     _KV_INDEX_KEY = "_index"
+    # append-only manifest insert log (ROADMAP follow-on (h)): inserts and
+    # prunes are JSON lines appended under the flock; the pickled _index
+    # blob becomes a periodically-compacted BASE that v1 readers still
+    # understand, and cross-process inserts can no longer lose each other
+    # to a stale read-modify-write of the whole index.
+    _KV_LOG_NAME = "kvprefix.log"
+    _KV_LOG_COMPACT = 256         # compact once the log reaches this many lines
+    _KV_LIVE_DIR = "kvlive"       # per-process liveness beacons (follow-on (n))
 
     def kv_page_save(self, pid: str, data: bytes) -> None:
         self.save_blob(self.KV_PAGES_NS, pid, data)
@@ -393,12 +403,68 @@ class StorageManager:
             finally:
                 fcntl.flock(f, fcntl.LOCK_UN)
 
+    def _kv_log_path(self) -> str:
+        return self._abs(os.path.join(".blobs", self._KV_LOG_NAME))
+
+    def _kv_log_append(self, records: List[Dict[str, Any]]) -> None:
+        """Append insert/delete records as JSON lines (one write + flush,
+        caller holds the locks). A crash mid-append leaves at most one torn
+        tail line, which replay skips."""
+        path = self._kv_log_path()
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "a") as f:
+            f.write("".join(json.dumps(r, separators=(",", ":")) + "\n"
+                            for r in records))
+            f.flush()
+
+    def _kv_log_replay(self, idx: Dict[str, int]) -> int:
+        """Apply the log to a base index in order: ``ins`` re-inserts at
+        the back (preserving FIFO prune order), ``del`` removes. Returns
+        the line count so callers can decide to compact."""
+        path = self._kv_log_path()
+        lines = 0
+        try:
+            with open(path) as f:
+                for line in f:
+                    lines += 1
+                    try:
+                        rec = json.loads(line)
+                    except ValueError:   # torn tail line from a crash
+                        continue
+                    if rec.get("op") == "ins":
+                        idx.pop(rec["k"], None)
+                        idx[rec["k"]] = int(rec.get("n", 0))
+                    elif rec.get("op") == "del":
+                        idx.pop(rec.get("k"), None)
+        except OSError:
+            return 0
+        return lines
+
+    def _kv_compact(self, idx: Dict[str, int]) -> None:
+        """Fold the log into the base index blob (caller holds the locks).
+        The base stays v1-pickle, so older readers that only know the
+        ``_index`` blob read the compacted state unchanged; the log is
+        truncated AFTER the base lands (tmp+rename), so a crash between
+        the two replays idempotent records, never loses them."""
+        self.save_blob(self.KV_MANIFEST_NS, self._KV_INDEX_KEY,
+                       pickle.dumps(idx))
+        try:
+            os.truncate(self._kv_log_path(), 0)
+        except OSError:
+            pass
+
     def kv_manifest_save(self, key_hex: str, blob: bytes, seq_len: int,
                          max_entries: int = 0) -> Dict[str, int]:
-        """Write a manifest and register it in the index. With
-        ``max_entries`` > 0 the OLDEST index entries (insertion order ==
-        write order) prune FIFO once the cap is exceeded -- their manifest
-        blobs are deleted; page blobs stay (they may be shared with live
+        """Write a manifest and register it in the APPEND-ONLY insert log
+        (follow-on (h)): under the locks this appends ``ins`` (+ ``del``
+        for FIFO-pruned victims) records instead of rewriting the whole
+        index, so two processes inserting concurrently -- or one of them
+        serving a stale TTL-cached index -- cannot lose each other's
+        entries to a read-modify-write race. The log folds into the v1
+        pickle ``_index`` base every ``_KV_LOG_COMPACT`` lines. With
+        ``max_entries`` > 0 the OLDEST entries (insertion order == write
+        order) prune FIFO once the cap is exceeded -- their manifest blobs
+        are deleted; page blobs stay (they may be shared with live
         manifests; ``kv_orphan_sweep`` reclaims the unreferenced ones).
         Returns the updated index so callers can mirror it without a
         re-read."""
@@ -407,19 +473,99 @@ class StorageManager:
             idx = self._kv_index()
             idx.pop(key_hex, None)     # re-insert at the back (freshest)
             idx[key_hex] = int(seq_len)
+            records = [{"op": "ins", "k": key_hex, "n": int(seq_len)}]
             while max_entries > 0 and len(idx) > max_entries:
                 victim = next(iter(idx))
                 idx.pop(victim)
                 self.delete_blob(self.KV_MANIFEST_NS, victim)
-            self.save_blob(self.KV_MANIFEST_NS, self._KV_INDEX_KEY,
-                           pickle.dumps(idx))
+                records.append({"op": "del", "k": victim})
+            self._kv_log_append(records)
+            if self._kv_log_len >= self._KV_LOG_COMPACT:
+                self._kv_compact(idx)
             return idx
 
     def kv_manifest_load(self, key_hex: str) -> Optional[bytes]:
         return self.load_blob(self.KV_MANIFEST_NS, key_hex)
 
-    def kv_orphan_sweep(self, live_pids=(), grace_s: float = 60.0
-                        ) -> Dict[str, int]:
+    # -- per-process liveness beacons (follow-on (n)) ------------------------------
+    # A running kernel heartbeats a JSON file naming every KV page its
+    # in-RAM table references (same shape as training.fault_tolerance.
+    # Heartbeat: {"time", "pid", "pages"}; tmp+rename atomic). The orphan
+    # sweep unions fresh beacons into its live set, so kernel B cannot
+    # free blobs referenced only by live kernel A's table once the mtime
+    # grace lapses. Stale beacons -- dead pid or old timestamp -- are
+    # ignored (dead-pid files are removed on sight). Beacons are plain
+    # pid-named files, not hashed blobs: the sweeper must list them.
+    def _kv_live_dir(self) -> str:
+        return self._abs(os.path.join(".blobs", self._KV_LIVE_DIR))
+
+    def kv_beacon_path(self, pid: Optional[int] = None) -> str:
+        return os.path.join(self._kv_live_dir(),
+                            f"{int(pid if pid is not None else os.getpid())}.json")
+
+    def kv_beacon_write(self, pages=(), pid: Optional[int] = None) -> None:
+        path = self.kv_beacon_path(pid)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        doc = {"time": time.time(),
+               "pid": int(pid if pid is not None else os.getpid()),
+               "pages": [str(p) for p in pages]}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+        os.replace(tmp, path)
+
+    def kv_beacon_clear(self, pid: Optional[int] = None) -> None:
+        try:
+            os.remove(self.kv_beacon_path(pid))
+        except OSError:
+            pass
+
+    @staticmethod
+    def _pid_alive(pid: int) -> bool:
+        if pid <= 0:
+            return False
+        try:
+            os.kill(pid, 0)
+        except ProcessLookupError:
+            return False
+        except OSError:      # EPERM etc: exists, just not ours
+            return True
+        return True
+
+    def _kv_beacon_pages(self, stale_s: float) -> Tuple[set, int]:
+        """(live page ids advertised by fresh beacons, beacon count).
+        A beacon is fresh when its process is alive AND its timestamp is
+        within ``stale_s``; dead-pid beacon files are deleted."""
+        live: set = set()
+        count = 0
+        d = self._kv_live_dir()
+        if not os.path.isdir(d):
+            return live, count
+        now = time.time()
+        for fn in os.listdir(d):
+            if not fn.endswith(".json"):
+                continue
+            path = os.path.join(d, fn)
+            try:
+                with open(path) as f:
+                    doc = json.load(f)
+            except (OSError, ValueError):   # torn write / raced remove
+                continue
+            pid = int(doc.get("pid", -1))
+            if not self._pid_alive(pid):
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
+                continue
+            if now - float(doc.get("time", 0.0)) >= stale_s:
+                continue
+            count += 1
+            live.update(str(p) for p in doc.get("pages", ()))
+        return live, count
+
+    def kv_orphan_sweep(self, live_pids=(), grace_s: float = 60.0,
+                        beacon_stale_s: float = 30.0) -> Dict[str, int]:
         """Mark-and-sweep over the kvpages blob namespace (ROADMAP follow-on
         (k)): manifest pruning deletes manifest blobs but leaves their page
         blobs, because pages are content-addressed and may be shared with
@@ -435,16 +581,23 @@ class StorageManager:
         takes the lock, so a just-flushed page can be in no manifest and no
         table yet. ``grace_s`` NARROWS that window to pathological stalls
         (unreferenced blobs younger than the grace period are skipped; blob
-        writes are tmp+rename, so mtime is trustworthy) -- a sibling
-        process paused for longer than the grace period between its flush
-        and its manifest write can still lose those pages, which is why the
-        store-level caller documents "sweep from the root-owning kernel or
-        with siblings quiesced". Blob filenames are derived through
-        ``_blob_path`` so mark and write share one naming scheme. Returns
-        {"swept", "kept", "recent", "live_pids"}."""
+        writes are tmp+rename, so mtime is trustworthy). Blob filenames
+        are derived through ``_blob_path`` so mark and write share one
+        naming scheme.
+
+        Cross-process safety (follow-on (n)): the mark set also unions
+        every page advertised by a FRESH liveness beacon (see
+        ``kv_beacon_write``) -- a running sibling kernel's in-RAM table
+        references pages that appear in no manifest, and before beacons a
+        sweep from another process would free them once the grace lapsed
+        (a real use-after-free). Stale beacons (dead pid, old mtime) are
+        ignored, so a crashed kernel cannot pin garbage forever. Returns
+        {"swept", "kept", "recent", "live_pids", "beacons"}."""
         with self._kv_lock, self._kv_flock():
             pids = live_pids() if callable(live_pids) else live_pids
             live = {str(p) for p in pids}
+            beacon_pages, beacons = self._kv_beacon_pages(beacon_stale_s)
+            live |= beacon_pages
             for key in list(self._kv_index()):
                 blob = self.load_blob(self.KV_MANIFEST_NS, key)
                 if blob is None:
@@ -476,16 +629,21 @@ class StorageManager:
                     except OSError:
                         continue   # raced with another sweep/writer
             return {"swept": swept, "kept": kept, "recent": recent,
-                    "live_pids": len(live)}
+                    "live_pids": len(live), "beacons": beacons}
 
     def _kv_index(self) -> Dict[str, int]:
+        """Base pickle index (v1 roots read identically: no log, zero
+        replayed lines) + ordered append-log replay. Tracks the log length
+        in ``_kv_log_len`` for the compaction trigger."""
         blob = self.load_blob(self.KV_MANIFEST_NS, self._KV_INDEX_KEY)
-        if blob is None:
-            return {}
-        try:
-            return pickle.loads(blob)
-        except Exception:  # noqa: BLE001 -- a torn index is an empty index
-            return {}
+        idx: Dict[str, int] = {}
+        if blob is not None:
+            try:
+                idx = pickle.loads(blob)
+            except Exception:  # noqa: BLE001 -- a torn base is an empty base
+                idx = {}
+        self._kv_log_len = self._kv_log_replay(idx)
+        return idx
 
     def kv_manifest_index(self) -> Dict[str, int]:
         """token-key-hex -> seq_len of every persisted prefix manifest (read

@@ -58,6 +58,8 @@ class Syscall:
         self.cancelled = False                  # cooperative cancel flag
         self.trace = None                       # SyscallTrace when the kernel
                                                 # traces (repro.obs); None = off
+        self.on_cancel = None                   # workload-recorder hook: called
+                                                # once per accepted cancel()
         self._done_callbacks: List[Callable[["Syscall"], None]] = []
         self._settle_lock = threading.Lock()
 
@@ -134,6 +136,11 @@ class Syscall:
         self.cancelled = True
         if self.trace is not None:
             self.trace.event("cancel_requested")
+        if self.on_cancel is not None:
+            try:
+                self.on_cancel(self)
+            except Exception:  # noqa: BLE001 -- recording never blocks cancel
+                pass
         return True
 
     def join(self, timeout: Optional[float] = None) -> Any:

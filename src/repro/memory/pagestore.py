@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import hashlib
 import pickle
+import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -198,8 +199,11 @@ class KVPageStore:
             "promotions": 0, "persisted_entries": 0, "rehydrated_entries": 0,
             "device_rejections": 0, "gc_swept_blobs": 0, "gc_runs": 0,
             "quantized_pages": 0, "quant_saved_bytes": 0, "gated_probes": 0,
-            "truncated_rehydrates": 0,
+            "truncated_rehydrates": 0, "corrupt_manifests": 0,
+            "index_errors": 0, "persist_errors": 0,
         }
+        self._beacon_thread: Optional[threading.Thread] = None
+        self._beacon_stop: Optional[threading.Event] = None
 
     # -- layouts -----------------------------------------------------------------
     def register_layout(self, key: str, time_axes: Sequence[Optional[int]],
@@ -614,32 +618,45 @@ class KVPageStore:
         """Write-through persist a prefix entry: flush its pages (marked
         durable) and store a manifest under the token key, so a fresh
         process on the same storage root re-hydrates this prefix instead of
-        re-prefilling it."""
+        re-prefilling it.
+
+        Best-effort by contract: persistence runs inline on the decode path
+        (``_cache_prefix`` after a prefill completes), so a storage-tier
+        fault here must degrade to "not persisted" -- it must NOT propagate
+        and fail (or retry) a generation whose tokens never needed the
+        disk. Pages already flushed before the fault stay durable (their
+        blobs are valid; the orphan sweep reclaims them if no manifest ever
+        lands)."""
         if not self.persist_enabled:
             return False
         handle: PagedKV = snap.pages
         key = self._prefix_key(snap.prompt)
-        with self.table.lock:
-            meta_pages = []
-            for pid in handle.page_ids:
-                page = self.table.get(pid)
-                if page is None or not self._flush(page):
-                    return False
-                page.durable = True
-                meta_pages.append((pid, page.nbytes, page.width, page.origin))
-        logits = None if snap.logits is None else np.asarray(snap.logits)
-        manifest = {
-            "prompt": np.asarray(snap.prompt, np.int32),
-            "seq_len": int(snap.seq_len),
-            "layout_key": handle.layout_key,
-            "origin": getattr(snap, "origin", None),
-            "logits": logits,
-            "pages": meta_pages,
-            "residual": [np.asarray(a) for a in handle.residual],
-        }
-        idx = self.storage.kv_manifest_save(key, pickle.dumps(manifest),
-                                            int(snap.seq_len),
-                                            max_entries=self.max_manifests)
+        try:
+            with self.table.lock:
+                meta_pages = []
+                for pid in handle.page_ids:
+                    page = self.table.get(pid)
+                    if page is None or not self._flush(page):
+                        return False
+                    page.durable = True
+                    meta_pages.append((pid, page.nbytes, page.width,
+                                       page.origin))
+            logits = None if snap.logits is None else np.asarray(snap.logits)
+            manifest = {
+                "prompt": np.asarray(snap.prompt, np.int32),
+                "seq_len": int(snap.seq_len),
+                "layout_key": handle.layout_key,
+                "origin": getattr(snap, "origin", None),
+                "logits": logits,
+                "pages": meta_pages,
+                "residual": [np.asarray(a) for a in handle.residual],
+            }
+            idx = self.storage.kv_manifest_save(key, pickle.dumps(manifest),
+                                                int(snap.seq_len),
+                                                max_entries=self.max_manifests)
+        except Exception:  # noqa: BLE001 -- storage down: skip the persist
+            self.stats["persist_errors"] += 1
+            return False
         with self.table.lock:
             # the save returns the post-prune index: mirror it so misses
             # keep hitting the cache instead of re-reading the blob
@@ -657,7 +674,14 @@ class KVPageStore:
         now = time.monotonic()
         if (self._index_cache is None
                 or now - self._index_time > self.index_ttl_s):
-            self._index_cache = self.storage.kv_manifest_index()
+            try:
+                self._index_cache = self.storage.kv_manifest_index()
+            except Exception:  # noqa: BLE001 -- storage tier down: serve
+                # the stale cache (or nothing) instead of crashing the
+                # admission path that called through the prefix cache
+                self.stats["index_errors"] += 1
+                if self._index_cache is None:
+                    self._index_cache = {}
             self._index_time = now
             self._gate = self._build_gate(self._index_cache)
         return self._index_cache
@@ -744,15 +768,27 @@ class KVPageStore:
             if best_key is None:
                 return None
             trunc = best_t
-        blob = self.storage.kv_manifest_load(best_key)
-        if blob is None:
+        try:
+            blob = self.storage.kv_manifest_load(best_key)
+            if blob is None:
+                return None
+            man = pickle.loads(blob)
+            # force-validate the page tuples here so malformed entries
+            # surface inside this guard, not in the table transaction below
+            meta_pages = [(str(p), int(b), int(w), o)
+                          for p, b, w, o in man["pages"]]
+            seq_len = int(man["seq_len"])
+            prompt, logits = man["prompt"], man["logits"]
+            residual = list(man["residual"])
+            layout_key, entry_origin = man["layout_key"], man["origin"]
+        except Exception:  # noqa: BLE001 -- truncated/corrupt manifest blob
+            # (torn write, version skew, storage fault): a STRUCTURED miss
+            # -- the caller cold-prefills -- never an admission crash
+            self.stats["corrupt_manifests"] += 1
             return None
-        man = pickle.loads(blob)
-        lay = self._layouts.get(man["layout_key"])
+        lay = self._layouts.get(layout_key)
         if lay is None:
             return None   # no engine with this layout in this process
-        meta_pages = man["pages"]
-        seq_len, prompt, logits = man["seq_len"], man["prompt"], man["logits"]
         if trunc:
             if not lay.truncatable:
                 return None   # residual state can't rewind to the boundary
@@ -765,25 +801,25 @@ class KVPageStore:
         with self.table.lock:
             page_ids = []
             nbytes = 0
-            for pid, pnb, width, origin in meta_pages:
+            for pid, pnb, width, porigin in meta_pages:
                 page = self.table.get(pid)
                 if page is None:
-                    page = KVPage(pid, None, pnb, width, origin, "disk")
+                    page = KVPage(pid, None, pnb, width, porigin, "disk")
                     page.durable = page.flushed = True
                     page.last_use = self._tick()
                     self.table.add(page)
                 self.table.incref(pid)
                 page_ids.append(pid)
                 nbytes += pnb
-            handle = PagedKV(self, man["layout_key"], page_ids,
-                             list(man["residual"]), seq_len,
-                             nbytes + sum(a.nbytes for a in man["residual"]))
-            self._residual_bytes += sum(a.nbytes for a in man["residual"])
+            handle = PagedKV(self, layout_key, page_ids,
+                             residual, seq_len,
+                             nbytes + sum(a.nbytes for a in residual))
+            self._residual_bytes += sum(a.nbytes for a in residual)
         self.stats["rehydrated_entries"] += 1
         if trunc:
             self.stats["truncated_rehydrates"] += 1
         return PagedPrefixEntry(prompt, seq_len, handle,
-                                logits, man["origin"])
+                                logits, entry_origin)
 
     def gc_orphan_blobs(self, grace_s: float = 60.0) -> Dict[str, int]:
         """Reclaim orphan page blobs (ROADMAP follow-on (k)): manifest
@@ -815,6 +851,60 @@ class KVPageStore:
             self.stats["gc_swept_blobs"] += res["swept"]
             self.stats["gc_runs"] += 1
         return res
+
+    # -- liveness beacon (ROADMAP follow-on (n)) -----------------------------------
+    def _table_pids(self) -> List[str]:
+        with self.table.lock:
+            return [p.pid for p in self.table.pages()]
+
+    def beacon_now(self) -> None:
+        """Write one beacon beat immediately (every page id the in-RAM
+        table references). The kernel's background thread calls this each
+        interval; tests call it directly to make liveness visible without
+        waiting out an interval."""
+        if self.storage is not None:
+            self.storage.kv_beacon_write(self._table_pids())
+
+    def start_beacon(self, interval_s: float = 2.0) -> None:
+        """Advertise this process's live KV pages to sibling sweepers (the
+        cross-process half of ``gc_orphan_blobs``'s caveat): a heartbeat
+        file under the storage root -- same shape as
+        ``training.fault_tolerance.Heartbeat`` -- refreshed every
+        ``interval_s`` with the current page-table ids, so another
+        kernel's ``kv_orphan_sweep`` keeps them even past its mtime
+        grace. Idempotent; no-op without a storage tier."""
+        if self.storage is None or self._beacon_thread is not None:
+            return
+        self.beacon_now()     # visible before the first interval elapses
+        stop = threading.Event()
+
+        def _beat():
+            while not stop.wait(interval_s):
+                try:
+                    self.beacon_now()
+                except Exception:  # noqa: BLE001 -- a sick storage tier
+                    pass           # must not kill the heartbeat thread
+
+        self._beacon_stop = stop
+        self._beacon_thread = threading.Thread(target=_beat, daemon=True,
+                                               name="aios-kv-beacon")
+        self._beacon_thread.start()
+
+    def stop_beacon(self, clear: bool = True) -> None:
+        """Stop the heartbeat; ``clear`` removes the beacon file so a
+        clean shutdown stops pinning blobs instantly (a crash leaves the
+        file, and the dead-pid check invalidates it)."""
+        if self._beacon_thread is None:
+            return
+        self._beacon_stop.set()
+        self._beacon_thread.join(timeout=5.0)
+        self._beacon_thread = None
+        self._beacon_stop = None
+        if clear and self.storage is not None:
+            try:
+                self.storage.kv_beacon_clear()
+            except Exception:  # noqa: BLE001
+                pass
 
     # -- queries -------------------------------------------------------------------
     def page_origins(self, handle: PagedKV) -> List[Optional[int]]:

@@ -1,0 +1,23 @@
+"""Deterministic workload record/replay + chaos harness (ROADMAP item 5).
+
+``WorkloadRecorder`` hooks the scheduler front door and captures every pool
+input as a JSON event log (``WorkloadTrace``); ``Replayer`` re-submits a
+trace against a fresh kernel and reports per-syscall token streams --
+bit-identical run over run, which makes a recorded trace the steady
+pool-benchmark protocol. ``ChaosPlan`` threads timed fault injections
+(core kill, storage stall/error, manifest corruption, concurrent GC) into a
+replay; ``check_settled`` asserts the post-scenario invariants: every
+syscall settled exactly once, no leaked quota/slots/pages, no open root
+spans.
+"""
+from repro.replay.chaos import (ChaosPlan, StorageStall, check_settled,
+                                corrupt_manifest, drop_manifest_pages,
+                                kill_core, stall_storage)
+from repro.replay.replayer import Replayer, ReplayReport
+from repro.replay.trace import WorkloadRecorder, WorkloadTrace
+
+__all__ = [
+    "ChaosPlan", "Replayer", "ReplayReport", "StorageStall",
+    "WorkloadRecorder", "WorkloadTrace", "check_settled", "corrupt_manifest",
+    "drop_manifest_pages", "kill_core", "stall_storage",
+]

@@ -1,0 +1,302 @@
+"""Chaos harness: timed fault injections threaded into a trace replay,
+plus the post-scenario invariant sweep.
+
+Injectors cover the unhappy paths the pool never walks in the tier-1
+suite: an LLM core dying mid-decode (``kill_core``), the storage tier
+stalling or erroring (``StorageStall``/``stall_storage``), a KV prefix
+manifest torn on disk (``corrupt_manifest``) or its page blobs swept by a
+racing sibling (``drop_manifest_pages``). After any scenario,
+``check_settled`` asserts the kernel's conservation laws: every syscall
+settled exactly once, every engine slot and pager page released, tenant
+quota balances back at zero, and the tracer's root spans all closed.
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+Action = Callable[[Any], None]  # receives the kernel
+
+
+class ChaosPlan:
+    """An ordered set of fault injections bound to a replay run.
+
+    ``after_submit(n, action)`` fires ``action(kernel)`` synchronously
+    right after the n-th submission (1-based); ``at(t_s, action)`` fires
+    on a wall-clock timer ``t_s`` seconds after the replay starts."""
+
+    def __init__(self):
+        self._after: List[tuple] = []
+        self._at: List[tuple] = []
+        self._timers: List[threading.Timer] = []
+        self.fired: List[str] = []
+        self._lock = threading.Lock()
+
+    def after_submit(self, n: int, action: Action) -> "ChaosPlan":
+        self._after.append((int(n), action))
+        return self
+
+    def at(self, t_s: float, action: Action) -> "ChaosPlan":
+        self._at.append((float(t_s), action))
+        return self
+
+    # -- replayer-facing ----------------------------------------------------------
+    def start(self, kernel) -> None:
+        for t_s, action in self._at:
+            timer = threading.Timer(t_s, self._fire, args=(f"at={t_s}",
+                                                           action, kernel))
+            timer.daemon = True
+            timer.start()
+            self._timers.append(timer)
+
+    def fire_after_submit(self, n: int, kernel) -> None:
+        for trig_n, action in self._after:
+            if trig_n == n:
+                self._fire(f"after_submit={n}", action, kernel)
+
+    def stop(self) -> None:
+        for timer in self._timers:
+            timer.cancel()
+        self._timers.clear()
+
+    def _fire(self, label: str, action: Action, kernel) -> None:
+        with self._lock:
+            self.fired.append(label)
+        action(kernel)
+
+
+# -- injectors ----------------------------------------------------------------------
+def kill_core(core_idx: int = 0, times: int = 1) -> Action:
+    """Kill core ``core_idx`` mid-decode: its engine's next ``times``
+    tick entry points raise, exercising the scheduler's fault-requeue
+    path (slots freed, syscalls retried on a healthy core, the core
+    marked faulted). The originals are restored once exhausted, so a
+    single-core pool recovers on retry."""
+
+    def action(kernel) -> None:
+        engine = kernel.pool.cores[core_idx].engine
+        orig_serve, orig_step = engine.serve_step, engine.step
+        state = {"left": int(times)}
+        lock = threading.Lock()
+
+        def _dying() -> bool:
+            with lock:
+                if state["left"] <= 0:
+                    return False
+                state["left"] -= 1
+                if state["left"] == 0:
+                    engine.serve_step, engine.step = orig_serve, orig_step
+                return True
+
+        def serve(*a, **kw):
+            if _dying():
+                raise RuntimeError(
+                    f"chaos: core {core_idx} killed mid-decode")
+            return orig_serve(*a, **kw)
+
+        def step(*a, **kw):
+            if _dying():
+                raise RuntimeError(
+                    f"chaos: core {core_idx} killed mid-decode")
+            return orig_step(*a, **kw)
+
+        engine.serve_step, engine.step = serve, step
+
+    return action
+
+
+class StorageStall:
+    """Latency/error shim over a StorageManager: wraps the syscall entry
+    point and the blob primitives so every storage touch -- tool-thread
+    file ops, KV page flushes, manifest reads -- goes through the gate.
+    ``stall()`` holds callers (latency mode) or fails them fast with
+    ``OSError`` (``error=True``); ``unstall()`` releases. Install/remove
+    are idempotent and restore the original bound methods."""
+
+    METHODS = ("execute_storage_syscall", "save_blob", "load_blob")
+
+    def __init__(self, storage, *, error: bool = False,
+                 methods=METHODS, poll_s: float = 0.01):
+        self.storage = storage
+        self.error = error
+        self.poll_s = poll_s
+        self._methods = tuple(m for m in methods if hasattr(storage, m))
+        self._stalled = threading.Event()
+        self._orig: Dict[str, Callable] = {}
+        self.calls_gated = 0
+
+    def _gate(self) -> None:
+        if not self._stalled.is_set():
+            return
+        self.calls_gated += 1
+        if self.error:
+            raise OSError("chaos: storage tier unavailable")
+        while self._stalled.is_set():
+            time.sleep(self.poll_s)
+
+    def install(self) -> "StorageStall":
+        if self._orig:
+            return self
+        for name in self._methods:
+            orig = getattr(self.storage, name)
+            self._orig[name] = orig
+
+            def shim(*a, _orig=orig, **kw):
+                self._gate()
+                return _orig(*a, **kw)
+
+            setattr(self.storage, name, shim)
+        return self
+
+    def remove(self) -> None:
+        for name, orig in self._orig.items():
+            setattr(self.storage, name, orig)
+        self._orig.clear()
+
+    def stall(self) -> None:
+        self._stalled.set()
+
+    def unstall(self) -> None:
+        self._stalled.clear()
+
+    def __enter__(self) -> "StorageStall":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.unstall()
+        self.remove()
+
+
+def stall_storage(duration_s: float = 0.5, error: bool = False) -> Action:
+    """Plan action: stall the kernel's storage tier for ``duration_s``
+    then restore it (a timer un-stalls even if the replay errors)."""
+
+    def action(kernel) -> None:
+        shim = StorageStall(kernel.storage, error=error).install()
+        shim.stall()
+
+        def _restore():
+            shim.unstall()
+            shim.remove()
+
+        timer = threading.Timer(duration_s, _restore)
+        timer.daemon = True
+        timer.start()
+
+    return action
+
+
+def corrupt_manifest(storage, key: Optional[str] = None) -> List[str]:
+    """Overwrite persisted prefix manifest blob(s) with garbage (a torn
+    write). ``key=None`` corrupts every manifest in the index. Returns
+    the corrupted keys; rehydration must count a structured miss and
+    cold-prefill, never crash."""
+    keys = [key] if key is not None else list(storage.kv_manifest_index())
+    for k in keys:
+        storage.save_blob(storage.KV_MANIFEST_NS, k,
+                          b"\x80\x04chaos: torn manifest write")
+    return keys
+
+
+def drop_manifest_pages(storage, key: Optional[str] = None) -> int:
+    """Delete every page blob the manifest(s) reference -- the on-disk
+    state a racing sibling GC would leave. The manifest itself stays, so
+    rehydration succeeds and the loss surfaces at materialization, where
+    the engine must degrade to a cold prefill. Returns pages dropped."""
+    keys = [key] if key is not None else list(storage.kv_manifest_index())
+    dropped = 0
+    for k in keys:
+        blob = storage.kv_manifest_load(k)
+        if blob is None:
+            continue
+        try:
+            man = pickle.loads(blob)
+        except Exception:  # noqa: BLE001
+            continue
+        for pid, *_rest in man.get("pages", []):
+            storage.kv_page_delete(pid)
+            dropped += 1
+    return dropped
+
+
+# -- invariants ---------------------------------------------------------------------
+def check_settled(kernel, syscalls, *, timeout: float = 15.0) -> None:
+    """Post-scenario invariant sweep. ``syscalls`` is the replayer's
+    ``report.syscalls`` dict (or any iterable of syscalls). Asserts:
+
+    - every syscall settled (done or error), exactly once where the
+      ``_settle_count`` instrumentation is present;
+    - every engine slot free and every ``slot*`` pager reservation
+      released (polled briefly: workers decrement inflight just after
+      settling);
+    - scheduler inflight accounting drained;
+    - tracer root spans balanced (``roots_opened == roots_closed``);
+    - every tenant's inflight / token / page reservations back at zero.
+    """
+    scs = list(syscalls.values()) if isinstance(syscalls, dict) \
+        else list(syscalls)
+    problems: List[str] = []
+    for sc in scs:
+        if not sc.event.wait(timeout):
+            problems.append(f"pid={sc.pid} never settled")
+            continue
+        if sc.status not in ("done", "error"):
+            problems.append(f"pid={sc.pid} settled with status={sc.status}")
+        n = getattr(sc, "_settle_count", None)
+        if n is not None and n != 1:
+            problems.append(f"pid={sc.pid} settled {n} times")
+
+    def _drained() -> bool:
+        for core in kernel.pool.cores:
+            eng = core.engine
+            if eng.free_slot_count() != eng.max_slots:
+                return False
+            if any(eng.pager.held(f"slot{i}") for i in range(eng.max_slots)):
+                return False
+        inflight = getattr(kernel.scheduler, "_inflight", None)
+        if inflight and any(inflight):
+            return False
+        return True
+
+    deadline = time.monotonic() + timeout
+    while not _drained() and time.monotonic() < deadline:
+        time.sleep(0.02)
+    if not _drained():
+        for core in kernel.pool.cores:
+            eng = core.engine
+            held = sum(eng.pager.held(f"slot{i}")
+                       for i in range(eng.max_slots))
+            if eng.free_slot_count() != eng.max_slots or held:
+                problems.append(
+                    f"core{core.core_id} leaked slots "
+                    f"(free={eng.free_slot_count()}/{eng.max_slots}, "
+                    f"pages_held={held})")
+        inflight = getattr(kernel.scheduler, "_inflight", None)
+        if inflight and any(inflight):
+            problems.append(f"scheduler inflight not drained: {inflight}")
+    if kernel.tracer is not None:
+        m = kernel.tracer.metrics()
+        if m["roots_opened"] != m["roots_closed"]:
+            problems.append(f"open root spans: opened={m['roots_opened']} "
+                            f"closed={m['roots_closed']}")
+    for tenant, rec in kernel.access.metrics()["tenants"].items():
+        usage = rec["usage"]
+        for field in ("inflight", "tokens_reserved", "pages_reserved"):
+            if usage.get(field, 0) != 0:
+                problems.append(
+                    f"tenant {tenant} leaked {field}={usage[field]}")
+    if problems:
+        raise AssertionError("chaos invariants violated: "
+                             + "; ".join(problems))
+
+
+def dead_pid() -> int:
+    """A pid guaranteed dead right now: fork a child that exits, reap it.
+    Used by beacon tests to prove stale beacons do not pin blobs."""
+    import subprocess
+    import sys
+    proc = subprocess.Popen([sys.executable, "-c", "pass"])
+    proc.wait()
+    return proc.pid

@@ -1,0 +1,194 @@
+"""Replayer: re-submit a recorded WorkloadTrace against a fresh kernel.
+
+Events fire in recorded order; ``time_scale`` stretches or collapses the
+recorded inter-arrival gaps (0.0 = as fast as possible -- virtual time,
+the default for deterministic benchmarking on a noisy host). Streaming
+syscalls are drained by replayer threads so the bounded channel is
+exercised; cancel events re-issue ``cancel()`` on the reconstructed
+syscall. Every syscall gets a settle-counting done-callback, which is what
+``repro.replay.chaos.check_settled`` uses to assert exactly-once settling
+after a fault scenario.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.syscall import (LLMSyscall, MemorySyscall, StorageSyscall,
+                                Syscall, ToolSyscall)
+from repro.replay.trace import WorkloadTrace
+
+_SYSCALL_CLASSES = {
+    "llm": LLMSyscall,
+    "memory": MemorySyscall,
+    "storage": StorageSyscall,
+    "tool": ToolSyscall,
+}
+
+
+def _count_settle(sc: Syscall) -> None:
+    sc._settle_count = getattr(sc, "_settle_count", 0) + 1
+
+
+def build_syscall(event: Dict[str, Any]) -> Syscall:
+    """Reconstruct the syscall a submit event recorded."""
+    cls = _SYSCALL_CLASSES.get(event.get("category", "llm"), Syscall)
+    request = {k: v for k, v in dict(event.get("request", {})).items()
+               if k != "_dropped"}
+    sc = cls(event.get("agent", "replay"), request,
+             priority=int(event.get("priority", 0)),
+             tenant_id=event.get("tenant", "default"))
+    sc._settle_count = 0
+    sc.add_done_callback(_count_settle)
+    return sc
+
+
+class ReplayReport:
+    """Per-syscall outcomes plus the aggregate pool numbers the replay
+    bench reports (tokens/s, p50/p90 wait)."""
+
+    def __init__(self, results: Dict[int, Dict[str, Any]], wall_s: float,
+                 syscalls: Dict[int, Syscall]):
+        self.results = results
+        self.wall_s = wall_s
+        self.syscalls = syscalls
+        self.completed = sum(1 for r in results.values()
+                             if r["status"] == "done")
+        self.failed = len(results) - self.completed
+        total_tokens = sum(len(r["tokens"]) for r in results.values()
+                           if r["tokens"] is not None)
+        self.total_tokens = total_tokens
+        self.tokens_per_s = total_tokens / wall_s if wall_s > 0 else 0.0
+        waits = sorted(r["wait_s"] for r in results.values())
+        self.p50_wait = waits[len(waits) // 2] if waits else 0.0
+        self.p90_wait = waits[int(len(waits) * 0.9)] if waits else 0.0
+
+    def streams(self) -> Dict[int, tuple]:
+        """Token stream per completed llm syscall id -- the bit-equality
+        unit: two replays of one trace must return identical dicts."""
+        return {eid: tuple(r["tokens"]) for eid, r in self.results.items()
+                if r["status"] == "done" and r["tokens"] is not None}
+
+    def summary(self) -> Dict[str, Any]:
+        return {"completed": self.completed, "failed": self.failed,
+                "total_tokens": self.total_tokens,
+                "tokens_per_s": round(self.tokens_per_s, 2),
+                "p50_wait_s": round(self.p50_wait, 4),
+                "p90_wait_s": round(self.p90_wait, 4),
+                "wall_s": round(self.wall_s, 3)}
+
+
+class Replayer:
+    """Replays a WorkloadTrace against ``kernel`` (already started).
+
+    ``chaos`` is an optional ``repro.replay.chaos.ChaosPlan``; its
+    ``after_submit`` triggers fire synchronously between submissions and
+    its ``at`` triggers on wall-clock timers started when the run begins.
+    """
+
+    def __init__(self, kernel, *, time_scale: float = 0.0, chaos=None):
+        self.kernel = kernel
+        self.time_scale = float(time_scale)
+        self.chaos = chaos
+
+    def run(self, trace: WorkloadTrace,
+            settle_timeout: float = 180.0) -> ReplayReport:
+        syscalls: Dict[int, Syscall] = {}
+        streamed: Dict[int, List[int]] = {}
+        drainers: List[threading.Thread] = []
+        events = sorted(trace.events, key=lambda e: float(e.get("t", 0.0)))
+        if self.chaos is not None:
+            self.chaos.start(self.kernel)
+        t_start = time.monotonic()
+        t_prev: Optional[float] = None
+        n_submitted = 0
+        try:
+            for ev in events:
+                t = float(ev.get("t", 0.0))
+                if self.time_scale > 0 and t_prev is not None and t > t_prev:
+                    time.sleep(min((t - t_prev) * self.time_scale, 5.0))
+                t_prev = t
+                if ev.get("kind") == "submit":
+                    sc = build_syscall(ev)
+                    eid = int(ev["id"])
+                    syscalls[eid] = sc
+                    if isinstance(sc, LLMSyscall) and sc._stream_q is not None:
+                        streamed[eid] = []
+                        th = threading.Thread(
+                            target=self._drain, args=(sc, streamed[eid]),
+                            daemon=True, name=f"replay-drain-{eid}")
+                        th.start()
+                        drainers.append(th)
+                    self.kernel.submit(sc)
+                    n_submitted += 1
+                    if self.chaos is not None:
+                        self.chaos.fire_after_submit(n_submitted, self.kernel)
+                elif ev.get("kind") == "cancel":
+                    sc = syscalls.get(int(ev.get("ref", -1)))
+                    if sc is not None:
+                        sc.cancel()
+            # settle: wait on the event, NOT join() -- join cancels on
+            # timeout, which would mask a wedged worker as "cancelled"
+            deadline = time.monotonic() + settle_timeout
+            for eid, sc in syscalls.items():
+                if not sc.event.wait(max(0.0, deadline - time.monotonic())):
+                    raise TimeoutError(
+                        f"replay: syscall id={eid} pid={sc.pid} never "
+                        f"settled within {settle_timeout}s -- wedged worker?")
+        finally:
+            if self.chaos is not None:
+                self.chaos.stop()
+        wall_s = time.monotonic() - t_start
+        for th in drainers:
+            th.join(timeout=10.0)
+        results: Dict[int, Dict[str, Any]] = {}
+        for eid, sc in syscalls.items():
+            tokens = None
+            if sc.status == "done" and isinstance(sc.response, dict):
+                raw = sc.response.get("tokens")
+                tokens = list(raw) if raw is not None else None
+            results[eid] = {
+                "status": sc.status,
+                "tokens": tokens,
+                "error": sc.error,
+                "wait_s": sc.waiting_time,
+                "streamed": tuple(streamed[eid]) if eid in streamed else None,
+            }
+        return ReplayReport(results, wall_s, syscalls)
+
+    @staticmethod
+    def _drain(sc: LLMSyscall, into: List[int]) -> None:
+        try:
+            for tok in sc.stream(timeout=300.0):
+                into.append(int(tok))
+        except Exception:  # noqa: BLE001 -- failed streams settle via status
+            pass
+
+
+def register_trace_tenants(kernel, trace: WorkloadTrace, **quota_kw) -> None:
+    """Install every tenant a trace references on a replay kernel with
+    generous default quotas (override via kwargs) so the admission +
+    release paths run without quota rejections changing the workload."""
+    quota_kw.setdefault("max_concurrent", 64)
+    quota_kw.setdefault("token_budget", 10_000_000)
+    quota_kw.setdefault("kv_page_budget", 1_000_000)
+    for tenant in trace.tenants():
+        if tenant != "default":
+            kernel.register_tenant(tenant, **quota_kw)
+
+
+def assert_streams_equal(a, b) -> int:
+    """Assert per-id token-stream bit-equality over the ids completed in
+    BOTH reports (a cancelled syscall may settle as done in one replay and
+    cancelled in the other; determinism is claimed for survivors). Accepts
+    ReplayReports or the ``streams()`` dicts themselves. Returns the number
+    of ids compared."""
+    sa = a.streams() if isinstance(a, ReplayReport) else a
+    sb = b.streams() if isinstance(b, ReplayReport) else b
+    common = sorted(set(sa) & set(sb))
+    for eid in common:
+        if sa[eid] != sb[eid]:
+            raise AssertionError(
+                f"replay divergence at id={eid}: {sa[eid]} != {sb[eid]}")
+    return len(common)

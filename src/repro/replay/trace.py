@@ -1,0 +1,184 @@
+"""Workload traces: the deterministic event log behind record/replay.
+
+A trace is a JSON document -- ``{"meta": {...}, "events": [...]}`` -- whose
+events are either
+
+  ``{"t": <s since record start>, "kind": "submit", "id": <int>,
+     "category": "llm"|"memory"|"storage"|"tool", "agent": ..,
+     "tenant": .., "priority": .., "request": {..}}``
+
+captured at the scheduler front door (``_front_door_admit``, the same site
+the tracer hooks, so rejected inputs are recorded too), or
+
+  ``{"t": .., "kind": "cancel", "ref": <submit id>}``
+
+captured from ``Syscall.cancel``. Event ids are assigned in arrival order
+under the recorder lock, so a replay that submits in id order reproduces
+the pool's admission sequence. Token streams are content-derived (the
+engine seeds its sampler from the prompt, not the pid), which is what makes
+replays bit-identical run over run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+TRACE_VERSION = 1
+
+
+def _jsonable(value: Any):
+    """Best-effort conversion of a request_data value to plain JSON.
+    Returns ``(ok, converted)``; ``ok=False`` marks a field the trace
+    drops (e.g. raw device arrays a replay cannot reconstruct anyway)."""
+    if value is None or isinstance(value, (bool, int, float, str)):
+        return True, value
+    if isinstance(value, (np.integer,)):
+        return True, int(value)
+    if isinstance(value, (np.floating,)):
+        return True, float(value)
+    if isinstance(value, np.ndarray):
+        return True, value.tolist()
+    if isinstance(value, (list, tuple)):
+        out = []
+        for v in value:
+            ok, cv = _jsonable(v)
+            if not ok:
+                return False, None
+            out.append(cv)
+        return True, out
+    if isinstance(value, dict):
+        out = {}
+        for k, v in value.items():
+            ok, cv = _jsonable(v)
+            if not ok:
+                return False, None
+            out[str(k)] = cv
+        return True, out
+    return False, None
+
+
+def sanitize_request(request: Dict[str, Any]) -> Dict[str, Any]:
+    """Convert a syscall's request_data into the trace's JSON shape,
+    dropping fields that cannot round-trip (listed under ``_dropped``)."""
+    out: Dict[str, Any] = {}
+    dropped: List[str] = []
+    for k, v in (request or {}).items():
+        ok, cv = _jsonable(v)
+        if ok:
+            out[k] = cv
+        else:
+            dropped.append(str(k))
+    if dropped:
+        out["_dropped"] = dropped
+    return out
+
+
+class WorkloadTrace:
+    """An immutable recorded workload: ordered events + metadata."""
+
+    def __init__(self, events: Optional[List[Dict[str, Any]]] = None,
+                 meta: Optional[Dict[str, Any]] = None):
+        self.events = list(events or [])
+        self.meta = dict(meta or {})
+        self.meta.setdefault("version", TRACE_VERSION)
+
+    # -- views --------------------------------------------------------------------
+    def submits(self) -> List[Dict[str, Any]]:
+        return [e for e in self.events if e.get("kind") == "submit"]
+
+    def cancels(self) -> List[Dict[str, Any]]:
+        return [e for e in self.events if e.get("kind") == "cancel"]
+
+    def tenants(self) -> List[str]:
+        return sorted({e.get("tenant", "default") for e in self.submits()})
+
+    def duration_s(self) -> float:
+        if not self.events:
+            return 0.0
+        return max(float(e.get("t", 0.0)) for e in self.events)
+
+    # -- (de)serialization -----------------------------------------------------
+    def save(self, path: str) -> int:
+        d = os.path.dirname(os.path.abspath(path))
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"meta": self.meta, "events": self.events}, f, indent=1)
+        os.replace(tmp, path)
+        return len(self.events)
+
+    @classmethod
+    def load(cls, path: str) -> "WorkloadTrace":
+        with open(path) as f:
+            doc = json.load(f)
+        if int(doc.get("meta", {}).get("version", 1)) > TRACE_VERSION:
+            raise ValueError(
+                f"trace version {doc['meta']['version']} > {TRACE_VERSION}")
+        return cls(events=doc.get("events", []), meta=doc.get("meta", {}))
+
+
+class WorkloadRecorder:
+    """Captures every pool input at the scheduler front door. One instance
+    per kernel (booted with ``record=True``); thread-safe -- agent threads
+    submit concurrently and the recorder lock defines arrival order."""
+
+    def __init__(self, meta: Optional[Dict[str, Any]] = None):
+        self._lock = threading.Lock()
+        self._t0 = time.monotonic()
+        self._events: List[Dict[str, Any]] = []
+        self._ids: Dict[int, int] = {}  # syscall pid -> submit event id
+        self._meta = dict(meta or {})
+
+    def _now(self) -> float:
+        return round(time.monotonic() - self._t0, 6)
+
+    def record_submit(self, sc) -> int:
+        """Append a submit event for ``sc`` and arm its cancel hook so a
+        later ``sc.cancel()`` lands in the trace too."""
+        ev = {
+            "t": self._now(),
+            "kind": "submit",
+            "category": getattr(sc, "category", "llm"),
+            "agent": getattr(sc, "agent_name", ""),
+            "tenant": getattr(sc, "tenant_id", "default"),
+            "priority": int(getattr(sc, "priority", 0)),
+            "request": sanitize_request(getattr(sc, "request_data", {})),
+        }
+        with self._lock:
+            eid = len(self._ids)
+            self._ids[sc.pid] = eid
+            ev["id"] = eid
+            self._events.append(ev)
+        prev = getattr(sc, "on_cancel", None)
+
+        def _hook(s, _prev=prev):
+            self.record_cancel(s)
+            if _prev is not None:
+                _prev(s)
+
+        sc.on_cancel = _hook
+        return eid
+
+    def record_cancel(self, sc) -> None:
+        t = self._now()
+        with self._lock:
+            ref = self._ids.get(sc.pid)
+            if ref is None:
+                return
+            self._events.append({"t": t, "kind": "cancel", "ref": ref})
+
+    def trace(self) -> WorkloadTrace:
+        """Snapshot the recording as a WorkloadTrace."""
+        with self._lock:
+            events = list(self._events)
+        meta = dict(self._meta)
+        meta["version"] = TRACE_VERSION
+        meta["recorded_unix"] = time.time()
+        meta["pid"] = os.getpid()
+        return WorkloadTrace(events=events, meta=meta)

@@ -519,7 +519,7 @@ class ServingEngine:
         self.stats = {"decode_steps": 0, "prefills": 0, "tokens": 0,
                       "preemptions": 0, "restores": 0,
                       "prefix_hits": 0, "prefix_saved_tokens": 0,
-                      "prefix_extend_tokens": 0,
+                      "prefix_extend_tokens": 0, "prefix_degraded": 0,
                       "prefill_chunks": 0, "prefill_bursts": 0,
                       "batched_prefill_tokens": 0,
                       # unified serve path: every model forward is counted in
@@ -605,6 +605,33 @@ class ServingEngine:
         pages = getattr(hit, "pages", None)
         if pages is not None:
             pages._store.unpin_pages(pages)
+
+    def _materialize_hit(self, hit, *, seq_id=None):
+        """Rebuild a prefix-cache snapshot as a device cache piece, or
+        None when its backing state is unreadable -- page blobs swept by a
+        sibling process, a corrupt page payload, the storage tier down
+        mid-promote. The poisoned entry is discarded from the cache (so
+        the next lookup cold-misses instead of rediscovering the corpse)
+        and the caller degrades this admission to a cold prefill. The
+        lookup's pin is always dropped, success or not."""
+        try:
+            leaves = [jnp.asarray(x) for x in self._state_leaves(hit)]
+            cache1 = jax.tree.unflatten(self._piece_treedef, leaves)
+        except Exception as e:  # noqa: BLE001
+            self._unpin_hit(hit)
+            self.stats["prefix_degraded"] += 1
+            if self.prefix_cache is not None:
+                try:
+                    self.prefix_cache.discard(hit)
+                except Exception:  # noqa: BLE001 -- already evicted
+                    pass
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "prefix_degraded", PID_ENGINE, self.engine_id,
+                    {"seq_id": seq_id, "err": str(e)[:120]})
+            return None
+        self._unpin_hit(hit)
+        return cache1
 
     # -- jit'd primitives -------------------------------------------------------
     def _build_jits(self):
@@ -743,20 +770,24 @@ class ServingEngine:
             hit = None
             if self.prefix_cache is not None and image_embeds is None:
                 hit = self.prefix_cache.lookup(prompt)
-            if hit is not None and hit.seq_len == P and \
-                    hit.logits is not None:
+            # materialize the cached state up front: a hit whose pages are
+            # GONE (swept by a sibling process, corrupt blob, storage
+            # fault) degrades to hit=None -- the cold-prefill branches
+            # below -- instead of crashing admission
+            cache1 = None
+            exact = (hit is not None and hit.seq_len == P
+                     and hit.logits is not None)
+            if hit is not None and (exact or not self.serial_prefill):
+                cache1 = self._materialize_hit(hit, seq_id=r.get("seq_id"))
+                if cache1 is None:
+                    hit = None
+                    exact = False
+            if exact:
                 # exact hit: restore the cached cache slice + logits, no
                 # prompt tokens left to consume. (A truncated disk
                 # re-hydration carries NO logits -- even a length-exact one
                 # takes the extension path below so its last token
-                # re-prefills and yields them.) finally: a failed
-                # materialization must still drop the lookup's pin
-                try:
-                    cache1 = jax.tree.unflatten(
-                        self._piece_treedef,
-                        [jnp.asarray(x) for x in self._state_leaves(hit)])
-                finally:
-                    self._unpin_hit(hit)
+                # re-prefills and yields them.)
                 self._activate_slot(slot, cache1, jnp.asarray(hit.logits))
                 self.slots[slot].prefilled = 0
                 self.stats["prefix_hits"] += 1
@@ -775,12 +806,6 @@ class ServingEngine:
                 # re-hydration) re-prefills at least its last token -- a
                 # deterministic identical K/V rewrite that yields the
                 # last-position logits activation needs.
-                try:
-                    cache1 = jax.tree.unflatten(
-                        self._piece_treedef,
-                        [jnp.asarray(x) for x in self._state_leaves(hit)])
-                finally:
-                    self._unpin_hit(hit)
                 done = min(int(hit.seq_len), P - 1)
                 self.cache = self._insert_jit(self.cache, cache1, slot)
                 # a truncated entry's residual seq_lens still carries the

@@ -52,7 +52,7 @@ class PrefixCache:
         self._used = 0
         self._lock = threading.Lock()
         self.stats = {"hits": 0, "misses": 0, "inserts": 0, "evictions": 0,
-                      "hit_tokens": 0, "rehydrates": 0}
+                      "hit_tokens": 0, "rehydrates": 0, "discards": 0}
 
     @staticmethod
     def key_of(tokens) -> bytes:
@@ -219,6 +219,24 @@ class PrefixCache:
         rel = getattr(snap, "release", None)
         if rel is not None:
             rel()
+
+    def discard(self, snap) -> bool:
+        """Drop a POISONED entry the engine failed to materialize (page
+        blobs swept by a sibling process, corrupt payload, storage fault):
+        remove it and release its pages so the next lookup cold-misses
+        instead of rediscovering the same corpse. The caller must have
+        dropped its lookup pin already. Safe if the entry was already
+        evicted (returns False)."""
+        key = self.key_of(snap.prompt)
+        with self._lock:
+            entry = self._entries.pop(key, None)
+            self._hit_counts.pop(key, None)
+            if entry is None:
+                return False
+            self._used -= entry.nbytes()
+            self._release_entry(entry)
+            self.stats["discards"] += 1
+            return True
 
     def _evict_one(self, protect: bytes) -> bool:
         """Oldest never-hit entry first; hit-proven entries (the shared
